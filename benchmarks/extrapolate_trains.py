@@ -1,0 +1,80 @@
+"""Two-point depth extrapolation for the train cells whose full-depth
+unrolled compile exceeds the container budget (gemma3/nemotron/kimi/
+zamba2 x train_4k).
+
+Per-layer costs are identical across depth, so every cost C is affine in
+depth: C(L) = A + B*L. Compile unrolled at two reduced depths L1 < L2
+(respecting each arch's group structure), solve for (A, B), extrapolate
+to the full depth. Exact for FLOPs and collective bytes; 'bytes
+accessed' inherits the same affine structure. Emits records with
+extrapolated=True into dryrun_trains_extrap.jsonl (marked ‡ in the
+roofline table).
+
+    PYTHONPATH=src python -m benchmarks.extrapolate_trains
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json
+
+from repro.launch import roofline as rl
+
+# arch -> (L1, L2, full_depth_units, unit="layers", tail_units)
+# zamba2: depth unit = one group (6 mamba + 1 shared invocation);
+# 81 layers = 13 groups + 3-mamba tail counted as 0.5 group.
+PLAN = {
+    "gemma3-27b": dict(l1=12, l2=24, full=62, tail_extra=0.0, group=6),
+    "nemotron-4-340b": dict(l1=8, l2=16, full=96, tail_extra=0.0, group=1),
+    "kimi-k2-1t-a32b": dict(l1=8, l2=16, full=61, tail_extra=0.0, group=1),
+    "zamba2-7b": dict(l1=12, l2=24, full=78, tail_extra=0.5 * 6, group=6),
+}
+
+FIELDS = ("hlo_flops", "hlo_bytes", "collective_bytes")
+
+
+def measure(arch, layers):
+    from repro.launch.dryrun import run_cell
+    return run_cell(arch, "train_4k", verbose=False,
+                    cfg_overrides={"num_layers": layers})
+
+
+def main():
+    out = open("dryrun_trains_extrap.jsonl", "a")
+    for arch, p in PLAN.items():
+        print(f"== {arch}: compiling depth {p['l1']} and {p['l2']}")
+        r1 = measure(arch, p["l1"])
+        r2 = measure(arch, p["l2"])
+        rec = dict(r2)
+        span = p["l2"] - p["l1"]
+        eff_depth = p["full"] + p["tail_extra"]
+        for f in FIELDS:
+            slope = (r2[f] - r1[f]) / span
+            const = r1[f] - slope * p["l1"]
+            rec[f] = const + slope * eff_depth
+        chips = rec["chips"]
+        rec["compute_s"] = rec["hlo_flops"] / (chips * rl.PEAK_FLOPS)
+        rec["memory_s"] = rec["hlo_bytes"] / (chips * rl.HBM_BW)
+        rec["collective_s"] = rec["collective_bytes"] / (chips * rl.ICI_BW)
+        terms = {"compute": rec["compute_s"], "memory": rec["memory_s"],
+                 "collective": rec["collective_s"]}
+        rec["dominant"] = max(terms, key=terms.get)
+        from repro.configs import SHAPES, get_config
+        mf = rl.model_flops(get_config(arch), SHAPES["train_4k"])
+        rec["model_flops"] = mf
+        rec["useful_fraction"] = mf / rec["hlo_flops"]
+        rec["mfu_bound"] = mf / (chips * rl.PEAK_FLOPS *
+                                 max(terms.values()))
+        rec["extrapolated"] = True
+        rec["extrap_from"] = [p["l1"], p["l2"]]
+        out.write(json.dumps(rec) + "\n")
+        out.flush()
+        print(f"   -> c={rec['compute_s']*1e3:.1f}ms "
+              f"m={rec['memory_s']*1e3:.1f}ms "
+              f"coll={rec['collective_s']*1e3:.1f}ms "
+              f"useful={rec['useful_fraction']:.2f} "
+              f"mfu={rec['mfu_bound']:.3f}")
+    out.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Format perf_log.jsonl (hillclimb iterations) into the EXPERIMENTS.md
+§Perf tables.
+
+    PYTHONPATH=src python -m benchmarks.perf_report [--log perf_log.jsonl]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import OrderedDict
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--log", default="perf_log.jsonl")
+    args = ap.parse_args()
+    cells: "OrderedDict[str, list]" = OrderedDict()
+    with open(args.log) as f:
+        for line in f:
+            rec = json.loads(line)
+            cells.setdefault(rec["cell"], []).append(rec)
+
+    for cell, recs in cells.items():
+        # dedupe iterations (keep last occurrence)
+        seen = OrderedDict()
+        for r in recs:
+            seen[r["iter"]] = r
+        recs = list(seen.values())
+        print(f"### {cell}\n")
+        print("| iter | hypothesis | compute ms | memory ms | "
+              "collective ms | dominant | useful | MFU bound | verdict |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        base = None
+        for r in recs:
+            res = r["result"]
+            if not res.get("ok"):
+                print(f"| {r['iter']} | {r['hypothesis'][:60]} | "
+                      f"FAIL: {res.get('error', '')[:40]} | | | | | | |")
+                continue
+            dom_val = {"compute": res["compute_s"],
+                       "memory": res["memory_s"],
+                       "collective": res["collective_s"]}[res["dominant"]]
+            if base is None:
+                base = res
+                verdict = "baseline"
+            else:
+                prev_dom = {"compute": base["compute_s"],
+                            "memory": base["memory_s"],
+                            "collective": base["collective_s"]}[
+                    base["dominant"]]
+                new_on_that_term = {"compute": res["compute_s"],
+                                    "memory": res["memory_s"],
+                                    "collective": res["collective_s"]}[
+                    base["dominant"]]
+                ratio = prev_dom / max(new_on_that_term, 1e-12)
+                verdict = (f"confirmed ({ratio:.1f}x on baseline-dominant "
+                           f"term)" if ratio > 1.05 else
+                           ("refuted" if ratio < 0.95 else "neutral"))
+            print(f"| {r['iter']} | {r['hypothesis'][:70]} | "
+                  f"{res['compute_s']*1e3:.1f} | {res['memory_s']*1e3:.1f} | "
+                  f"{res['collective_s']*1e3:.1f} | {res['dominant']} | "
+                  f"{res['useful_fraction']:.2f} | {res['mfu_bound']:.3f} | "
+                  f"{verdict} |")
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
+the dry-run JSONL records.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report \
+        --scan dryrun_scan.jsonl --roofline dryrun_roofline.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def load(path):
+    recs = []
+    try:
+        with open(path) as f:
+            for line in f:
+                recs.append(json.loads(line))
+    except FileNotFoundError:
+        pass
+    # dedupe on (arch, shape, mesh), keep last
+    out = {}
+    for r in recs:
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(out.values())
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f}T"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}G"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}M"
+    return f"{b/1e3:.0f}K"
+
+
+def dryrun_table(recs):
+    print("| arch | shape | mesh | compile | peak GB/dev | HLO FLOPs "
+          "| collectives |")
+    print("|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        if not r["ok"]:
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL: "
+                  f"{r.get('error', '')[:60]} | | | |")
+            continue
+        coll = ", ".join(f"{k}x{v}" for k, v in
+                         sorted(r.get("collectives", {}).items()))
+        peak = r.get("peak_bytes_per_device", 0) / 1e9
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK "
+              f"{r['compile_s']:.0f}s | {peak:.1f} | "
+              f"{r['hlo_flops']:.2e} | {coll} |")
+
+
+def roofline_table(recs):
+    print("| arch | shape | compute ms | memory ms | collective ms | "
+          "dominant | MODEL/HLO flops | MFU bound |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if not r["ok"] or r["mesh"] != "16x16":
+            continue
+        if r.get("scan_mode"):
+            # † scanned bodies costed once: FLOP-derived columns invalid
+            print(f"| {r['arch']} † | {r['shape']} | — | "
+                  f"{r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} "
+                  f"| {r['dominant']} | — | — |")
+            continue
+        tag = " ‡" if r.get("extrapolated") else ""
+        print(f"| {r['arch']}{tag} | {r['shape']} | "
+              f"{r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} | "
+              f"{r['collective_s']*1e3:.2f} | {r['dominant']} | "
+              f"{r['useful_fraction']:.2f} | {r['mfu_bound']:.3f} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scan", default="dryrun_scan.jsonl")
+    ap.add_argument("--roofline", default="dryrun_roofline.jsonl")
+    args = ap.parse_args()
+    scan = load(args.scan)
+    roof = load(args.roofline)
+    print(f"## Dry-run ({len(scan)} cells)\n")
+    dryrun_table(scan)
+    print(f"\n## Roofline ({len(roof)} single-pod cells, unrolled "
+          "cost accounting)\n")
+    roofline_table(roof)
+
+
+if __name__ == "__main__":
+    main()

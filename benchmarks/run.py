@@ -1,0 +1,199 @@
+"""Benchmark harness — one benchmark per paper table/figure (deliverable d).
+
+  fig1   tau sweep: accuracy + completion time vs local updating frequency
+  fig2_3 IID convergence + completion time to target accuracy, 5 algorithms
+  fig4_5 non-IID (p=0.6 / 0.8) accuracy, 5 algorithms
+  fig6   accuracy vs non-IID level
+  fig7   average waiting time, 5 algorithms
+  kernels  Pallas kernel micro-benches (interpret mode) vs jnp references
+  collective  gossip-vs-allreduce wire bytes for the adapted topology
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6]
+Output: CSV lines  benchmark,metric,value  + a summary table.
+Quick mode (default) shrinks workers/rounds to finish on one CPU core;
+--full uses the paper's 30 workers / full rounds.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from dataclasses import replace
+
+import numpy as np
+
+from repro.configs.base import FedHPConfig
+
+ALGOS = ("fedhp", "dpsgd", "ldsgd", "pens", "adpsgd")
+
+
+SPREAD = 3.0          # class overlap: hard enough that accuracy separates
+
+
+def base_cfg(full: bool) -> FedHPConfig:
+    # paper setup: 30 workers; lr decay 0.993 (CIFAR/IMAGE-100 schedule).
+    # quick mode shrinks the cluster so the suite finishes on one CPU core
+    if full:
+        return FedHPConfig(num_workers=30, rounds=300, tau_init=8,
+                           tau_max=30, lr=0.15, lr_decay=0.993,
+                           batch_size=32, seed=5)
+    return FedHPConfig(num_workers=16, rounds=150, tau_init=8, tau_max=30,
+                       lr=0.15, lr_decay=0.993, batch_size=32, seed=5)
+
+
+def time_budget(full: bool) -> float:
+    """Equal-simulated-time comparison (the paper's metric is completion
+    TIME; rounds are not comparable across algorithms)."""
+    return 300.0 if full else 80.0
+
+
+def emit(rows, bench, metric, value):
+    rows.append((bench, metric, value))
+    print(f"{bench},{metric},{value}")
+
+
+# ---------------------------------------------------------------------------
+
+def bench_fig1(rows, full):
+    """Pre-test (Fig. 1): model quality/completion time vs fixed tau."""
+    from repro.core.experiment import run_algorithm
+    cfg = base_cfg(full)
+    taus = (2, 8, 16, 32) if not full else (2, 9, 18, 27, 36, 45)
+    for tau in taus:
+        c = replace(cfg, tau_init=tau, algorithm="dpsgd")
+        h = run_algorithm("dpsgd", c, non_iid_p=0.4, rounds=cfg.rounds,
+                          spread=SPREAD, time_budget=time_budget(full))
+        emit(rows, "fig1", f"acc@tau={tau}", round(h.final_accuracy, 4))
+        t90 = h.completion_time(0.80)
+        emit(rows, "fig1", f"time_to_80%@tau={tau}",
+             round(t90, 1) if t90 else "never")
+
+
+def _histories(cfg, p, full):
+    from repro.core.experiment import run_algorithm
+    return {a: run_algorithm(a, cfg, non_iid_p=p, rounds=cfg.rounds,
+                             spread=SPREAD, time_budget=time_budget(full))
+            for a in ALGOS}
+
+
+def bench_fig2_3(rows, full):
+    """IID convergence + completion time to target accuracy (Figs. 2-3)."""
+    cfg = base_cfg(full)
+    hs = _histories(cfg, 0.1, full)                # p=0.1 == IID (paper)
+    target = 0.97 * max(h.final_accuracy for h in hs.values())
+    for a, h in hs.items():
+        emit(rows, "fig2", f"final_acc[{a}]", round(h.final_accuracy, 4))
+        t = h.completion_time(target)
+        emit(rows, "fig3", f"time_to_{target:.2f}[{a}]",
+             round(t, 1) if t else "never")
+    t_f, t_d = (hs["fedhp"].completion_time(target),
+                hs["dpsgd"].completion_time(target))
+    if t_f and t_d:
+        emit(rows, "fig3", "fedhp_vs_dpsgd_speedup", round(t_d / t_f, 2))
+    bench_fig7(rows, hs)                            # waiting time: same runs
+
+
+def bench_fig4_5(rows, full):
+    """Non-IID convergence at p=0.6 and p=0.8 (Figs. 4-5)."""
+    cfg = base_cfg(full)
+    for p in ((0.6, 0.8) if full else (0.8,)):
+        hs = _histories(cfg, p, full)
+        for a, h in hs.items():
+            emit(rows, "fig4_5", f"acc@p={p}[{a}]",
+                 round(h.final_accuracy, 4))
+
+
+def bench_fig6(rows, full):
+    """Accuracy vs non-IID level (Fig. 6)."""
+    cfg = base_cfg(full)
+    levels = (0.1, 0.4) if not full else (0.1, 0.2, 0.4, 0.6, 0.8)
+    for p in levels:
+        hs = _histories(cfg, p, full)
+        for a, h in hs.items():
+            emit(rows, "fig6", f"acc@p={p}[{a}]",
+                 round(h.final_accuracy, 4))
+
+
+def bench_fig7(rows, hs):
+    """Average waiting time (Fig. 7) — computed from the fig2 runs."""
+    for a, h in hs.items():
+        emit(rows, "fig7", f"avg_wait[{a}]", round(h.avg_waiting, 3))
+
+
+def bench_kernels(rows, full):
+    """Pallas kernels vs jnp oracle, us/call (interpret mode on CPU —
+    correctness substrate; TPU is the perf target)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    n = 2 ** 17
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    u = jax.random.normal(jax.random.PRNGKey(1), (4, n))
+    w = jnp.full((4,), 0.2)
+
+    def timeit(f):
+        f()                                    # compile
+        t0 = time.perf_counter()
+        for _ in range(3):
+            r = f()
+        jax.tree.leaves(r)[0].block_until_ready()
+        return (time.perf_counter() - t0) / 3 * 1e6
+
+    emit(rows, "kernels", "gossip_mix_us",
+         round(timeit(lambda: ops.gossip_mix(x, u, w))))
+    emit(rows, "kernels", "consensus_dist_us",
+         round(timeit(lambda: ops.consensus_dist(x, u))))
+    emit(rows, "kernels", "quantize_us",
+         round(timeit(lambda: ops.quantize(x))))
+    ref = jnp.tensordot(w, u - x[None], axes=1) + x
+    got = ops.gossip_mix(x, u, w)
+    emit(rows, "kernels", "gossip_max_err",
+         float(jnp.max(jnp.abs(ref - got))))
+
+
+def bench_collective(rows, full):
+    """Adapted-topology gossip vs all-reduce wire bytes (the roofline knob
+    the paper's technique controls; DESIGN.md §3)."""
+    from repro.core import topology as topo
+    n, params = 32, 1.0                       # per-model payload = 1 unit
+    full_t = topo.full_topology(n)
+    ring = topo.ring_topology(n)
+    for name, adj in (("full", full_t), ("ring", ring)):
+        m = len(topo.matching_decomposition(adj))
+        emit(rows, "collective", f"matchings[{name}]", m)
+        emit(rows, "collective", f"gossip_bytes[{name}]", m * params)
+    emit(rows, "collective", "allreduce_bytes",
+         round(2 * (n - 1) / n * params, 3))
+
+
+BENCHES = {
+    "fig1": bench_fig1,
+    "fig2_3": bench_fig2_3,
+    "fig4_5": bench_fig4_5,
+    "fig6": bench_fig6,
+    "kernels": bench_kernels,
+    "collective": bench_collective,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper scale: 30 workers, full rounds")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    rows: list = []
+    print("benchmark,metric,value")
+    todo = [args.only] if args.only else list(BENCHES)
+    t0 = time.time()
+    for name in todo:
+        BENCHES[name](rows, args.full)
+    print(f"\n# {len(rows)} metrics in {time.time() - t0:.0f}s "
+          f"({'full' if args.full else 'quick'} mode)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

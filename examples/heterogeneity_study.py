@@ -1,0 +1,35 @@
+"""Reproduce the paper's heterogeneity story end to end (Sec. V):
+
+sweeps the non-IID level p and reports, per algorithm, accuracy /
+completion time / average waiting time — the compact version of
+Figs. 2-7 — plus a fault-injection leg (two workers die mid-run).
+
+    PYTHONPATH=src python examples/heterogeneity_study.py
+"""
+from repro.configs.base import FedHPConfig
+from repro.core.experiment import run_algorithm
+
+CFG = FedHPConfig(num_workers=10, rounds=100, tau_init=8, tau_max=30,
+                  lr=0.15, lr_decay=0.993, batch_size=32, seed=7)
+BUDGET = 60.0
+
+
+def main():
+    print(f"{'algo':8s} {'p':>4s} {'acc':>6s} {'time(s)':>8s} {'wait':>6s}")
+    for p in (0.1, 0.8):
+        for algo in ("fedhp", "dpsgd", "ldsgd", "pens", "adpsgd"):
+            h = run_algorithm(algo, CFG, non_iid_p=p, spread=3.0,
+                              time_budget=BUDGET)
+            print(f"{algo:8s} {p:4.1f} {h.final_accuracy:6.3f} "
+                  f"{h.records[-1].cumulative_time:8.1f} "
+                  f"{h.avg_waiting:6.2f}")
+
+    print("\nfault tolerance: workers {0, 3} die at round 5 (FedHP)")
+    h = run_algorithm("fedhp", CFG, non_iid_p=0.4, spread=3.0,
+                      time_budget=BUDGET, fail_at={5: [0, 3]})
+    print(f"  survived; final accuracy {h.final_accuracy:.3f} "
+          f"(topology repaired, Sec. DESIGN §6)")
+
+
+if __name__ == "__main__":
+    main()

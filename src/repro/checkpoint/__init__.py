@@ -1,0 +1,6 @@
+"""DFL-aware checkpointing: sharded npz, atomic writes, elastic restore."""
+from repro.checkpoint.store import (  # noqa: F401
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+)

@@ -1,0 +1,133 @@
+"""Checkpoint store.
+
+Design (DESIGN.md §6):
+- Atomic: write to <dir>/tmp.<step>, fsync, rename to <dir>/step_<n>.
+- Sharded: each pytree leaf is one npz entry keyed by its tree path; a
+  worker-replicated DFL state ([W, ...] leading dim) stores per-worker
+  slices so restore can re-shard onto a different worker count.
+- Elastic restore N -> N': worker replicas are re-seeded by cyclic
+  assignment of survivor replicas (any DFL worker's model is a valid
+  model; gossip re-mixes them within a few rounds).
+- Retention: keep the most recent `keep` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def _unflatten_into(template, flat: dict[str, np.ndarray]):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(_path_str(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(directory: str, step: int, state, *,
+                    meta: dict | None = None) -> str:
+    """Atomically write `state` (any pytree) at `step`. Returns final path."""
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f"tmp.{step}")
+    final = os.path.join(directory, f"step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(state)
+    np.savez(os.path.join(tmp, "state.npz"),
+             **{k: v for k, v in flat.items()})
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, **(meta or {})}, f)
+    with open(os.path.join(tmp, "meta.json")) as f:
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def load_checkpoint(directory: str, template, step: int | None = None):
+    """Load newest (or given-step) checkpoint into `template`'s structure.
+
+    Returns (state, meta)."""
+    steps = list_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    step = steps[-1] if step is None else step
+    path = os.path.join(directory, f"step_{step:08d}")
+    with np.load(os.path.join(path, "state.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    return _unflatten_into(template, flat), meta
+
+
+def list_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_"):
+            out.append(int(name.split("_", 1)[1]))
+    return sorted(out)
+
+
+def elastic_reshard(worker_stacked, new_num_workers: int):
+    """Re-seed a [W, ...] worker-replica stack onto W' workers.
+
+    Survivor replicas are assigned cyclically; with W' <= W this is a
+    truncation, with W' > W new workers start from existing replicas
+    (valid under DFL semantics: any worker's model is a model)."""
+    def reshard(leaf):
+        w = leaf.shape[0]
+        idx = np.arange(new_num_workers) % w
+        return leaf[idx]
+    return jax.tree.map(reshard, worker_stacked)
+
+
+class CheckpointManager:
+    """Retention + convenience wrapper used by the train drivers."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+
+    def save(self, step: int, state, meta: dict | None = None) -> str:
+        path = save_checkpoint(self.directory, step, state, meta=meta)
+        steps = list_steps(self.directory)
+        for old in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory,
+                                       f"step_{old:08d}"),
+                          ignore_errors=True)
+        return path
+
+    def restore(self, template, step: int | None = None):
+        return load_checkpoint(self.directory, template, step)
+
+    def latest_step(self) -> int | None:
+        steps = list_steps(self.directory)
+        return steps[-1] if steps else None

@@ -1,0 +1,51 @@
+"""Architecture registry: ``--arch <id>`` -> (CONFIG, smoke_config)."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    FedHPConfig,
+    InputShape,
+    ModelConfig,
+    RunConfig,
+)
+
+_ARCH_MODULES: dict[str, str] = {
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "nemotron-4-340b": "repro.configs.nemotron_4_340b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "xlstm-1.3b": "repro.configs.xlstm_1_3b",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+}
+
+ARCH_IDS: tuple[str, ...] = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).smoke_config()
+
+
+def arch_shape_cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells; skips filtered unless requested."""
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for name, shape in SHAPES.items():
+            if not include_skipped and name in cfg.skip_shapes:
+                continue
+            cells.append((arch, name, shape))
+    return cells

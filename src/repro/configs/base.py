@@ -1,0 +1,190 @@
+"""Config system: model architecture configs + input-shape table.
+
+Every assigned architecture gets a ``src/repro/configs/<id>.py`` exporting
+``CONFIG`` (the exact published config) and ``smoke_config()`` (a reduced
+same-family config for CPU smoke tests). The registry in ``__init__`` maps
+``--arch <id>`` strings to these modules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned; identical set for every LM-family arch)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description shared by the whole model zoo.
+
+    ``family`` selects the model implementation in ``repro.models.registry``:
+      dense | moe | encdec | hybrid | xlstm | vlm
+    """
+
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // num_heads
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0               # expert hidden dim (if != d_ff)
+    num_shared_experts: int = 0
+    # --- attention variants ---
+    sliding_window: int = 0         # 0 -> full attention
+    global_every: int = 0           # gemma3: 1 global layer every N (0 -> all global)
+    rope_theta: float = 10_000.0
+    mrope: bool = False             # qwen2-vl multimodal RoPE
+    # --- activation ---
+    act: str = "silu"               # silu | gelu | relu2 (squared relu)
+    # --- SSM / recurrent ---
+    ssm_state: int = 0              # mamba2 state dim
+    ssm_every: int = 0              # hybrid: attn block every N mamba blocks
+    slstm_every: int = 0            # xlstm: sLSTM block every N mLSTM blocks
+    # --- enc-dec ---
+    encoder_layers: int = 0
+    decoder_layers: int = 0
+    # --- misc ---
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    # --- distribution (per-arch defaults; see DESIGN.md §4) ---
+    worker_axes: tuple[str, ...] = ("pod", "data")   # mesh axes enumerating DFL workers
+    fsdp_axes: tuple[str, ...] = ()                   # axes for FSDP param sharding within worker
+    tp_axes: tuple[str, ...] = ("model",)             # tensor-parallel axes within worker
+    within_worker: str = "tp"       # tp | dp: small archs whose head counts
+    # don't divide the 16-way model axis replicate params within the worker
+    # and split the worker's batch over it instead (DESIGN.md §4)
+    # --- perf knobs (§Perf hillclimb; defaults = paper-faithful baseline) ---
+    serve_seq_shard: bool = False   # sequence parallelism over "model" in
+    # serving for within_worker="dp" archs (dedups 16x replicated compute)
+    moe_shard_groups: int = 0       # shard-local MoE dispatch: route within
+    # G token groups so the pack/unpack never gathers the global batch
+    use_flash_kernel: bool = False  # Pallas flash attention for the
+    # full-sequence paths (TPU target; interpret mode on CPU)
+    remat: str = "block"            # none | block | full
+    skip_shapes: tuple[str, ...] = ()                 # documented skips (DESIGN.md)
+    notes: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + blocks + head)."""
+        d, L = self.d_model, self.num_layers
+        hd = self.resolved_head_dim
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        attn = d * hd * self.num_heads + 2 * d * hd * self.num_kv_heads \
+            + hd * self.num_heads * d
+        if self.family == "xlstm":
+            # mLSTM blocks: qkv + gates + out + up/down proj factor ~ 8 d^2
+            blocks = L * 8 * d * d
+            return emb + blocks
+        if self.num_experts:
+            ff_exp = self.num_experts * 3 * d * (self.moe_d_ff or self.d_ff)
+            router = d * self.num_experts
+            shared = self.num_shared_experts * 3 * d * (self.moe_d_ff or self.d_ff)
+            blocks = L * (attn + ff_exp + router + shared + 2 * d)
+        else:
+            n_ff = 3 if self.act in ("silu", "gelu") else 2  # gated vs plain
+            blocks = L * (attn + n_ff * d * self.d_ff + 2 * d)
+        if self.family == "hybrid":
+            # mamba2 blocks: in_proj(2*d_in) + conv + dt/B/C + out_proj
+            d_in = 2 * d
+            blocks = L * (2 * d * d_in + d_in * (self.ssm_state * 2 + 4) + d_in * d)
+            # plus shared attention block(s)
+            blocks += 2 * (attn + 3 * d * self.d_ff)
+        if self.family == "encdec":
+            # encoder + decoder with cross attention
+            enc = self.encoder_layers * (attn + 2 * d * self.d_ff + 2 * d)
+            dec = self.decoder_layers * (2 * attn + 2 * d * self.d_ff + 3 * d)
+            blocks = enc + dec
+        return emb + blocks
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed experts count)."""
+        if not self.num_experts:
+            return self.param_count()
+        dense_like = dataclasses.replace(
+            self, num_experts=0, experts_per_token=0, num_shared_experts=0)
+        d_ffe = self.moe_d_ff or self.d_ff
+        act_ff = self.num_layers * (
+            (self.experts_per_token + self.num_shared_experts) * 3 * self.d_model * d_ffe
+            + self.d_model * self.num_experts)
+        # dense_like.param_count() includes a dense FFN of d_ff; remove it
+        base = dense_like.param_count() - self.num_layers * 3 * self.d_model * self.d_ff
+        return base + act_ff
+
+    def shape_list(self) -> list[InputShape]:
+        return [s for k, s in SHAPES.items() if k not in self.skip_shapes]
+
+
+# ---------------------------------------------------------------------------
+# FedHP / training run config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FedHPConfig:
+    """Controls the paper's technique (Alg. 1-3)."""
+
+    num_workers: int = 30
+    rounds: int = 200
+    tau_max: int = 50                # cap on local updating frequency
+    tau_init: int = 10
+    lr: float = 0.1
+    lr_decay: float = 0.98
+    batch_size: int = 32
+    beta1: float = 0.5               # EMA for consensus-distance estimates (Eq. 39)
+    beta2: float = 0.1               # EMA for D_max threshold (Eq. 43)
+    epsilon: float = 1.0             # waiting-time budget (Eq. 12)
+    base_topology: str = "full"      # full | ring | erdos:<p>
+    algorithm: str = "fedhp"         # fedhp | dpsgd | adpsgd | ldsgd | pens
+    seed: int = 0
+    # LD-SGD alternation (baseline)
+    ldsgd_i1: int = 4
+    ldsgd_i2: int = 1
+    # PENS neighbor selection (baseline)
+    pens_top_m: int = 3
+    pens_sample: int = 6
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    arch: str = "smollm-360m"
+    shape: str = "train_4k"
+    multi_pod: bool = False
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_dir: str = ""
+    checkpoint_every: int = 50
+    fedhp: FedHPConfig = field(default_factory=FedHPConfig)
+    extra: dict[str, Any] = field(default_factory=dict)

@@ -1,0 +1,181 @@
+"""DFL algorithm strategies: FedHP (ours, Alg. 1-3) and the paper's four
+baselines — D-PSGD, LD-SGD, PENS (synchronous; AD-PSGD is event-driven and
+lives in ``engine.run_adpsgd``).
+
+A strategy decides, per round, the topology A^h and per-worker local
+updating frequencies tau_i^h, using only the measurements reported at the
+end of round h-1 (the coordinator's information set, Alg. 2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.configs.base import FedHPConfig
+from repro.core import topology as topo
+from repro.core.consensus import ConsensusTracker
+from repro.core.controller import AdaptiveController
+
+
+@dataclass
+class RoundPlan:
+    adj: np.ndarray
+    taus: np.ndarray
+    extra_time: np.ndarray | None = None    # per-worker overhead (e.g. PENS)
+
+
+class Strategy:
+    """Base: fixed base topology, fixed tau (what D-PSGD does on a ring)."""
+
+    name = "base"
+
+    def __init__(self, cfg: FedHPConfig, base_adj: np.ndarray):
+        self.cfg = cfg
+        self.base_adj = np.asarray(base_adj, dtype=np.int8)
+        self.n = base_adj.shape[0]
+        self.alive = np.ones(self.n, bool)
+
+    def plan(self, h: int) -> RoundPlan:
+        return RoundPlan(self.base_adj.copy(),
+                         np.full(self.n, self.cfg.tau_init, np.int64))
+
+    def observe(self, h: int, *, adj, mu, beta, edge_dist, update_norms,
+                smooth_l, sigma, loss, cross_loss=None, alive=None) -> None:
+        if alive is not None:
+            self.alive = np.asarray(alive, bool)
+
+
+class DPSGDStrategy(Strategy):
+    """D-PSGD [12]: synchronous, ring topology, identical tau."""
+
+    name = "dpsgd"
+
+    def __init__(self, cfg: FedHPConfig, base_adj: np.ndarray):
+        super().__init__(cfg, base_adj)
+        self.ring = topo.ring_topology(self.n)
+
+    def plan(self, h: int) -> RoundPlan:
+        return RoundPlan(self.ring.copy(),
+                         np.full(self.n, self.cfg.tau_init, np.int64))
+
+
+class LDSGDStrategy(Strategy):
+    """LD-SGD [21]: alternates I1 communication-free local rounds with I2
+    gossip rounds (communication-efficient decentralized SGD)."""
+
+    name = "ldsgd"
+
+    def plan(self, h: int) -> RoundPlan:
+        i1, i2 = self.cfg.ldsgd_i1, self.cfg.ldsgd_i2
+        period = max(i1 + i2, 1)
+        taus = np.full(self.n, self.cfg.tau_init, np.int64)
+        if (h % period) < i1:                        # local-only round
+            return RoundPlan(np.zeros_like(self.base_adj), taus)
+        return RoundPlan(topo.ring_topology(self.n), taus)
+
+
+class PENSStrategy(Strategy):
+    """PENS [22]: performance-based neighbor selection. Each round a worker
+    samples `pens_sample` random peers, evaluates their models on its local
+    data, and gossips with the `pens_top_m` lowest-loss (most similar
+    distribution) peers. Selection costs extra compute+comm time — the
+    overhead the paper measures in Fig. 7."""
+
+    name = "pens"
+
+    def __init__(self, cfg: FedHPConfig, base_adj: np.ndarray):
+        super().__init__(cfg, base_adj)
+        self.rng = np.random.default_rng(cfg.seed + 17)
+        self._cross = None                      # [N,N] loss of model j on data i
+        self._mu = np.full(self.n, 0.1)
+        self._beta = np.full((self.n, self.n), 1.0)
+
+    def plan(self, h: int) -> RoundPlan:
+        taus = np.full(self.n, self.cfg.tau_init, np.int64)
+        m, s = self.cfg.pens_top_m, self.cfg.pens_sample
+        adj = np.zeros((self.n, self.n), np.int8)
+        samples = np.zeros(self.n)
+        for i in range(self.n):
+            cand = self.rng.choice([j for j in range(self.n) if j != i],
+                                   size=min(s, self.n - 1), replace=False)
+            samples[i] = len(cand)
+            if self._cross is None:             # round 0: random top_m
+                pick = cand[:m]
+            else:
+                pick = cand[np.argsort(self._cross[i, cand])[:m]]
+            adj[i, pick] = 1
+        adj = np.maximum(adj, adj.T)            # symmetrize
+        np.fill_diagonal(adj, 0)
+        if not topo.is_connected(adj):          # keep gossip well-defined
+            adj = np.maximum(adj, topo.ring_topology(self.n))
+        # selection overhead: receive + evaluate `s` candidate models
+        extra = samples * (self._mu * 2.0) + \
+            samples * np.median(self._beta[self._beta > 0]) \
+            if (self._beta > 0).any() else samples * self._mu * 2.0
+        return RoundPlan(adj, taus, extra_time=extra)
+
+    def observe(self, h, *, adj, mu, beta, edge_dist, update_norms,
+                smooth_l, sigma, loss, cross_loss=None, alive=None):
+        super().observe(h, adj=adj, mu=mu, beta=beta, edge_dist=edge_dist,
+                        update_norms=update_norms, smooth_l=smooth_l,
+                        sigma=sigma, loss=loss, alive=alive)
+        if cross_loss is not None:
+            self._cross = cross_loss
+        self._mu, self._beta = mu, beta
+
+
+class FedHPStrategy(Strategy):
+    """The paper's adaptive control (Alg. 1-3): joint tau + topology."""
+
+    name = "fedhp"
+
+    def __init__(self, cfg: FedHPConfig, base_adj: np.ndarray):
+        super().__init__(cfg, base_adj)
+        self.controller = AdaptiveController(base_adj, tau_max=cfg.tau_max,
+                                             epsilon=cfg.epsilon)
+        self.tracker = ConsensusTracker(self.n, beta1=cfg.beta1,
+                                        beta2=cfg.beta2)
+        self._mu = None
+        self._beta = None
+        self._f1 = None                         # f(xbar^1), fixed at round 1
+        self._L = 1.0
+        self._sigma = 1.0
+        self.last_decision = None
+
+    def plan(self, h: int) -> RoundPlan:
+        if self._mu is None:                    # round 0: no measurements yet
+            return RoundPlan(self.base_adj.copy(),
+                             np.full(self.n, self.cfg.tau_init, np.int64))
+        d = self.controller.decide(
+            self._mu, self._beta, self.tracker, f1=self._f1,
+            smooth_l=self._L, sigma=self._sigma, eta=self.cfg.lr,
+            rounds=self.cfg.rounds, alive=self.alive)
+        self.last_decision = d
+        return RoundPlan(d.adj, d.taus)
+
+    def observe(self, h, *, adj, mu, beta, edge_dist, update_norms,
+                smooth_l, sigma, loss, cross_loss=None, alive=None):
+        super().observe(h, adj=adj, mu=mu, beta=beta, edge_dist=edge_dist,
+                        update_norms=update_norms, smooth_l=smooth_l,
+                        sigma=sigma, loss=loss, alive=alive)
+        self._mu, self._beta = np.asarray(mu), np.asarray(beta)
+        if self._f1 is None:
+            self._f1 = float(loss)
+        self._L = max(float(smooth_l), 1e-6)
+        self._sigma = max(float(sigma), 1e-6)
+        self.tracker.update(adj, edge_dist, float(np.mean(update_norms)))
+
+
+STRATEGIES = {
+    "fedhp": FedHPStrategy,
+    "dpsgd": DPSGDStrategy,
+    "ldsgd": LDSGDStrategy,
+    "pens": PENSStrategy,
+}
+
+
+def make_strategy(cfg: FedHPConfig, base_adj: np.ndarray) -> Strategy:
+    if cfg.algorithm == "adpsgd":
+        raise ValueError("AD-PSGD is asynchronous; use engine.run_adpsgd")
+    return STRATEGIES[cfg.algorithm](cfg, base_adj)

@@ -1,0 +1,108 @@
+"""Consensus-distance machinery (Sec. II-C, IV-A; Eq. 7-9, 34-39, 43).
+
+The coordinator only ever sees distances measured along topology edges
+(worker i can compute ||x_i - x_j|| only for j in N_i). Unmeasured pairs are
+estimated via the triangle-inequality shortest path (Floyd-Warshall,
+Eq. 37-38) and EMA-smoothed (Eq. 39). The consensus budget D_max follows the
+EMA of the mean local-update norm (Eq. 43, after Kong et al. [35]).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_INF = np.float64(np.inf)
+
+
+def measured_distance_matrix(adj: np.ndarray,
+                             pair_dist: np.ndarray) -> np.ndarray:
+    """Mask a full pairwise-distance matrix down to topology edges.
+
+    In the real system workers report only edge distances; simulation
+    computes the full matrix and this mask models the coordinator's view.
+    """
+    d = np.where(adj > 0, pair_dist, _INF)
+    np.fill_diagonal(d, 0.0)
+    return d
+
+
+def floyd_warshall_estimate(edge_dist: np.ndarray) -> np.ndarray:
+    """Eq. (37)-(38): estimate unmeasured pair distances as the shortest
+    path over measured edges. Vectorized FW: O(N^3) with N<=1024 fine."""
+    d = np.array(edge_dist, dtype=np.float64)
+    n = d.shape[0]
+    for p in range(n):
+        # d_ij <- min(d_ij, d_ip + d_pj)
+        cand = d[:, p:p + 1] + d[p:p + 1, :]
+        np.minimum(d, cand, out=d)
+    return d
+
+
+class ConsensusTracker:
+    """Coordinator-side consensus-distance state across rounds."""
+
+    def __init__(self, num_workers: int, beta1: float = 0.5,
+                 beta2: float = 0.1):
+        self.n = num_workers
+        self.beta1 = float(beta1)   # Eq. (39) EMA for estimated distances
+        self.beta2 = float(beta2)   # Eq. (43) EMA for D_max
+        self.dist = np.zeros((num_workers, num_workers))
+        self.d_max = 0.0
+        self._rounds = 0
+
+    def update(self, adj: np.ndarray, edge_dist: np.ndarray,
+               mean_update_norm: float) -> np.ndarray:
+        """Ingest round-h measurements; return the smoothed full estimate.
+
+        adj: (N,N) round topology. edge_dist: (N,N) with entries valid only
+        where adj==1 (others ignored). mean_update_norm: (1/N) sum ||g_i||.
+        """
+        masked = measured_distance_matrix(adj, edge_dist)
+        est = floyd_warshall_estimate(masked)
+        # Disconnected pairs (shouldn't happen: topology is connected) ->
+        # fall back to previous value.
+        est = np.where(np.isfinite(est), est, self.dist)
+        if self._rounds == 0:
+            smoothed = est
+        else:
+            # Eq. (39): EMA only where unmeasured; measured edges are exact.
+            smoothed = np.where(
+                adj > 0, est,
+                (1 - self.beta1) * self.dist + self.beta1 * est)
+        np.fill_diagonal(smoothed, 0.0)
+        self.dist = smoothed
+        # Eq. (43): D_max^h = (1-beta2) D_max^{h-1} + beta2 * mean ||g||
+        if self._rounds == 0:
+            self.d_max = float(mean_update_norm)
+        else:
+            self.d_max = ((1 - self.beta2) * self.d_max
+                          + self.beta2 * float(mean_update_norm))
+        self._rounds += 1
+        return self.dist
+
+    def average_consensus_bound(self, adj: np.ndarray) -> float:
+        """Eq. (36): E D^{h+1} <= (1/N^2) sum_ij (1 - a_ij) D_ij."""
+        n = self.n
+        off = (1 - adj) * self.dist
+        np.fill_diagonal(off, 0.0)
+        return float(off.sum() / (n * n))
+
+    def satisfies_budget(self, adj: np.ndarray) -> bool:
+        """First constraint of Eq. (42)."""
+        return self.average_consensus_bound(adj) <= self.d_max + 1e-12
+
+
+def consensus_distance_to_mean(stacked_models: np.ndarray) -> np.ndarray:
+    """Eq. (8): D_i = ||xbar - x_i|| for (N, P) stacked flat models.
+
+    Only available in simulation / tests (no PS in production, per paper)."""
+    mean = stacked_models.mean(axis=0, keepdims=True)
+    return np.linalg.norm(stacked_models - mean, axis=1)
+
+
+def pairwise_distances(stacked_models: np.ndarray) -> np.ndarray:
+    """Eq. (7): full pairwise L2 matrix for (N, P) stacked flat models."""
+    sq = (stacked_models ** 2).sum(axis=1)
+    g = stacked_models @ stacked_models.T
+    d2 = np.maximum(sq[:, None] + sq[None, :] - 2 * g, 0.0)
+    np.fill_diagonal(d2, 0.0)
+    return np.sqrt(d2)

@@ -1,0 +1,215 @@
+"""FedHP adaptive control algorithm (Sec. IV-B, Alg. 3).
+
+Jointly determines per-worker local updating frequencies tau_i and the round
+topology A^h: greedily remove the slowest links (search step sqrt(|E|),
+halved on failure) subject to (a) connectivity and (b) the consensus-distance
+budget (Eq. 42), assigning taus that equalize per-worker round time (Eq. 40)
+with the pace set by the theory-optimal tau* (Remark 2).
+
+Deviation noted in DESIGN.md: the greedy objective is the true round
+completion time max_i t_i (the quantity Eq. 12 minimizes) rather than the
+pace-setter's T_l; the two coincide up to the tau>=1 clamp. The paper's "LP"
+has one free variable once the pace-setter is fixed, so the closed-form
+equalization is exact.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import topology as topo
+from repro.core.consensus import ConsensusTracker
+
+
+@dataclass
+class ControlDecision:
+    adj: np.ndarray
+    taus: np.ndarray                  # (N,) int per-worker local frequencies
+    round_time: float                 # max_i t_i (predicted)
+    waiting_time: float               # Eq. (11) predicted average waiting
+    tau_pace: int                     # tau of the pace-setting worker
+    pace_worker: int
+    consensus_bound: float            # Eq. (36) value for this topology
+    matchings: list = field(default_factory=list)
+
+    @property
+    def num_links(self) -> int:
+        return int(self.adj.sum() // 2)
+
+
+def theory_tau_star(n: int, f1: float, smooth_l: float, rounds: int,
+                    eta: float, sigma: float, tau_max: int,
+                    comm_floor: int = 1) -> int:
+    """Remark 2 / Alg. 3 line 2: tau* = sqrt(N f(xbar^1) / (L H eta^2 sigma^2)).
+
+    Guarded: if any estimate is degenerate (early rounds) fall back to
+    tau_max/2. ``comm_floor`` additionally lower-bounds tau so the pace
+    setter's compute amortizes its per-round communication time (the L and
+    sigma plug-in estimates are noisy — Alg. 1 lines 4-5 — and a tau below
+    the floor makes every round communication-dominated, which Eq. 41's
+    objective can never favor; implementation choice recorded in
+    DESIGN.md §8).
+    """
+    lo = max(1, min(comm_floor, tau_max))
+    denom = smooth_l * rounds * (eta ** 2) * (sigma ** 2)
+    if denom <= 0 or f1 <= 0 or not math.isfinite(denom):
+        return max(lo, tau_max // 2)
+    tau = math.sqrt(n * f1 / denom)
+    if not math.isfinite(tau):
+        return max(lo, tau_max // 2)
+    return int(min(max(tau, lo), tau_max))
+
+
+def equalized_taus(adj: np.ndarray, mu: np.ndarray, beta: np.ndarray,
+                   tau_star: int, tau_max: int) -> tuple[np.ndarray, int]:
+    """Eq. (40): assign taus so every worker's t_i matches the pace-setter.
+
+    Pace-setter l = argmin_i (tau* mu_i + max_j beta_ij): the worker that can
+    finish a tau*-step round fastest. Everyone else gets
+    tau_i = floor((t_l - comm_i) / mu_i) clamped to [1, tau_max].
+    Returns (taus, pace_worker).
+    """
+    n = adj.shape[0]
+    comm = link_times(adj, beta)
+    t_full = tau_star * mu + comm
+    pace = int(np.argmin(t_full))
+    t_pace = float(t_full[pace])
+    with np.errstate(divide="ignore", invalid="ignore"):
+        taus = np.floor((t_pace - comm) / np.maximum(mu, 1e-12))
+    taus = np.clip(taus, 1, tau_max).astype(np.int64)
+    taus[pace] = tau_star
+    return taus, pace
+
+
+def link_times(adj: np.ndarray, beta: np.ndarray) -> np.ndarray:
+    """Per-worker communication time: max_{j in N_i} beta_ij (Eq. 10)."""
+    masked = np.where(adj > 0, beta, 0.0)
+    return masked.max(axis=1)
+
+
+def evaluate_topology(adj: np.ndarray, mu: np.ndarray, beta: np.ndarray,
+                      tau_star: int, tau_max: int) -> ControlDecision:
+    taus, pace = equalized_taus(adj, mu, beta, tau_star, tau_max)
+    comm = link_times(adj, beta)
+    t = taus * mu + comm
+    round_time = float(t.max())
+    waiting = float((round_time - t).mean())
+    return ControlDecision(
+        adj=adj, taus=taus, round_time=round_time, waiting_time=waiting,
+        tau_pace=int(taus[pace]), pace_worker=pace, consensus_bound=0.0)
+
+
+class AdaptiveController:
+    """Coordinator-side Alg. 3 driver, stateful across rounds."""
+
+    def __init__(self, base_adj: np.ndarray, tau_max: int = 50,
+                 epsilon: float = float("inf")):
+        topo.validate_topology(base_adj)
+        if not topo.is_connected(base_adj):
+            raise ValueError("base topology must be connected")
+        self.base_adj = np.asarray(base_adj, dtype=np.int8)
+        self.n = base_adj.shape[0]
+        self.tau_max = int(tau_max)
+        self.epsilon = float(epsilon)
+
+    # -- Alg. 3 -------------------------------------------------------------
+    def decide(self, mu: np.ndarray, beta: np.ndarray,
+               tracker: ConsensusTracker, *, f1: float, smooth_l: float,
+               sigma: float, eta: float, rounds: int,
+               alive: np.ndarray | None = None) -> ControlDecision:
+        """One coordinator decision (Alg. 3).
+
+        mu: (N,) per-iteration computing times. beta: (N,N) link times.
+        alive: optional bool mask; dead workers' links are stripped first
+        (fault tolerance: vertex removal + topology repair).
+        """
+        mu = np.asarray(mu, dtype=np.float64)
+        beta = np.asarray(beta, dtype=np.float64)
+        adj = np.array(self.base_adj, copy=True)
+        if alive is not None:
+            adj = prune_dead(adj, np.asarray(alive, dtype=bool))
+        # comm floor: the pace setter should compute at least as long as it
+        # communicates, else rounds are wire-bound regardless of topology
+        link = beta[adj > 0]
+        comm_floor = int(math.ceil(
+            float(np.median(link)) / max(float(mu.min()), 1e-9))) \
+            if link.size else 1
+        tau_star = theory_tau_star(self.n, f1, smooth_l, rounds, eta, sigma,
+                                   self.tau_max, comm_floor=comm_floor)
+        best = evaluate_topology(adj, mu, beta, tau_star, self.tau_max)
+        best.consensus_bound = tracker.average_consensus_bound(adj)
+
+        s = self.n
+        flag = True
+        while True:
+            num_links = int(best.adj.sum() // 2)
+            if flag:
+                s = max(1, int(math.isqrt(max(num_links, 1))))
+            # select the s slowest links removable under Eq. (42)
+            cand = self._removal_candidates(best.adj, beta, tracker, s)
+            improved = False
+            if cand:
+                trial = np.array(best.adj, copy=True)
+                for (i, j) in cand:
+                    trial[i, j] = trial[j, i] = 0
+                    if not topo.is_connected(trial):
+                        trial[i, j] = trial[j, i] = 1
+                        continue
+                    if not tracker.satisfies_budget(trial):
+                        trial[i, j] = trial[j, i] = 1
+                        continue
+                d = evaluate_topology(trial, mu, beta, tau_star, self.tau_max)
+                if d.round_time < best.round_time and \
+                        d.waiting_time <= self.epsilon:
+                    d.consensus_bound = tracker.average_consensus_bound(d.adj)
+                    best = d
+                    improved = True
+            if improved:
+                flag = True
+            else:
+                if s == 1:
+                    break
+                s = max(1, s // 2)
+                flag = False
+
+        best.matchings = topo.matching_decomposition(best.adj)
+        return best
+
+    def _removal_candidates(self, adj: np.ndarray, beta: np.ndarray,
+                            tracker: ConsensusTracker,
+                            s: int) -> list[tuple[int, int]]:
+        """Alg. 3 line 9: s slowest links whose individual removal keeps the
+        consensus-distance budget (the joint check happens during removal)."""
+        n = adj.shape[0]
+        links = [(beta[i, j], i, j)
+                 for i in range(n) for j in range(i + 1, n) if adj[i, j]]
+        links.sort(key=lambda x: -x[0])
+        out: list[tuple[int, int]] = []
+        trial = np.array(adj, copy=True)
+        for (_, i, j) in links:
+            if len(out) >= s:
+                break
+            trial[i, j] = trial[j, i] = 0
+            if tracker.satisfies_budget(trial):
+                out.append((i, j))
+            trial[i, j] = trial[j, i] = 1
+        return out
+
+
+def prune_dead(adj: np.ndarray, alive: np.ndarray) -> np.ndarray:
+    """Vertex removal for failed workers; keeps the survivors connected by
+    chaining them in a ring if the prune disconnected the graph."""
+    adj = np.array(adj, copy=True)
+    dead = np.nonzero(~alive)[0]
+    adj[dead, :] = 0
+    adj[:, dead] = 0
+    live = np.nonzero(alive)[0]
+    if len(live) > 1:
+        sub = adj[np.ix_(live, live)]
+        if not topo.is_connected(sub):
+            for a, b in zip(live, np.roll(live, -1)):
+                if a != b:
+                    adj[a, b] = adj[b, a] = 1
+    return adj

@@ -1,0 +1,355 @@
+"""DFL execution engines over the simulated heterogeneous cluster.
+
+``run_dfl``  — synchronous round engine (FedHP / D-PSGD / LD-SGD / PENS):
+per round, the strategy plans (A^h, tau^h); workers run tau_i local SGD
+steps (vmapped across the worker dimension, masked to tau_i — the same
+masked-trip-count semantics the TPU runtime uses); the simulated clock
+charges t_i = tau_i mu_i + max_j beta_ij (Eq. 10); gossip mixes with the
+uniform matrix (Eq. 5-6); measurements (consensus distances on edges,
+update norms, L/sigma estimates — Alg. 1 lines 4-5) feed back to the
+strategy.
+
+``run_adpsgd`` — event-driven asynchronous engine (AD-PSGD [23]): workers
+run independently; on finishing tau local steps a worker averages models
+pairwise with a random neighbor; the event clock captures staleness and
+the near-zero waiting time the paper reports (Fig. 7).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedHPConfig
+from repro.core import topology as topo
+from repro.core.algorithms import Strategy
+from repro.core.consensus import pairwise_distances
+from repro.data.synthetic import Dataset
+from repro.simulation.cluster import SimCluster
+from repro.simulation.model import accuracy, classifier_loss, init_classifier
+
+
+@dataclass
+class RoundRecord:
+    round: int
+    round_time: float
+    waiting_time: float
+    accuracy: float
+    loss: float
+    mean_tau: float
+    num_links: int
+    consensus: float
+    cumulative_time: float
+
+
+@dataclass
+class History:
+    records: list[RoundRecord] = field(default_factory=list)
+
+    def completion_time(self, target_acc: float) -> float | None:
+        """Paper metric: total time until the average model reaches
+        `target_acc` (None if never)."""
+        for r in self.records:
+            if r.accuracy >= target_acc:
+                return r.cumulative_time
+        return None
+
+    @property
+    def final_accuracy(self) -> float:
+        return self.records[-1].accuracy if self.records else 0.0
+
+    @property
+    def avg_waiting(self) -> float:
+        return float(np.mean([r.waiting_time for r in self.records])) \
+            if self.records else 0.0
+
+    def as_arrays(self) -> dict[str, np.ndarray]:
+        keys = ("round", "round_time", "waiting_time", "accuracy", "loss",
+                "mean_tau", "num_links", "consensus", "cumulative_time")
+        return {k: np.array([getattr(r, k) for r in self.records])
+                for k in keys}
+
+
+# ---------------------------------------------------------------------------
+# jit'd worker math (vmapped over the worker dimension)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("tau_max",))
+def _local_train(stacked, batches_x, batches_y, taus, lr, tau_max: int):
+    """tau_i masked local SGD. stacked: [W,...] pytree; batches: [W,T,B,*]."""
+
+    def one_worker(params, bx, by, tau):
+        def step(p, xs):
+            k, (x, y) = xs
+            g = jax.grad(classifier_loss)(p, {"x": x, "y": y})
+            mask = (k < tau).astype(jnp.float32)
+            return jax.tree.map(lambda w, gg: w - lr * mask * gg, p, g), None
+
+        ks = jnp.arange(tau_max)
+        out, _ = jax.lax.scan(step, params, (ks, (bx, by)))
+        return out
+
+    return jax.vmap(one_worker)(stacked, batches_x, batches_y, taus)
+
+
+@jax.jit
+def _gossip(stacked, mix):
+    """x_i <- sum_j mix_ij x_j (Eq. 5 in matrix form)."""
+    return jax.tree.map(
+        lambda leaf: jnp.tensordot(mix, leaf, axes=1).astype(leaf.dtype),
+        stacked)
+
+
+@jax.jit
+def _flatten_workers(stacked):
+    """[W, ...] pytree -> [W, P] matrix."""
+    leaves = jax.tree.leaves(stacked)
+    return jnp.concatenate(
+        [l.reshape(l.shape[0], -1).astype(jnp.float32) for l in leaves],
+        axis=1)
+
+
+@jax.jit
+def _measure(stacked, prev_stacked, eval_x, eval_y, probe_x, probe_y):
+    """Per-worker loss/acc + Alg. 1 estimates (L_i, sigma_i) + update norms."""
+
+    def per_worker(p, q):
+        loss_p = classifier_loss(p, {"x": eval_x, "y": eval_y})
+        acc = accuracy(p, eval_x, eval_y)
+        g_p = jax.grad(classifier_loss)(p, {"x": eval_x, "y": eval_y})
+        g_q = jax.grad(classifier_loss)(q, {"x": eval_x, "y": eval_y})
+        num = jnp.sqrt(sum(jnp.sum(jnp.square(a - b)) for a, b in
+                           zip(jax.tree.leaves(g_p), jax.tree.leaves(g_q))))
+        den = jnp.sqrt(sum(jnp.sum(jnp.square(a - b)) for a, b in
+                           zip(jax.tree.leaves(p), jax.tree.leaves(q))))
+        smooth_l = num / jnp.maximum(den, 1e-8)
+        # sigma_i: variance of a small-probe gradient vs full-batch gradient
+        g_s = jax.grad(classifier_loss)(p, {"x": probe_x, "y": probe_y})
+        sig2 = sum(jnp.sum(jnp.square(a - b)) for a, b in
+                   zip(jax.tree.leaves(g_s), jax.tree.leaves(g_p)))
+        upd = den
+        return loss_p, acc, smooth_l, jnp.sqrt(sig2), upd
+
+    return jax.vmap(per_worker)(stacked, prev_stacked)
+
+
+@jax.jit
+def _cross_loss_matrix(stacked, xs, ys):
+    """[N,N] loss of worker j's model on worker i's local sample batch."""
+
+    def on_data(x, y):
+        return jax.vmap(lambda p: classifier_loss(p, {"x": x, "y": y}))(
+            stacked)
+
+    return jax.vmap(on_data)(xs, ys)          # [data_i, model_j]
+
+
+def _mean_accuracy(stacked, test_x, test_y) -> tuple[float, float]:
+    accs = jax.vmap(lambda p: accuracy(p, test_x, test_y))(stacked)
+    losses = jax.vmap(
+        lambda p: classifier_loss(p, {"x": test_x, "y": test_y}))(stacked)
+    return float(jnp.mean(accs)), float(jnp.mean(losses))
+
+
+# ---------------------------------------------------------------------------
+# Synchronous engine
+# ---------------------------------------------------------------------------
+
+def _draw_batches(rng, data: Dataset, shards, taus_cap: int, batch: int):
+    """[W, tau_max, B] index draws from each worker's shard."""
+    n = len(shards)
+    bx = np.zeros((n, taus_cap, batch, data.x.shape[-1]), np.float32)
+    by = np.zeros((n, taus_cap, batch), np.int32)
+    for w, shard in enumerate(shards):
+        ix = rng.integers(0, len(shard), (taus_cap, batch))
+        sel = shard[ix]
+        bx[w] = data.x[sel]
+        by[w] = data.y[sel]
+    return jnp.asarray(bx), jnp.asarray(by)
+
+
+def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
+            cfg: FedHPConfig, strategy: Strategy, *, rounds: int | None = None,
+            hidden: int = 64, eval_subset: int = 512,
+            mixing: str = "uniform",
+            time_budget: float | None = None) -> History:
+    """time_budget: stop once the simulated clock passes it — the paper's
+    equal-wall-time comparison (completion time is the metric, Fig. 3)."""
+    rounds = rounds or cfg.rounds
+    n = cfg.num_workers
+    rng = np.random.default_rng(cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+    p0 = init_classifier(key, data.x.shape[-1], hidden, data.num_classes)
+    stacked = jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape), p0)
+
+    tx = jnp.asarray(test_x[:eval_subset])
+    ty = jnp.asarray(test_y[:eval_subset])
+    # fixed per-worker eval batches for the Alg. 1 estimates
+    ex = np.stack([data.x[s[rng.integers(0, len(s), 256)]] for s in shards])
+    ey = np.stack([data.y[s[rng.integers(0, len(s), 256)]] for s in shards])
+    px, py = ex[:, :32], ey[:, :32]
+    ex, ey, px, py = map(jnp.asarray, (ex, ey, px, py))
+
+    hist = History()
+    clock = 0.0
+    needs_cross = strategy.name == "pens"
+    for h in range(rounds):
+        alive = cluster.advance_round(h)
+        plan = strategy.plan(h)
+        adj = plan.adj.copy()
+        adj[~alive, :] = 0
+        adj[:, ~alive] = 0
+        taus = np.where(alive, np.clip(plan.taus, 1, cfg.tau_max), 0)
+
+        mu = cluster.sample_mu()
+        beta = cluster.sample_beta()
+        lr = cfg.lr * (cfg.lr_decay ** h)
+
+        # --- local updating (Eq. 3), masked to tau_i ---
+        tau_cap = int(max(taus.max(), 1))
+        bx, by = _draw_batches(rng, data, shards, tau_cap, cfg.batch_size)
+        prev = stacked
+        stacked = _local_train(stacked, bx, by, jnp.asarray(taus),
+                               jnp.float32(lr), tau_cap)
+
+        # --- clock (Eq. 10-11) ---
+        comm = np.where(adj.sum(1) > 0,
+                        np.where(adj > 0, beta, 0.0).max(1), 0.0)
+        t_i = taus * mu + comm
+        if plan.extra_time is not None:
+            t_i = t_i + plan.extra_time * alive
+        t_round = float(t_i[alive].max()) if alive.any() else 0.0
+        waiting = float((t_round - t_i[alive]).mean()) if alive.any() else 0.0
+        clock += t_round
+
+        # --- gossip aggregation (Eq. 5-6) ---
+        if adj.sum() > 0:
+            mixfn = (topo.mixing_matrix_metropolis if mixing == "metropolis"
+                     else topo.mixing_matrix_uniform)
+            mix = mixfn(adj)
+            stacked = _gossip(stacked, jnp.asarray(mix, jnp.float32))
+
+        # --- measurements (Alg. 1 lines 4-5, 9-10) ---
+        losses, accs, ls, sigs, upds = _measure(stacked, prev, ex, ey, px, py)
+        flat = np.asarray(_flatten_workers(stacked))
+        pair = pairwise_distances(flat)
+        cross = None
+        if needs_cross:
+            cross = np.asarray(_cross_loss_matrix(stacked, ex[:, :64],
+                                                  ey[:, :64]))
+        strategy.observe(
+            h, adj=adj, mu=mu, beta=beta, edge_dist=pair,
+            update_norms=np.asarray(upds)[alive] if alive.any() else [0.0],
+            smooth_l=float(np.median(np.asarray(ls)[alive])),
+            sigma=float(np.median(np.asarray(sigs)[alive])),
+            loss=float(np.mean(np.asarray(losses)[alive])),
+            cross_loss=cross, alive=alive)
+
+        mean_acc, mean_loss = _mean_accuracy(stacked, tx, ty)
+        d_bar = float(np.linalg.norm(flat - flat.mean(0), axis=1).mean())
+        hist.records.append(RoundRecord(
+            round=h, round_time=t_round, waiting_time=waiting,
+            accuracy=mean_acc, loss=mean_loss,
+            mean_tau=float(taus[alive].mean()) if alive.any() else 0.0,
+            num_links=int(adj.sum() // 2), consensus=d_bar,
+            cumulative_time=clock))
+        if time_budget is not None and clock >= time_budget:
+            break
+    return hist
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous engine (AD-PSGD baseline)
+# ---------------------------------------------------------------------------
+
+def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
+               cfg: FedHPConfig, *, rounds: int | None = None,
+               hidden: int = 64, eval_subset: int = 512,
+               time_budget: float | None = None) -> History:
+    """Event-driven AD-PSGD: random pairwise averaging on completion.
+
+    One "round" = N worker-finish events (≈ one synchronous round of work),
+    at which point metrics are sampled — comparable x-axes with run_dfl."""
+    rounds = rounds or cfg.rounds
+    n = cfg.num_workers
+    rng = np.random.default_rng(cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+    p0 = init_classifier(key, data.x.shape[-1], hidden, data.num_classes)
+    stacked = jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape), p0)
+    ring = topo.ring_topology(n)
+    neighbors = [np.nonzero(ring[i])[0] for i in range(n)]
+
+    tx = jnp.asarray(test_x[:eval_subset])
+    ty = jnp.asarray(test_y[:eval_subset])
+
+    tau = cfg.tau_init
+    # event queue: (finish_time, worker)
+    mu0 = cluster.sample_mu()
+    q = [(tau * mu0[i], i) for i in range(n)]
+    heapq.heapify(q)
+    hist = History()
+    events = 0
+    clock = 0.0
+    lr = cfg.lr
+
+    @partial(jax.jit, static_argnames=("tau",))
+    def train_delta(params, bx, by, lr, tau: int):
+        """Local updates computed from a SNAPSHOT; returns the delta.
+
+        AD-PSGD's defining staleness: while a worker computes, its live
+        model may be averaged by neighbors; the (stale) delta is applied
+        to whatever the live model has become [23]."""
+        def step(p, xs):
+            x, y = xs
+            g = jax.grad(classifier_loss)(p, {"x": x, "y": y})
+            return jax.tree.map(lambda w, gg: w - lr * gg, p, g), None
+        out, _ = jax.lax.scan(step, params, (bx, by))
+        return jax.tree.map(lambda a, b: a - b, out, params)
+
+    @jax.jit
+    def apply_and_average(stacked, delta, i, j):
+        pi = jax.tree.map(lambda l, d: l[i] + d, stacked, delta)
+        pj = jax.tree.map(lambda l: l[j], stacked)
+        avg = jax.tree.map(lambda a, b: 0.5 * (a + b), pi, pj)
+        return jax.tree.map(
+            lambda l, a: l.at[i].set(a).at[j].set(a), stacked, avg)
+
+    # per-worker snapshot taken when its computation started
+    snapshots = [jax.tree.map(lambda l: l[i], stacked) for i in range(n)]
+    while hist.records.__len__() < rounds:
+        t_now, i = heapq.heappop(q)
+        clock = t_now
+        shard = shards[i]
+        ix = rng.integers(0, len(shard), (tau, cfg.batch_size))
+        bx = jnp.asarray(data.x[shard[ix]])
+        by = jnp.asarray(data.y[shard[ix]])
+        # delta from the stale snapshot, applied to the live model, then
+        # atomic pairwise averaging with a random neighbor
+        delta = train_delta(snapshots[i], bx, by, jnp.float32(lr), tau)
+        j = int(rng.choice(neighbors[i]))
+        stacked = apply_and_average(stacked, delta, jnp.int32(i),
+                                    jnp.int32(j))
+        snapshots[i] = jax.tree.map(lambda l: l[i], stacked)
+
+        mu = cluster.sample_mu()[i]
+        beta = cluster.sample_beta()[i, j]
+        heapq.heappush(q, (t_now + tau * mu + beta, i))
+        events += 1
+        if events % n == 0:
+            lr *= cfg.lr_decay
+            mean_acc, mean_loss = _mean_accuracy(stacked, tx, ty)
+            flat = np.asarray(_flatten_workers(stacked))
+            d_bar = float(np.linalg.norm(flat - flat.mean(0), axis=1).mean())
+            hist.records.append(RoundRecord(
+                round=len(hist.records), round_time=0.0,
+                waiting_time=0.0,          # async: no synchronization barrier
+                accuracy=mean_acc, loss=mean_loss, mean_tau=float(tau),
+                num_links=int(ring.sum() // 2), consensus=d_bar,
+                cumulative_time=clock))
+            if time_budget is not None and clock >= time_budget:
+                break
+    return hist

@@ -1,0 +1,59 @@
+"""Experiment harness wiring data + cluster + strategy — shared by tests,
+benchmarks (one per paper figure), and examples."""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import numpy as np
+
+from repro.configs.base import FedHPConfig
+from repro.core import engine
+from repro.core.algorithms import make_strategy
+from repro.core.topology import make_base_topology
+from repro.data.partition import pskew_partition
+from repro.data.synthetic import make_classification_data
+from repro.simulation.cluster import SimCluster
+
+# MLP stand-in model size (bits) for link-time simulation: ~7k params f32
+MODEL_BITS_DEFAULT = 7.3e3 * 32
+
+
+def setup_experiment(cfg: FedHPConfig, *, non_iid_p: float = 0.1,
+                     num_samples: int = 6000, dim: int = 32,
+                     num_classes: int = 10, spread: float = 1.0,
+                     fail_at: dict | None = None):
+    """Build (data, test split, shards, cluster) for one experiment."""
+    data = make_classification_data(num_samples=num_samples, dim=dim,
+                                    num_classes=num_classes, spread=spread,
+                                    seed=cfg.seed)
+    n_test = max(num_samples // 6, 256)
+    test_x, test_y = data.x[:n_test], data.y[:n_test]
+    train = replace_dataset(data, data.x[n_test:], data.y[n_test:])
+    rng = np.random.default_rng(cfg.seed + 1)
+    shards = pskew_partition(train.y, cfg.num_workers, non_iid_p, rng)
+    cluster = SimCluster(cfg.num_workers, model_bits=MODEL_BITS_DEFAULT,
+                         seed=cfg.seed, fail_at=fail_at or {})
+    return train, test_x, test_y, shards, cluster
+
+
+def replace_dataset(data, x, y):
+    from repro.data.synthetic import Dataset
+    return Dataset(x, y, data.num_classes)
+
+
+def run_algorithm(algorithm: str, cfg: FedHPConfig, *, non_iid_p: float = 0.1,
+                  rounds: int | None = None, mixing: str = "uniform",
+                  fail_at: dict | None = None, spread: float = 1.0,
+                  time_budget: float | None = None) -> engine.History:
+    """Run one (algorithm, non-IID level) cell and return its History."""
+    cfg = replace(cfg, algorithm=algorithm)
+    train, tx, ty, shards, cluster = setup_experiment(
+        cfg, non_iid_p=non_iid_p, fail_at=fail_at, spread=spread)
+    if algorithm == "adpsgd":
+        return engine.run_adpsgd(train, tx, ty, shards, cluster, cfg,
+                                 rounds=rounds, time_budget=time_budget)
+    base = make_base_topology(cfg.num_workers, cfg.base_topology, cfg.seed)
+    strategy = make_strategy(cfg, base)
+    return engine.run_dfl(train, tx, ty, shards, cluster, cfg, strategy,
+                          rounds=rounds, mixing=mixing,
+                          time_budget=time_budget)

@@ -1,0 +1,191 @@
+"""P2P network topology: adjacency/Laplacian algebra, connectivity,
+mixing matrices, and matching decomposition (Sec. II-A, Eq. 1, 5-6).
+
+Everything here is host-side coordinator math (numpy), deliberately
+outside jit: topologies are round-static control inputs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Construction
+# ---------------------------------------------------------------------------
+
+def full_topology(n: int) -> np.ndarray:
+    a = np.ones((n, n), dtype=np.int8) - np.eye(n, dtype=np.int8)
+    return a
+
+
+def ring_topology(n: int) -> np.ndarray:
+    a = np.zeros((n, n), dtype=np.int8)
+    if n == 1:
+        return a
+    idx = np.arange(n)
+    a[idx, (idx + 1) % n] = 1
+    a[idx, (idx - 1) % n] = 1
+    if n == 2:
+        a = np.clip(a, 0, 1)
+    return a
+
+
+def erdos_topology(n: int, p: float, rng: np.random.Generator) -> np.ndarray:
+    """Erdős–Rényi base topology, retried until connected."""
+    for _ in range(1000):
+        u = rng.random((n, n))
+        a = ((u + u.T) / 2 < p).astype(np.int8)
+        np.fill_diagonal(a, 0)
+        if is_connected(a):
+            return a
+    # fall back: ring + random chords
+    a = ring_topology(n)
+    return a
+
+
+def make_base_topology(n: int, spec: str, seed: int = 0) -> np.ndarray:
+    """Parse a base-topology spec string: full | ring | erdos:<p>."""
+    if spec == "full":
+        return full_topology(n)
+    if spec == "ring":
+        return ring_topology(n)
+    if spec.startswith("erdos:"):
+        p = float(spec.split(":", 1)[1])
+        return erdos_topology(n, p, np.random.default_rng(seed))
+    raise ValueError(f"unknown topology spec {spec!r}")
+
+
+# ---------------------------------------------------------------------------
+# Spectral / connectivity (Eq. 1; Assumption 4)
+# ---------------------------------------------------------------------------
+
+def laplacian(adj: np.ndarray) -> np.ndarray:
+    adj = np.asarray(adj, dtype=np.float64)
+    return np.diag(adj.sum(axis=1)) - adj
+
+
+def algebraic_connectivity(adj: np.ndarray) -> float:
+    """lambda_2 of the Laplacian; > 0 iff the graph is connected."""
+    n = adj.shape[0]
+    if n == 1:
+        return 1.0  # single vertex: trivially "connected"
+    vals = np.linalg.eigvalsh(laplacian(adj))
+    return float(vals[1])
+
+
+def is_connected(adj: np.ndarray) -> bool:
+    """BFS connectivity (cheaper and exact vs eigenvalue tolerance)."""
+    n = adj.shape[0]
+    if n <= 1:
+        return True
+    seen = np.zeros(n, dtype=bool)
+    stack = [0]
+    seen[0] = True
+    while stack:
+        i = stack.pop()
+        for j in np.nonzero(adj[i])[0]:
+            if not seen[j]:
+                seen[j] = True
+                stack.append(int(j))
+    return bool(seen.all())
+
+
+# ---------------------------------------------------------------------------
+# Mixing matrices (Eq. 5-6; Assumption 4)
+# ---------------------------------------------------------------------------
+
+def mixing_matrix_uniform(adj: np.ndarray) -> np.ndarray:
+    """Paper's Eq. (6): w_ij = 1/(u_max+1); symmetric doubly stochastic."""
+    adj = np.asarray(adj, dtype=np.float64)
+    n = adj.shape[0]
+    if n == 1:
+        return np.ones((1, 1))
+    u_max = adj.sum(axis=1).max()
+    w = adj / (u_max + 1.0)
+    np.fill_diagonal(w, 0.0)
+    w += np.diag(1.0 - w.sum(axis=1))
+    return w
+
+
+def mixing_matrix_metropolis(adj: np.ndarray) -> np.ndarray:
+    """Metropolis–Hastings weights: w_ij = 1/(1+max(d_i,d_j)).
+
+    Beyond-paper option: strictly better spectral gap than Eq. (6) on
+    irregular graphs while remaining symmetric doubly stochastic and
+    requiring only neighbor-degree knowledge.
+    """
+    adj = np.asarray(adj, dtype=np.float64)
+    n = adj.shape[0]
+    if n == 1:
+        return np.ones((1, 1))
+    deg = adj.sum(axis=1)
+    w = np.zeros_like(adj)
+    for i in range(n):
+        for j in np.nonzero(adj[i])[0]:
+            w[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+    w += np.diag(1.0 - w.sum(axis=1))
+    return w
+
+
+def spectral_gap_rho(w: np.ndarray) -> float:
+    """rho = max(|lambda_2|, |lambda_N|) of the mixing matrix (Assumption 4)."""
+    n = w.shape[0]
+    if n == 1:
+        return 0.0
+    vals = np.sort(np.linalg.eigvalsh((w + w.T) / 2))
+    return float(max(abs(vals[0]), abs(vals[-2])))
+
+
+# ---------------------------------------------------------------------------
+# Matching decomposition (TPU gossip: one collective-permute per matching)
+# ---------------------------------------------------------------------------
+
+def matching_decomposition(adj: np.ndarray) -> list[list[tuple[int, int]]]:
+    """Greedy edge-coloring of the topology into matchings.
+
+    Each matching is a set of vertex-disjoint undirected edges; on TPU a
+    matching executes as ONE `lax.ppermute` whose permutation swaps each
+    edge's endpoints (an involution). Vizing guarantees <= Delta+1 matchings;
+    the greedy bound is 2*Delta-1, in practice ~Delta for our graphs.
+    """
+    n = adj.shape[0]
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n) if adj[i, j]]
+    # sort by degree-sum so high-degree vertices get colored first
+    deg = adj.sum(axis=1)
+    edges.sort(key=lambda e: -(deg[e[0]] + deg[e[1]]))
+    matchings: list[list[tuple[int, int]]] = []
+    used: list[set[int]] = []
+    for (i, j) in edges:
+        for m, u in zip(matchings, used):
+            if i not in u and j not in u:
+                m.append((i, j))
+                u.update((i, j))
+                break
+        else:
+            matchings.append([(i, j)])
+            used.append({i, j})
+    return matchings
+
+
+def matchings_to_perms(matchings: list[list[tuple[int, int]]],
+                       n: int) -> np.ndarray:
+    """(M, N) permutation table: perm[m, i] = partner of i in matching m
+    (or i itself if unmatched). Each row is an involution."""
+    perms = np.tile(np.arange(n), (len(matchings), 1))
+    for m, match in enumerate(matchings):
+        for (i, j) in match:
+            perms[m, i] = j
+            perms[m, j] = i
+    return perms
+
+
+def validate_topology(adj: np.ndarray) -> None:
+    adj = np.asarray(adj)
+    if adj.ndim != 2 or adj.shape[0] != adj.shape[1]:
+        raise ValueError(f"adjacency must be square, got {adj.shape}")
+    if not np.array_equal(adj, adj.T):
+        raise ValueError("adjacency must be symmetric (undirected graph)")
+    if np.any(np.diag(adj) != 0):
+        raise ValueError("no self loops allowed")
+    if not np.isin(adj, (0, 1)).all():
+        raise ValueError("adjacency entries must be 0/1")

@@ -1,0 +1,8 @@
+"""Data substrate: synthetic datasets, the paper's p-skew non-IID
+partitioner (Sec. V-A), and per-worker shard iterators."""
+from repro.data.partition import pskew_partition, label_histogram  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    make_classification_data,
+    make_token_data,
+    worker_batch_iterator,
+)

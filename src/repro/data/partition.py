@@ -1,0 +1,59 @@
+"""The paper's synthesized non-IID partitioner (Sec. V-A).
+
+"p of a unique class is divided equally for every three workers and the
+remaining samples of each class are partitioned to other workers
+uniformly." p=0.1..0.8 are the paper's non-IID levels; p = 1/(N/3) is the
+IID special case (paper: p=0.1 with N=30).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+GROUP = 3      # the paper pins each class to a group of three workers
+
+
+def pskew_partition(labels: np.ndarray, num_workers: int, p: float,
+                    rng: np.random.Generator) -> list[np.ndarray]:
+    """Return per-worker index arrays implementing the paper's p-skew.
+
+    Class c is pinned to worker group g(c) = (c*GROUP ... c*GROUP+2) mod N;
+    a p-fraction of its samples goes equally to that group, the rest is
+    spread uniformly over the remaining workers.
+    """
+    labels = np.asarray(labels)
+    n = num_workers
+    shards: list[list[np.ndarray]] = [[] for _ in range(n)]
+    classes = np.unique(labels)
+    for c in classes:
+        idx = np.nonzero(labels == c)[0]
+        rng.shuffle(idx)
+        group = [(int(c) * GROUP + k) % n for k in range(GROUP)]
+        others = [w for w in range(n) if w not in group]
+        cut = int(round(p * len(idx)))
+        pinned, rest = idx[:cut], idx[cut:]
+        for k, part in enumerate(np.array_split(pinned, GROUP)):
+            shards[group[k]].append(part)
+        if others:
+            for k, part in enumerate(np.array_split(rest, len(others))):
+                shards[others[k]].append(part)
+        else:                       # tiny N: spread rest over the group too
+            for k, part in enumerate(np.array_split(rest, GROUP)):
+                shards[group[k]].append(part)
+    out = []
+    for w in range(n):
+        ix = (np.concatenate(shards[w]) if shards[w]
+              else np.empty((0,), np.int64))
+        rng.shuffle(ix)
+        out.append(ix)
+    return out
+
+
+def label_histogram(labels: np.ndarray, shards: list[np.ndarray],
+                    num_classes: int) -> np.ndarray:
+    """(N, C) per-worker class histogram — used by tests and by the PENS
+    baseline's similarity oracle."""
+    h = np.zeros((len(shards), num_classes), np.int64)
+    for w, ix in enumerate(shards):
+        cls, cnt = np.unique(labels[ix], return_counts=True)
+        h[w, cls.astype(int)] = cnt
+    return h

@@ -1,0 +1,55 @@
+"""Fused consensus-distance kernel (paper Eq. 7): per-neighbor squared L2
+
+    d_k = sum ( x - u_k )^2
+
+as a blocked partial-sum reduction — never materializes the (K, L)
+difference tensor in HBM. Feeds the coordinator every round (Alg. 1
+line 9). The output block maps every grid step to the same (K, 1)
+accumulator; TPU grids iterate sequentially, so read-modify-write
+accumulation is safe (same pattern as the flash-attention scratch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 8
+BLOCK_COLS = 1024
+
+
+def _consensus_kernel(x_ref, u_ref, o_ref, *, num_neighbors: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)                     # [R, C]
+    for kidx in range(num_neighbors):
+        d = u_ref[kidx].astype(jnp.float32) - x
+        o_ref[kidx, 0] += jnp.sum(d * d)
+
+
+def consensus_dist_2d(x, u, *, interpret: bool = False):
+    """x: [R, C]; u: [K, R, C]. Returns [K] f32 squared distances."""
+    r, c = x.shape
+    k = u.shape[0]
+    br, bc = min(BLOCK_ROWS, r), min(BLOCK_COLS, c)
+    assert r % br == 0 and c % bc == 0, (r, c, br, bc)
+    kernel = functools.partial(_consensus_kernel, num_neighbors=k)
+    out = pl.pallas_call(
+        kernel,
+        grid=(r // br, c // bc),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((k, br, bc), lambda i, j: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((k, 1), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        interpret=interpret,
+    )(x, u)
+    return out[:, 0]

@@ -1,0 +1,151 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the body
+runs in Python for correctness validation; TPU is the compile target.
+Wrappers handle padding to block multiples and layout massaging so call
+sites stay shape-agnostic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import consensus_dist as _cd
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gossip_mix as _gm
+from repro.kernels import quantize_block as _qb
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_pow2(s: int, block: int) -> int:
+    return (s + block - 1) // block * block
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    interpret: bool | None = None):
+    """q: [B, S, Hq, hd]; k, v: [B, Sk, Hkv, hd] (model layout).
+
+    Returns [B, S, Hq, hd]. Differentiable: custom VJP — forward is the
+    Pallas kernel, backward recomputes through the jnp reference (the
+    flash-standard recompute; interpret-mode pallas_call has no reverse
+    AD). Pads sequence dims to block multiples; padded keys are masked
+    by the causal guard (padded positions > every real query)."""
+    interp = _on_cpu() if interpret is None else interpret
+    return _flash_vjp(q, k, v, causal, window, interp)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_vjp(q, k, v, causal, window, interp):
+    return _flash_fwd_impl(q, k, v, causal, window, interp)
+
+
+def _ref_model_layout(q, k, v, causal, window):
+    from repro.models import layers as L
+    mask = None
+    if causal or window:
+        mask = L.gqa_scores_mask(q.shape[1], k.shape[1], causal=causal,
+                                 window=window)
+    return L.gqa_attention_ref(q, k, v, mask)
+
+
+def _flash_fwd(q, k, v, causal, window, interp):
+    return _flash_vjp(q, k, v, causal, window, interp), (q, k, v)
+
+
+def _flash_bwd(causal, window, interp, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda qq, kk, vv: _ref_model_layout(qq, kk, vv, causal, window),
+        q, k, v)
+    return vjp(g)
+
+
+_flash_vjp.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _flash_fwd_impl(q, k, v, causal, window, interp):
+    b, s, hq, hd = q.shape
+    sk = k.shape[1]
+    bq = min(_fa.DEFAULT_BLOCK_Q, _pad_pow2(s, 128))
+    bk = min(_fa.DEFAULT_BLOCK_K, _pad_pow2(sk, 128))
+    sp, skp = _pad_pow2(s, bq), _pad_pow2(sk, bk)
+    qt = jnp.moveaxis(q, 2, 1)                          # [B, Hq, S, hd]
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    qt = jnp.pad(qt, ((0, 0), (0, 0), (0, sp - s), (0, 0)))
+    kt = jnp.pad(kt, ((0, 0), (0, 0), (0, skp - sk), (0, 0)))
+    vt = jnp.pad(vt, ((0, 0), (0, 0), (0, skp - sk), (0, 0)))
+    # padded keys must never be attended: rely on causal mask when causal
+    # (padded k positions > all real q positions); otherwise mask via big
+    # negative bias using a window that excludes them is not available, so
+    # non-causal callers must pass pre-padded inputs.
+    o = _fa.flash_attention_fwd(qt, kt, vt, causal=causal or sk != skp,
+                                window=window, block_q=bq, block_k=bk,
+                                interpret=interp)
+    return jnp.moveaxis(o[:, :, :s], 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# gossip mix / consensus distance / quantize — operate on flat params
+# ---------------------------------------------------------------------------
+
+ROWS = _gm.BLOCK_ROWS
+COLS = _gm.BLOCK_COLS
+TILE = ROWS * COLS
+
+
+def _to_2d(flat):
+    n = flat.shape[0]
+    npad = _pad_pow2(n, TILE)
+    return jnp.pad(flat, (0, npad - n)).reshape(npad // COLS, COLS), n
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def gossip_mix(x_flat, u_flat, w, *, interpret: bool | None = None):
+    """Fused Eq. 5 mixing. x: [L]; u: [K, L]; w: [K] -> [L]."""
+    interp = _on_cpu() if interpret is None else interpret
+    x2, n = _to_2d(x_flat)
+    u2 = jax.vmap(lambda uu: _to_2d(uu)[0])(u_flat)
+    y = _gm.gossip_mix_2d(x2, u2, w, interpret=interp)
+    return y.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def consensus_dist(x_flat, u_flat, *, interpret: bool | None = None):
+    """Fused Eq. 7: [K] L2 distances ||x - u_k||."""
+    interp = _on_cpu() if interpret is None else interpret
+    x2, n = _to_2d(x_flat)
+    u2 = jax.vmap(lambda uu: _to_2d(uu)[0])(u_flat)
+    d2 = _cd.consensus_dist_2d(x2, u2, interpret=interp)
+    return jnp.sqrt(d2)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def quantize(x_flat, *, interpret: bool | None = None):
+    """Per-tile int8 quantization of a flat vector.
+
+    Returns (q int8 [Lp], scales f32 [Lp/TILE], orig_len)."""
+    interp = _on_cpu() if interpret is None else interpret
+    x2, n = _to_2d(x_flat)
+    q, s = _qb.quantize_block_2d(x2, interpret=interp)
+    return q.reshape(-1), s.reshape(-1), n
+
+
+@partial(jax.jit, static_argnames=("n", "interpret"))
+def dequantize(q_flat, scales, n: int, *, interpret: bool | None = None):
+    interp = _on_cpu() if interpret is None else interpret
+    rows = q_flat.shape[0] // COLS
+    q2 = q_flat.reshape(rows, COLS)
+    s2 = scales.reshape(rows // ROWS, 1)
+    x = _qb.dequantize_block_2d(q2, s2, interpret=interp)
+    return x.reshape(-1)[:n]

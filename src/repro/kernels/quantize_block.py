@@ -1,0 +1,72 @@
+"""Per-block int8 quantize/dequantize kernel with f32 scales.
+
+Used by ``runtime/compression.py`` for gossip-delta compression (beyond-
+paper optimization, ChocoSGD/DeepSqueeze-style): the model delta sent to
+each neighbor shrinks 4x (f32) / 2x (bf16) on the wire, with error
+feedback keeping the bias compensated. Scales are per (8, 1024) tile —
+fine enough to track gossip-delta dynamic range, coarse enough that the
+scale side-channel is 0.01% of payload.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 8
+BLOCK_COLS = 1024
+QMAX = 127.0
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax / QMAX, 1e-30)
+    q = jnp.clip(jnp.round(x / scale), -QMAX, QMAX)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[0, 0] = scale
+
+
+def quantize_block_2d(x, *, interpret: bool = False):
+    """x: [R, C] -> (q int8 [R, C], scales f32 [R/BR, C/BC])."""
+    r, c = x.shape
+    br, bc = min(BLOCK_ROWS, r), min(BLOCK_COLS, c)
+    assert r % br == 0 and c % bc == 0, (r, c, br, bc)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(r // br, c // bc),
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), jnp.int8),
+            jax.ShapeDtypeStruct((r // br, c // bc), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[0, 0]) \
+        .astype(x_ref.dtype)
+
+
+def dequantize_block_2d(q, scales, dtype=jnp.float32, *,
+                        interpret: bool = False):
+    """Inverse of ``quantize_block_2d``."""
+    r, c = q.shape
+    nr, nc = scales.shape
+    br, bc = r // nr, c // nc
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(nr, nc),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), dtype),
+        interpret=interpret,
+    )(q, scales)

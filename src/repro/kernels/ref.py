@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every kernel — the ground truth the Pallas
+implementations are swept against (tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [B, Hq, S, hd]; k, v: [B, Hkv, Sk, hd] -> [B, Hq, S, hd]."""
+    b, hq, s, hd = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qr = q.reshape(b, hkv, g, s, hd).astype(jnp.float32)
+    scores = jnp.einsum("bhgsd,bhtd->bhgst", qr,
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    mask = jnp.ones((s, sk), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgst,bhtd->bhgsd", w, v.astype(jnp.float32))
+    return o.reshape(b, hq, s, hd).astype(q.dtype)
+
+
+def gossip_mix_ref(x, u, w):
+    """x: [R, C]; u: [K, R, C]; w: [K]. y = x + sum_k w_k (u_k - x)."""
+    xf = x.astype(jnp.float32)
+    diff = u.astype(jnp.float32) - xf[None]
+    y = xf + jnp.tensordot(w.astype(jnp.float32), diff, axes=1)
+    return y.astype(x.dtype)
+
+
+def consensus_dist_ref(x, u):
+    """x: [R, C]; u: [K, R, C] -> [K] squared L2 distances."""
+    d = u.astype(jnp.float32) - x.astype(jnp.float32)[None]
+    return jnp.sum(d * d, axis=(1, 2))
+
+
+def quantize_block_ref(x, block_rows: int, block_cols: int):
+    """Per-(block_rows, block_cols)-tile int8 quantization."""
+    r, c = x.shape
+    nr, nc = r // block_rows, c // block_cols
+    t = x.astype(jnp.float32).reshape(nr, block_rows, nc, block_cols)
+    t = t.transpose(0, 2, 1, 3)                       # [nr, nc, br, bc]
+    amax = jnp.max(jnp.abs(t), axis=(2, 3))
+    scales = jnp.maximum(amax / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(t / scales[..., None, None]), -127, 127)
+    q = q.transpose(0, 2, 1, 3).reshape(r, c).astype(jnp.int8)
+    return q, scales
+
+
+def dequantize_block_ref(q, scales, dtype=jnp.float32):
+    r, c = q.shape
+    nr, nc = scales.shape
+    br, bc = r // nr, c // nc
+    t = q.astype(jnp.float32).reshape(nr, br, nc, bc).transpose(0, 2, 1, 3)
+    x = t * scales[..., None, None]
+    return x.transpose(0, 2, 1, 3).reshape(r, c).astype(dtype)

@@ -1,0 +1,179 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (spec: MULTI-POD DRY-RUN).
+
+For every (architecture x input shape) cell: build the step (train_step
+for train shapes, serve_step for decode; prefill for prefill shapes),
+lower + compile against the production mesh, print memory_analysis (fits)
+and cost_analysis (FLOPs/bytes for §Roofline), and parse collective
+bytes from the compiled HLO.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+        --shape train_4k [--multi-pod] [--all] [--json out.json]
+
+The XLA_FLAGS line above MUST precede any jax import (device count locks
+on first init); smoke tests / benches never import this module.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as rl
+from repro.runtime import steps as steps_mod
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             train_kw: dict | None = None, verbose: bool = True,
+             unroll: bool = True, f32_traffic: bool = True,
+             cfg_overrides: dict | None = None) -> dict:
+    """f32_traffic: compile with dtype=f32 and scale byte terms x0.5 to
+    bf16-equivalent. The CPU backend emulates bf16 by inserting f32
+    converts of full params/caches per use — phantom HBM traffic that
+    does not exist on TPU (native bf16) and would otherwise dominate the
+    memory term ~100x. FLOP counts are dtype-independent."""
+    import dataclasses
+    from repro.models import layers as L
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    byte_scale = 1.0
+    if f32_traffic and cfg.dtype == "bfloat16":
+        cfg = dataclasses.replace(cfg, dtype="float32")
+        byte_scale = 0.5
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+    bundle = steps_mod.make_step(cfg, mesh, shape, **(train_kw or {}))
+    # unroll layer scans so cost_analysis counts every trip (roofline.py);
+    # scan mode (unroll=False) for fast compile-success-only passes
+    with mesh, L.scan_unroll(unroll):
+        jitted = jax.jit(bundle.fn,
+                         in_shardings=bundle.in_shardings,
+                         out_shardings=bundle.out_shardings,
+                         donate_argnums=bundle.donate_argnums)
+        lowered = jitted.lower(*bundle.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    roof = rl.roofline_from_compiled(compiled, chips)
+    roof.hbm_bytes *= byte_scale            # f32-compiled -> bf16 traffic
+    roof.collective_bytes *= byte_scale
+    mf = rl.model_flops(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "ok": True,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "hlo_flops": roof.flops,
+        "hlo_bytes": roof.hbm_bytes,
+        "collective_bytes": roof.collective_bytes,
+        "collectives": dict(roof.collectives.count_by_kind),
+        "collective_bytes_by_kind": dict(roof.collectives.bytes_by_kind),
+        "compute_s": roof.compute_s,
+        "memory_s": roof.memory_s,
+        "collective_s": roof.collective_s,
+        "dominant": roof.dominant,
+        "model_flops": mf,
+        "useful_fraction": roof.useful_fraction(mf),
+        "mfu_bound": roof.mfu(mf),
+        "bytes_per_device": (getattr(mem, "argument_size_in_bytes", 0)
+                             + getattr(mem, "output_size_in_bytes", 0))
+        * byte_scale,
+        "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", 0)
+        * byte_scale,
+        "peak_bytes_per_device": (getattr(mem, "peak_memory_in_bytes",
+                                          None) or (
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0))) * byte_scale,
+    }
+    if verbose:
+        print(f"[{rec['mesh']}] {arch} x {shape_name}: OK "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"  memory_analysis: args+out={rec['bytes_per_device']/1e9:.2f}"
+              f" GB/dev, temp={rec['temp_bytes_per_device']/1e9:.2f} GB/dev")
+        print(f"  cost_analysis: {roof.flops:.3e} FLOPs, "
+              f"{roof.hbm_bytes:.3e} HBM bytes, "
+              f"{roof.collective_bytes:.3e} collective bytes "
+              f"{rec['collectives']}")
+        print(f"  roofline: compute={roof.compute_s*1e3:.2f}ms "
+              f"memory={roof.memory_s*1e3:.2f}ms "
+              f"collective={roof.collective_s*1e3:.2f}ms "
+              f"-> {roof.dominant}-bound; "
+              f"useful={rec['useful_fraction']:.2f} "
+              f"MFU_bound={rec['mfu_bound']:.3f}")
+    return rec
+
+
+def cells(multi_pod: bool):
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for name in SHAPES:
+            if name in cfg.skip_shapes:
+                continue
+            yield arch, name
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--json", default=None, help="append records here")
+    ap.add_argument("--tau-max", type=int, default=1)
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="scan mode: fast compile-success pass (costs of "
+                         "scanned bodies counted once; not for §Roofline)")
+    ap.add_argument("--shapes", default=None,
+                    help="comma-separated shape filter for --all")
+    ap.add_argument("--arches", default=None,
+                    help="comma-separated arch filter for --all")
+    args = ap.parse_args(argv)
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    shape_f = args.shapes.split(",") if args.shapes else None
+    arch_f = args.arches.split(",") if args.arches else None
+    todo = []
+    for mp in meshes:
+        if args.all:
+            todo += [(a, s, mp) for a, s in cells(mp)
+                     if (not shape_f or s in shape_f)
+                     and (not arch_f or a in arch_f)]
+        else:
+            assert args.arch and args.shape, "--arch/--shape or --all"
+            todo.append((args.arch, args.shape, mp))
+
+    records, failures = [], 0
+    for arch, shape, mp in todo:
+        try:
+            rec = run_cell(arch, shape, multi_pod=mp,
+                           train_kw={"tau_max": args.tau_max}
+                           if SHAPES[shape].kind == "train" else None,
+                           unroll=not args.no_unroll)
+        except Exception as e:  # noqa: BLE001 — report, keep going
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16", "ok": False,
+                   "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        records.append(rec)
+        if args.json:
+            with open(args.json, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    print(f"\n{len(records) - failures}/{len(records)} cells compiled OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

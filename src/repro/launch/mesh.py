@@ -1,0 +1,21 @@
+"""Production mesh definitions (spec: MULTI-POD DRY-RUN step 1).
+
+Functions, not module-level constants — importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod mesh: 16x16 = 256 chips single-pod; 2x16x16 multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count
+    set before jax init)."""
+    return jax.make_mesh(shape, axes)

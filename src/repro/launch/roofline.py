@@ -1,0 +1,200 @@
+"""Roofline-term derivation from compiled dry-run artifacts (spec:
+ROOFLINE ANALYSIS).
+
+    compute term    = HLO_FLOPs / (chips x 197e12 bf16 FLOP/s)
+    memory term     = HLO_bytes / (chips x 819e9 B/s HBM)
+    collective term = collective_bytes / (chips x 50e9 B/s ICI per link)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``; collective
+bytes are parsed from the optimized HLO text by summing operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops (operand types are inlined in HLO text).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# v5e hardware constants (per chip / per link)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g. bf16[2,16,128]{2,1,0} or f32[] — captures dtype + dims
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, int] = field(default_factory=dict)
+    count_by_kind: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|[\w\[\],{}/ ]+?)\s+"
+    r"([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type (handles tuples)."""
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(type_str))
+
+
+def parse_collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective op in (optimized) HLO text.
+
+    Optimized HLO names operands without inline types:
+      %ag = bf16[32,6144]{...} all-gather(%x), replica_groups=...
+    so we build a symbol table (op name -> result bytes) in a first pass,
+    then look up each collective's operands. Counts the `-start` variant
+    of async collectives; `-done` carries no new data.
+
+    NOTE: while-loop bodies appear once in the text, so collectives inside
+    scans are counted once — the dry-run unrolls layer scans
+    (``layers.scan_unroll``) so every instance is visible.
+    """
+    # pass 1: symbol table
+    table: dict[str, int] = {}
+    defs: list[tuple[str, str, str]] = []   # (name, op, line)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rtype, op = m.groups()
+        table[name] = _type_bytes(rtype)
+        defs.append((name, op, line))
+    # pass 2: collectives
+    stats = CollectiveStats()
+    for name, op, line in defs:
+        kind = next((c for c in _COLLECTIVES
+                     if op == c or op == c + "-start"), None)
+        if kind is None:
+            continue
+        # operand names inside the call parens only
+        call = line[line.index(op + "(") + len(op):]
+        depth, end = 0, len(call)
+        for i, ch in enumerate(call):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = call[1:end]
+        nbytes = sum(table.get(nm, 0)
+                     for nm in _OPERAND_RE.findall(operands))
+        if nbytes == 0:
+            # fall back to inline types if present (unoptimized dumps)
+            nbytes = _type_bytes(operands)
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + nbytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    chips: int
+    collectives: CollectiveStats | None = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step-time lower bound (terms overlap perfectly)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def useful_fraction(self, model_flops: float) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        return model_flops / max(self.flops, 1.0)
+
+    def mfu(self, model_flops: float) -> float:
+        """Roofline-bound MFU: useful FLOPs over peak at the bound step
+        time (the score: fraction of roofline achieved)."""
+        t = self.step_time_s
+        return model_flops / (self.chips * PEAK_FLOPS * max(t, 1e-30))
+
+
+def roofline_from_compiled(compiled, chips: int, *,
+                           hlo_text: str | None = None) -> Roofline:
+    """The compiled module is the per-device SPMD program: cost_analysis
+    FLOPs/bytes and parsed collective operand bytes are per device. We
+    store GLOBAL quantities (x chips) so the spec's /(chips x bw) formulas
+    give per-device seconds."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):           # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0)) * chips
+    nbytes = float(cost.get("bytes accessed", 0.0)) * chips
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = parse_collective_bytes(text)
+    return Roofline(flops=flops, hbm_bytes=nbytes,
+                    collective_bytes=float(coll.total_bytes) * chips,
+                    chips=chips, collectives=coll)
+
+
+def model_flops_train(cfg, shape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) per step."""
+    n = cfg.active_param_count()
+    d = shape.seq_len * shape.global_batch
+    return 6.0 * n * d
+
+
+def model_flops_decode(cfg, shape) -> float:
+    """Decode: 2·N_active per generated token (fwd only) x batch."""
+    n = cfg.active_param_count()
+    return 2.0 * n * shape.global_batch
+
+
+def model_flops_prefill(cfg, shape) -> float:
+    n = cfg.active_param_count()
+    return 2.0 * n * shape.seq_len * shape.global_batch
+
+
+def model_flops(cfg, shape) -> float:
+    if shape.kind == "train":
+        return model_flops_train(cfg, shape)
+    if shape.kind == "prefill":
+        return model_flops_prefill(cfg, shape)
+    return model_flops_decode(cfg, shape)

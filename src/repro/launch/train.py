@@ -1,0 +1,180 @@
+"""End-to-end DFL training driver: FedHP controller + TPU runtime.
+
+Each round:
+  1. the coordinator (host process) decides the topology A^h and per-worker
+     taus from last round's measurements (Alg. 3),
+  2. the SPMD train step runs tau_i masked local updates + matching-wise
+     gossip (runtime/steps.py) and reports neighbor consensus distances,
+  3. measurements feed the ConsensusTracker / controller for round h+1,
+  4. periodic checkpoints (atomic, elastic-restorable).
+
+On this CPU container run it at smoke scale::
+
+    REPRO_DEVICES=8 PYTHONPATH=src python -m repro.launch.train \
+        --arch smollm-360m --smoke --steps 8 --workers 4
+
+On a pod, drop REPRO_DEVICES and pass --production [--multi-pod].
+Wall-clock heterogeneity on homogeneous hosts is synthesized by the
+SimCluster profile (DESIGN.md §3: straggler model); on a real fleet the
+per-worker step times replace it.
+"""
+import os
+if os.environ.get("REPRO_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_DEVICES"])
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.checkpoint.store import elastic_reshard
+from repro.configs import SHAPES, get_config, get_smoke_config
+from repro.configs.base import FedHPConfig, InputShape
+from repro.core.consensus import ConsensusTracker
+from repro.core.controller import AdaptiveController
+from repro.core.topology import make_base_topology
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.runtime import sharding, steps
+from repro.simulation.cluster import SimCluster
+
+
+def build_mesh(args):
+    if args.production:
+        return make_production_mesh(multi_pod=args.multi_pod)
+    n = jax.device_count()
+    model = 1
+    while (n // model) > args.workers and model < n:
+        model *= 2
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny batch/seq (CPU)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--tau-max", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--production", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=5)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compressed", action="store_true",
+                    help="int8 error-feedback gossip")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    shape = SHAPES[args.shape]
+    if args.smoke:
+        shape = InputShape(shape.name, seq_len=64,
+                           global_batch=2 * args.workers, kind="train")
+    mesh = build_mesh(args)
+    w = sharding.num_workers(cfg, mesh)
+    print(f"mesh {dict(mesh.shape)} -> {w} DFL workers; arch={cfg.name} "
+          f"seq={shape.seq_len} batch={shape.global_batch}")
+
+    fcfg = FedHPConfig(num_workers=w, rounds=args.steps,
+                       tau_max=args.tau_max, tau_init=args.tau_max,
+                       lr=args.lr, seed=args.seed)
+    base = make_base_topology(w, "full" if w <= 8 else "erdos:0.3",
+                              args.seed)
+    controller = AdaptiveController(base, tau_max=fcfg.tau_max) \
+        if w > 1 else None
+    tracker = ConsensusTracker(w, fcfg.beta1, fcfg.beta2)
+    cluster = SimCluster(w, model_bits=32.0 * cfg.param_count(),
+                         seed=args.seed)
+
+    # --- init state -------------------------------------------------------
+    rng = jax.random.PRNGKey(args.seed)
+    p1 = registry.init_params(cfg, rng)
+    params = jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (w,) + l.shape), p1)
+    ckpt = CheckpointManager(args.checkpoint_dir) if args.checkpoint_dir \
+        else None
+    start_round = 0
+    if ckpt and args.resume and ckpt.latest_step() is not None:
+        template = jax.tree.map(np.asarray, params)
+        state, meta = ckpt.restore(template)
+        params = jax.tree.map(jnp.asarray, elastic_reshard(state, w))
+        start_round = int(meta["step"]) + 1
+        print(f"resumed from step {meta['step']} "
+              f"(elastic reshard -> {w} workers)")
+
+    adj = base
+    taus = np.full(w, fcfg.tau_init, np.int64)
+    mu, beta = cluster.sample_mu(), cluster.sample_beta()
+    compiled_cache: dict = {}
+    data_rng = jax.random.PRNGKey(args.seed + 1)
+
+    for h in range(start_round, args.steps):
+        lr = jnp.float32(args.lr * (fcfg.lr_decay ** h))
+        tau_cap = int(max(taus.max(), 1))
+        key = (tuple(map(tuple, adj)), tau_cap)
+        if key not in compiled_cache:
+            bundle = steps.make_train_step(
+                cfg, mesh, shape, adj=adj, tau_max=tau_cap,
+                compressed=args.compressed,
+                measure_distances=not args.compressed and w > 1)
+            compiled_cache[key] = (bundle, jax.jit(
+                bundle.fn, in_shardings=bundle.in_shardings,
+                out_shardings=bundle.out_shardings))
+        bundle, step_fn = compiled_cache[key]
+
+        data_rng, k = jax.random.split(data_rng)
+        batch = registry.make_batch(cfg, shape, k)
+        batch = jax.tree.map(
+            lambda x: x.reshape((w, x.shape[0] // w) + x.shape[1:]), batch)
+        if tau_cap > 1:
+            batch = jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x[:, None], (w, tau_cap) + x.shape[1:]), batch)
+
+        t0 = time.time()
+        params, loss, aux = step_fn(params, batch, jnp.asarray(taus,
+                                                               jnp.int32), lr)
+        loss = float(loss)
+        dt = time.time() - t0
+
+        # --- coordinator: measurements -> next round's (adj, taus) -------
+        mu, beta = cluster.sample_mu(), cluster.sample_beta()
+        if controller is not None:
+            if "neighbor_dists" in aux:
+                d = np.asarray(aux["neighbor_dists"])
+                # distances are per matching; approximate the edge matrix
+                pair = np.zeros((w, w))
+                from repro.core.topology import matching_decomposition
+                for m, match in enumerate(matching_decomposition(adj)):
+                    for (i, j) in match:
+                        pair[i, j] = pair[j, i] = d[m]
+                tracker.update(adj, pair, mean_update_norm=float(d.mean()))
+            decision = controller.decide(
+                mu, beta, tracker, f1=loss, smooth_l=1.0, sigma=1.0,
+                eta=float(lr), rounds=args.steps)
+            adj, taus = decision.adj, decision.taus
+        print(f"round {h}: loss={loss:.4f} tau_max={tau_cap} "
+              f"links={int(adj.sum()) // 2} wall={dt:.1f}s")
+
+        if ckpt and (h + 1) % args.checkpoint_every == 0:
+            ckpt.save(h, jax.tree.map(np.asarray, params),
+                      meta={"arch": cfg.name, "loss": loss})
+    if ckpt:
+        ckpt.save(args.steps - 1, jax.tree.map(np.asarray, params),
+                  meta={"arch": cfg.name, "loss": loss})
+    print("done")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

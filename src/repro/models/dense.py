@@ -1,0 +1,311 @@
+"""Dense decoder-only GQA transformer (internlm2, nemotron-4, smollm, gemma3).
+
+Layers are stacked and scanned (`lax.scan`) to keep HLO/compile size flat in
+depth. Gemma3's 5:1 local:global pattern is expressed as a *grouped* scan:
+each group is (global_every-1) sliding-window layers followed by one global
+layer, with a tail of leftover local layers; caches are stacked per group so
+decode keeps a `window`-sized rolling cache for local layers and a full-size
+cache only for the 1-in-N global layers (this is what makes long_500k decode
+feasible for gemma3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def _block_init(rng, cfg: ModelConfig, dtype):
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.num_heads,
+                                 cfg.num_kv_heads, cfg.resolved_head_dim,
+                                 dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def _stack_init(rng, cfg: ModelConfig, n: int, dtype):
+    ks = jax.random.split(rng, n)
+    return jax.vmap(lambda k: _block_init(k, cfg, dtype))(ks)
+
+
+def _group_shape(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(num_groups, locals_per_group, tail_locals)."""
+    if not cfg.global_every:
+        return 0, 0, 0
+    ge = cfg.global_every
+    return cfg.num_layers // ge, ge - 1, cfg.num_layers % ge
+
+
+def init(cfg: ModelConfig, rng) -> dict:
+    dtype = L.dtype_of(cfg.dtype)
+    k_emb, k_blocks, k_head, k_tail, k_glob = jax.random.split(rng, 5)
+    p = {
+        "embed": L.embed_init(k_emb, (cfg.vocab_size, cfg.d_model), dtype),
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(k_head, (cfg.d_model, cfg.vocab_size),
+                                    dtype)
+    if cfg.global_every:
+        g, lpg, tail = _group_shape(cfg)
+        ks = jax.random.split(k_blocks, g)
+        p["local"] = jax.vmap(
+            lambda k: _stack_init(k, cfg, lpg, dtype))(ks)    # [G, lpg, ...]
+        p["global"] = _stack_init(k_glob, cfg, g, dtype)      # [G, ...]
+        if tail:
+            p["tail"] = _stack_init(k_tail, cfg, tail, dtype)
+    else:
+        p["blocks"] = _stack_init(k_blocks, cfg, cfg.num_layers, dtype)
+    return p
+
+
+def _block(cfg: ModelConfig, bp, x, positions, *, window: int,
+           mrope_positions=None):
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    h = L.multi_head_attention(
+        bp["attn"], h, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+        positions=positions, theta=cfg.rope_theta, causal=True,
+        window=window, mrope_positions=mrope_positions,
+        attn_fn=L.pick_attn_fn(cfg, causal=True, window=window))
+    x = x + h
+    h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    x = x + L.apply_mlp(bp["mlp"], h, cfg.act)
+    return x
+
+
+def _remat(f, cfg: ModelConfig):
+    return L.remat(f, cfg)
+
+
+def forward(cfg: ModelConfig, params: dict, tokens,
+            mrope_positions=None, extra_embeds=None):
+    """Full forward to final hidden states. tokens: [B, S] int32."""
+    x = params["embed"][tokens]
+    if extra_embeds is not None:                 # VLM: prepend patch embeds
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    if cfg.global_every:
+        def local_fn(h, bp):
+            return _block(cfg, bp, h, positions,
+                          window=cfg.sliding_window), None
+
+        def group_fn(h, gp):
+            h, _ = L.scan(_remat(local_fn, cfg), h, gp["local"])
+            h = _remat(lambda hh, bp: (_block(cfg, bp, hh, positions,
+                                              window=0), None),
+                       cfg)(h, gp["global"])[0]
+            return h, None
+
+        gp = {"local": params["local"], "global": params["global"]}
+        x, _ = L.scan(group_fn, x, gp)
+        if "tail" in params:
+            x, _ = L.scan(_remat(local_fn, cfg), x, params["tail"])
+    else:
+        def block_fn(h, bp):
+            return _block(cfg, bp, h, positions,
+                          window=cfg.sliding_window,
+                          mrope_positions=mrope_positions), None
+        x, _ = L.scan(_remat(block_fn, cfg), x, params["blocks"])
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def head_matrix(cfg: ModelConfig, params: dict):
+    return (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict):
+    mp = batch.get("mrope_positions")
+    if mp is not None:                    # stored batch-leading [B, 3, S]
+        mp = jnp.moveaxis(mp, -2, 0)
+    h = forward(cfg, params, batch["tokens"],
+                mrope_positions=mp,
+                extra_embeds=batch.get("vision_embeds"))
+    labels, mask = batch["labels"], batch.get("loss_mask")
+    if "vision_embeds" in batch:                 # loss only on text positions
+        sv = batch["vision_embeds"].shape[1]
+        h = h[:, sv:]
+    loss, cnt = L.chunked_softmax_xent(h, head_matrix(cfg, params), labels,
+                                       mask)
+    return loss, {"tokens": cnt}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dtype = L.dtype_of(cfg.dtype)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    w = cfg.sliding_window or max_len
+
+    def kv(cap):
+        return jnp.zeros((batch, cap, hkv, hd), dtype)
+
+    if cfg.global_every:
+        g, lpg, tail = _group_shape(cfg)
+        cache = {
+            "local_k": jnp.zeros((g, lpg, batch, w, hkv, hd), dtype),
+            "local_v": jnp.zeros((g, lpg, batch, w, hkv, hd), dtype),
+            "global_k": jnp.zeros((g, batch, max_len, hkv, hd), dtype),
+            "global_v": jnp.zeros((g, batch, max_len, hkv, hd), dtype),
+        }
+        if tail:
+            cache["tail_k"] = jnp.zeros((tail, batch, w, hkv, hd), dtype)
+            cache["tail_v"] = jnp.zeros((tail, batch, w, hkv, hd), dtype)
+    else:
+        cap = cfg.sliding_window or max_len
+        cache = {"k": jnp.zeros((cfg.num_layers, batch, cap, hkv, hd), dtype),
+                 "v": jnp.zeros((cfg.num_layers, batch, cap, hkv, hd), dtype)}
+    cache["len"] = jnp.zeros((), jnp.int32)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens):
+    """One-token decode. tokens: [B, 1]. Returns (logits [B, V], cache)."""
+    x = params["embed"][tokens]
+    b = x.shape[0]
+    pos = jnp.broadcast_to(cache["len"][None, None], (b, 1)).astype(jnp.int32)
+
+    def attend(bp, h, ck, cv, window):
+        return L.decode_attention(
+            bp["attn"], h, ck, cv, cache["len"], num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            positions=pos, theta=cfg.rope_theta, window=window)
+
+    def block_decode(bp, h, ck, cv, window):
+        a = L.rms_norm(h, bp["ln1"], cfg.norm_eps)
+        a, ck, cv = attend(bp, a, ck, cv, window)
+        h = h + a
+        m = L.rms_norm(h, bp["ln2"], cfg.norm_eps)
+        h = h + L.apply_mlp(bp["mlp"], m, cfg.act)
+        return h, ck, cv
+
+    if cfg.global_every:
+        w = cfg.sliding_window
+
+        def local_scan(h, xs):
+            bp, ck, cv = xs
+            h, ck, cv = block_decode(bp, h, ck, cv, w)
+            return h, (ck, cv)
+
+        def group_scan(h, xs):
+            gp_loc, gbp, lck, lcv, gck, gcv = xs
+            h, (lck, lcv) = L.scan(local_scan, h, (gp_loc, lck, lcv))
+            h, gck, gcv = block_decode(gbp, h, gck, gcv, 0)
+            return h, (lck, lcv, gck, gcv)
+
+        x, (lk, lv, gk, gv) = L.scan(
+            group_scan, x, (params["local"], params["global"],
+                            cache["local_k"], cache["local_v"],
+                            cache["global_k"], cache["global_v"]))
+        cache = dict(cache, local_k=lk, local_v=lv, global_k=gk,
+                     global_v=gv)
+        if "tail" in params:
+            x, (tk, tv) = L.scan(
+                local_scan, x,
+                (params["tail"], cache["tail_k"], cache["tail_v"]))
+            cache = dict(cache, tail_k=tk, tail_v=tv)
+    else:
+        w = cfg.sliding_window
+
+        def layer_scan(h, xs):
+            bp, ck, cv = xs
+            h, ck, cv = block_decode(bp, h, ck, cv, w)
+            return h, (ck, cv)
+
+        x, (nk, nv) = L.scan(layer_scan, x,
+                                   (params["blocks"], cache["k"], cache["v"]))
+        cache = dict(cache, k=nk, v=nv)
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, 0] @ head_matrix(cfg, params)).astype(jnp.float32)
+    cache["len"] = cache["len"] + 1
+    return logits, cache
+
+
+def _block_kv(cfg: ModelConfig, bp, x, positions, *, window: int):
+    """Like _block but also returns post-RoPE K/V for cache filling."""
+    b, s, _ = x.shape
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    k = (h @ bp["attn"]["wk"]).reshape(b, s, hkv, hd)
+    v = (h @ bp["attn"]["wv"]).reshape(b, s, hkv, hd)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    a = L.multi_head_attention(
+        bp["attn"], h, num_heads=cfg.num_heads, num_kv_heads=hkv,
+        head_dim=hd, positions=positions, theta=cfg.rope_theta,
+        causal=True, window=window)
+    x = x + a
+    m = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    x = x + L.apply_mlp(bp["mlp"], m, cfg.act)
+    return x, k, v
+
+
+def _to_window_cache(k, window: int, s: int):
+    """Last `window` entries rolled so entry for position p sits at p%window."""
+    kw = k[:, -window:] if s >= window else jnp.pad(
+        k, ((0, 0), (0, window - s), (0, 0), (0, 0)))
+    return jnp.roll(kw, shift=s % window, axis=1) if s >= window else kw
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens, max_len: int = 0):
+    """Prefill forward: returns (last-position logits, filled cache).
+
+    max_len: full-cache capacity (defaults to s; pass s+budget for serving).
+    """
+    b, s = tokens.shape
+    cap = max_len or s
+    w = cfg.sliding_window or cap
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def pad_full(k):
+        return jnp.pad(k, ((0, 0), (0, cap - s), (0, 0), (0, 0)))
+
+    x = params["embed"][tokens]
+    if cfg.global_every:
+        def local_fn(h, bp):
+            h, k, v = _block_kv(cfg, bp, h, positions,
+                                window=cfg.sliding_window)
+            return h, (_to_window_cache(k, w, s), _to_window_cache(v, w, s))
+
+        def group_fn(h, gp):
+            h, (lk, lv) = L.scan(local_fn, h, gp["local"])
+            h, gk, gv = _block_kv(cfg, gp["global"], h, positions, window=0)
+            return h, (lk, lv, pad_full(gk), pad_full(gv))
+
+        x, (lk, lv, gk, gv) = L.scan(
+            group_fn, x, {"local": params["local"],
+                          "global": params["global"]})
+        cache = {"local_k": lk, "local_v": lv, "global_k": gk,
+                 "global_v": gv}
+        if "tail" in params:
+            x, (tk, tv) = L.scan(local_fn, x, params["tail"])
+            cache["tail_k"], cache["tail_v"] = tk, tv
+    else:
+        if cfg.sliding_window:
+            def layer_fn(h, bp):
+                h, k, v = _block_kv(cfg, bp, h, positions,
+                                    window=cfg.sliding_window)
+                return h, (_to_window_cache(k, w, s),
+                           _to_window_cache(v, w, s))
+        else:
+            def layer_fn(h, bp):
+                h, k, v = _block_kv(cfg, bp, h, positions, window=0)
+                return h, (pad_full(k), pad_full(v))
+        x, (ck, cv) = L.scan(layer_fn, x, params["blocks"])
+        cache = {"k": ck, "v": cv}
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, -1] @ head_matrix(cfg, params)).astype(jnp.float32)
+    cache["len"] = jnp.asarray(s, jnp.int32)
+    return logits, cache

@@ -1,0 +1,224 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: inputs are precomputed
+frame embeddings [B, S, d] (``input_specs`` supplies them). Encoder:
+bidirectional self-attention over frames with sinusoidal positions.
+Decoder: causal self-attention + cross-attention to encoder output;
+decoder length = seq_len // 8 (config note). Decode keeps a self-cache of
+decoder length plus precomputed cross-attention K/V over all frames.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+DEC_RATIO = 8     # decoder_len = seq_len // DEC_RATIO
+
+
+def dec_len(seq_len: int) -> int:
+    return max(seq_len // DEC_RATIO, 1)
+
+
+def _enc_block_init(rng, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.num_heads,
+                                 cfg.num_kv_heads, cfg.resolved_head_dim,
+                                 dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def _dec_block_init(rng, cfg: ModelConfig, dtype):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "self_attn": L.init_attention(k1, cfg.d_model, cfg.num_heads,
+                                      cfg.num_kv_heads,
+                                      cfg.resolved_head_dim, dtype),
+        "ln_x": jnp.zeros((cfg.d_model,), dtype),
+        "cross_attn": L.init_attention(k2, cfg.d_model, cfg.num_heads,
+                                       cfg.num_kv_heads,
+                                       cfg.resolved_head_dim, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def init(cfg: ModelConfig, rng) -> dict:
+    dtype = L.dtype_of(cfg.dtype)
+    k_emb, k_enc, k_dec, k_head = jax.random.split(rng, 4)
+    ke = jax.random.split(k_enc, cfg.encoder_layers)
+    kd = jax.random.split(k_dec, cfg.decoder_layers)
+    p = {
+        "embed": L.embed_init(k_emb, (cfg.vocab_size, cfg.d_model), dtype),
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(ke),
+        "enc_ln_f": jnp.zeros((cfg.d_model,), dtype),
+        "dec_blocks": jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(kd),
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(k_head, (cfg.d_model, cfg.vocab_size),
+                                    dtype)
+    return p
+
+
+def _remat(f, cfg: ModelConfig):
+    return L.remat(f, cfg)
+
+
+def encode(cfg: ModelConfig, params: dict, frames):
+    """frames: [B, S, d] precomputed frame embeddings (conv frontend stub)."""
+    b, s, d = frames.shape
+    x = frames + L.sinusoidal_positions(s, d).astype(frames.dtype)[None]
+
+    def block_fn(h, bp):
+        a = L.layer_norm(h, 1.0 + bp["ln1"], jnp.zeros_like(bp["ln1"]),
+                         cfg.norm_eps)
+        a = L.multi_head_attention(
+            bp["attn"], a, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            causal=False)
+        h = h + a
+        m = L.layer_norm(h, 1.0 + bp["ln2"], jnp.zeros_like(bp["ln2"]),
+                         cfg.norm_eps)
+        return h + L.apply_mlp(bp["mlp"], m, cfg.act), None
+
+    x, _ = L.scan(_remat(block_fn, cfg), x, params["enc_blocks"])
+    return L.layer_norm(x, 1.0 + params["enc_ln_f"],
+                        jnp.zeros_like(params["enc_ln_f"]), cfg.norm_eps)
+
+
+def _dec_block(cfg: ModelConfig, bp, x, enc_out, positions):
+    a = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    a = L.multi_head_attention(
+        bp["self_attn"], a, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+        positions=positions, causal=True)
+    x = x + a
+    a = L.rms_norm(x, bp["ln_x"], cfg.norm_eps)
+    a = L.multi_head_attention(
+        bp["cross_attn"], a, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+        causal=False, kv_x=enc_out)
+    x = x + a
+    m = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    return x + L.apply_mlp(bp["mlp"], m, cfg.act)
+
+
+def decode_seq(cfg: ModelConfig, params: dict, tokens, enc_out):
+    """Teacher-forced decoder forward. tokens: [B, T]."""
+    x = params["embed"][tokens]
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    def block_fn(h, bp):
+        return _dec_block(cfg, bp, h, enc_out, positions), None
+
+    x, _ = L.scan(_remat(block_fn, cfg), x, params["dec_blocks"])
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def head_matrix(cfg: ModelConfig, params: dict):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict):
+    """batch: frames [B,S,d], tokens [B,T], labels [B,T]."""
+    enc_out = encode(cfg, params, batch["frames"])
+    h = decode_seq(cfg, params, batch["tokens"], enc_out)
+    loss, cnt = L.chunked_softmax_xent(h, head_matrix(cfg, params),
+                                       batch["labels"],
+                                       batch.get("loss_mask"))
+    return loss, {"tokens": cnt}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_dec_len: int,
+               enc_len: int) -> dict:
+    dtype = L.dtype_of(cfg.dtype)
+    nl = cfg.decoder_layers
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((nl, batch, max_dec_len, hkv, hd), dtype),
+        "v": jnp.zeros((nl, batch, max_dec_len, hkv, hd), dtype),
+        "xk": jnp.zeros((nl, batch, enc_len, hkv, hd), dtype),
+        "xv": jnp.zeros((nl, batch, enc_len, hkv, hd), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg: ModelConfig, params: dict, frames, tokens,
+            max_dec_len: int = 0):
+    """Encode frames, precompute cross K/V, teacher-force the prompt tokens.
+
+    Returns (last-position logits, cache)."""
+    b, t = tokens.shape
+    cap = max_dec_len or t
+    enc_out = encode(cfg, params, frames)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    se = enc_out.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    x = params["embed"][tokens]
+
+    def block_fn(h, bp):
+        a = L.rms_norm(h, bp["ln1"], cfg.norm_eps)
+        k = (a @ bp["self_attn"]["wk"]).reshape(b, t, hkv, hd)
+        v = (a @ bp["self_attn"]["wv"]).reshape(b, t, hkv, hd)
+        h = _dec_block(cfg, bp, h, enc_out, positions)
+        xk = (enc_out @ bp["cross_attn"]["wk"]).reshape(b, se, hkv, hd)
+        xv = (enc_out @ bp["cross_attn"]["wv"]).reshape(b, se, hkv, hd)
+        pad = ((0, 0), (0, cap - t), (0, 0), (0, 0))
+        return h, (jnp.pad(k, pad), jnp.pad(v, pad), xk, xv)
+
+    x, (ck, cv, xk, xv) = L.scan(block_fn, x, params["dec_blocks"])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, -1] @ head_matrix(cfg, params)).astype(jnp.float32)
+    return logits, {"k": ck, "v": cv, "xk": xk, "xv": xv,
+                    "len": jnp.asarray(t, jnp.int32)}
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens):
+    """One-token decode against cached self K/V + cross K/V."""
+    import math
+    x = params["embed"][tokens]
+    b = x.shape[0]
+    pos = jnp.broadcast_to(cache["len"][None, None], (b, 1)).astype(jnp.int32)
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    g = hq // hkv
+
+    def cross(bp, h, xk, xv):
+        q = (h @ bp["cross_attn"]["wq"]).reshape(b, 1, hkv, g, hd)
+        scores = jnp.einsum("bshgd,bthd->bhgst", q, xk,
+                            preferred_element_type=jnp.float32)
+        w = jax.nn.softmax(scores / math.sqrt(hd), axis=-1).astype(xv.dtype)
+        o = jnp.einsum("bhgst,bthd->bshgd", w, xv).reshape(b, 1, hq * hd)
+        return o @ bp["cross_attn"]["wo"]
+
+    def layer_scan(h, xs):
+        bp, ck, cv, xk, xv = xs
+        a = L.rms_norm(h, bp["ln1"], cfg.norm_eps)
+        a, ck, cv = L.decode_attention(
+            bp["self_attn"], a, ck, cv, cache["len"], num_heads=hq,
+            num_kv_heads=hkv, head_dim=hd, positions=pos)
+        h = h + a
+        a = L.rms_norm(h, bp["ln_x"], cfg.norm_eps)
+        h = h + cross(bp, a, xk, xv)
+        m = L.rms_norm(h, bp["ln2"], cfg.norm_eps)
+        h = h + L.apply_mlp(bp["mlp"], m, cfg.act)
+        return h, (ck, cv)
+
+    x, (nk, nv) = L.scan(
+        layer_scan, x, (params["dec_blocks"], cache["k"], cache["v"],
+                        cache["xk"], cache["xv"]))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, 0] @ head_matrix(cfg, params)).astype(jnp.float32)
+    return logits, dict(cache, k=nk, v=nv, len=cache["len"] + 1)

@@ -1,0 +1,253 @@
+"""Zamba2-style hybrid: Mamba2 backbone + shared attention blocks.
+
+`num_layers` Mamba2 blocks; after every `ssm_every` of them one of TWO
+shared attention+FFN blocks fires (parameters reused across invocations,
+alternating A/B — Zamba2's shared-block scheme). Groups scan with
+`lax.scan`; the shared params are selected by group parity inside the
+scan body. Decode keeps per-invocation KV caches (params shared, caches
+not) plus constant-size Mamba2 states — sub-quadratic, so long_500k runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm
+
+NUM_SHARED = 2
+
+
+def _group_shape(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(num_groups, mamba_per_group, tail_mamba)."""
+    if not cfg.ssm_every:
+        return 0, 0, cfg.num_layers
+    g = cfg.num_layers // cfg.ssm_every
+    return g, cfg.ssm_every, cfg.num_layers - g * cfg.ssm_every
+
+
+def _init_shared_block(rng, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.num_heads,
+                                 cfg.num_kv_heads, cfg.resolved_head_dim,
+                                 dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def _init_mamba_block(rng, cfg: ModelConfig, dtype):
+    return {"ln": jnp.zeros((cfg.d_model,), dtype),
+            "mamba": ssm.init_mamba2(rng, cfg.d_model, cfg.ssm_state, dtype)}
+
+
+def init(cfg: ModelConfig, rng) -> dict:
+    dtype = L.dtype_of(cfg.dtype)
+    g, mpg, tail = _group_shape(cfg)
+    k_emb, k_m, k_s, k_t, k_head = jax.random.split(rng, 5)
+    p = {"embed": L.embed_init(k_emb, (cfg.vocab_size, cfg.d_model), dtype),
+         "ln_f": jnp.zeros((cfg.d_model,), dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(k_head, (cfg.d_model, cfg.vocab_size),
+                                    dtype)
+
+    def stack(key, n, init_fn):
+        ks = jax.random.split(key, n)
+        return jax.vmap(lambda k: init_fn(k, cfg, dtype))(ks)
+
+    if g:
+        ks = jax.random.split(k_m, g)
+        p["mamba"] = jax.vmap(lambda k: stack(k, mpg, _init_mamba_block))(ks)
+        p["shared"] = stack(k_s, NUM_SHARED, _init_shared_block)  # [2, ...]
+    if tail:
+        p["tail"] = stack(k_t, tail, _init_mamba_block)
+    return p
+
+
+def _remat(f, cfg: ModelConfig):
+    return L.remat(f, cfg)
+
+
+def _mamba_fn(cfg: ModelConfig):
+    def f(h, bp):
+        x = L.rms_norm(h, bp["ln"], cfg.norm_eps)
+        return h + ssm.apply_mamba2(bp["mamba"], x, cfg.ssm_state), None
+    return f
+
+
+def _shared_apply(cfg: ModelConfig, sp, h, positions):
+    a = L.rms_norm(h, sp["ln1"], cfg.norm_eps)
+    a = L.multi_head_attention(
+        sp["attn"], a, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+        positions=positions, theta=cfg.rope_theta, causal=True,
+        attn_fn=L.pick_attn_fn(cfg, causal=True, window=0))
+    h = h + a
+    m = L.rms_norm(h, sp["ln2"], cfg.norm_eps)
+    return h + L.apply_mlp(sp["mlp"], m, cfg.act)
+
+
+def forward(cfg: ModelConfig, params: dict, tokens):
+    x = params["embed"][tokens]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    g, mpg, tail = _group_shape(cfg)
+    mamba_fn = _mamba_fn(cfg)
+
+    if "mamba" in params:
+        def group_fn(h, xs):
+            gp, parity = xs
+            h, _ = L.scan(_remat(mamba_fn, cfg), h, gp)
+            sp = jax.tree.map(lambda a: a[parity], params["shared"])
+            h = _remat(lambda hh, spp: _shared_apply(cfg, spp, hh, positions),
+                       cfg)(h, sp)
+            return h, None
+
+        parities = jnp.arange(g, dtype=jnp.int32) % NUM_SHARED
+        x, _ = L.scan(group_fn, x, (params["mamba"], parities))
+    if "tail" in params:
+        x, _ = L.scan(_remat(mamba_fn, cfg), x, params["tail"])
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def head_matrix(cfg: ModelConfig, params: dict):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict):
+    h = forward(cfg, params, batch["tokens"])
+    loss, cnt = L.chunked_softmax_xent(h, head_matrix(cfg, params),
+                                       batch["labels"],
+                                       batch.get("loss_mask"))
+    return loss, {"tokens": cnt}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dtype = L.dtype_of(cfg.dtype)
+    g, mpg, tail = _group_shape(cfg)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def rep(tree, n):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape),
+                            tree)
+
+    cache = {"len": jnp.zeros((), jnp.int32)}
+    m1 = ssm.init_mamba2_cache(batch, cfg.d_model, cfg.ssm_state, dtype)
+    if g:
+        cache["mamba"] = rep(rep(m1, mpg), g)
+        cache["attn_k"] = jnp.zeros((g, batch, max_len, hkv, hd), dtype)
+        cache["attn_v"] = jnp.zeros((g, batch, max_len, hkv, hd), dtype)
+    if tail:
+        cache["tail"] = rep(m1, tail)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens):
+    x = params["embed"][tokens]
+    b = x.shape[0]
+    pos = jnp.broadcast_to(cache["len"][None, None], (b, 1)).astype(jnp.int32)
+    g, mpg, tail = _group_shape(cfg)
+    new = dict(cache)
+
+    def mamba_scan(h, xs):
+        bp, st = xs
+        a = L.rms_norm(h, bp["ln"], cfg.norm_eps)
+        y, st = ssm.decode_mamba2(bp["mamba"], a, st, cfg.ssm_state)
+        return h + y, st
+
+    if "mamba" in params:
+        def group_scan(h, xs):
+            gp, parity, cm, ck, cv = xs
+            h, cm = L.scan(mamba_scan, h, (gp, cm))
+            sp = jax.tree.map(lambda a: a[parity], params["shared"])
+            a = L.rms_norm(h, sp["ln1"], cfg.norm_eps)
+            a, ck, cv = L.decode_attention(
+                sp["attn"], a, ck, cv, cache["len"],
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, positions=pos,
+                theta=cfg.rope_theta)
+            h = h + a
+            m = L.rms_norm(h, sp["ln2"], cfg.norm_eps)
+            h = h + L.apply_mlp(sp["mlp"], m, cfg.act)
+            return h, (cm, ck, cv)
+
+        parities = jnp.arange(g, dtype=jnp.int32) % NUM_SHARED
+        x, (cm, ck, cv) = L.scan(
+            group_scan, x, (params["mamba"], parities, cache["mamba"],
+                            cache["attn_k"], cache["attn_v"]))
+        new["mamba"], new["attn_k"], new["attn_v"] = cm, ck, cv
+    if "tail" in params:
+        x, ct = L.scan(mamba_scan, x, (params["tail"], cache["tail"]))
+        new["tail"] = ct
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, 0] @ head_matrix(cfg, params)).astype(jnp.float32)
+    new["len"] = cache["len"] + 1
+    return logits, new
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens, max_len: int = 0):
+    b, s = tokens.shape
+    cap = max_len or s
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    g, mpg, tail = _group_shape(cfg)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    dtype = L.dtype_of(cfg.dtype)
+    x = params["embed"][tokens]
+    new = {"len": jnp.asarray(s, jnp.int32)}
+
+    def mamba_prefill(h, bp):
+        a = L.rms_norm(h, bp["ln"], cfg.norm_eps)
+        # full-sequence apply + final state via the chunked recurrence
+        bsz, sl, d = a.shape
+        z, xbc, dt, d_in, hh = ssm._split_proj(bp["mamba"], a, d,
+                                               cfg.ssm_state)
+        xbc, conv_state = ssm._causal_conv(bp["mamba"], xbc)
+        xs_, bb, cc = jnp.split(xbc, [d_in, d_in + cfg.ssm_state], axis=-1)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + bp["mamba"]["dt_bias"])
+        xhh = xs_.reshape(bsz, sl, hh, ssm.HEAD_DIM)
+        y, st = ssm.ssd_chunked(xhh, dt, bp["mamba"]["a_log"], bb, cc)
+        y = y + xhh.astype(jnp.float32) * \
+            bp["mamba"]["d_skip"][None, None, :, None]
+        y = y.reshape(bsz, sl, d_in).astype(a.dtype)
+        y = L.rms_norm(y * jax.nn.silu(z), bp["mamba"]["norm"])
+        out = y @ bp["mamba"]["out_proj"]
+        return h + out, {"state": st,
+                         "conv": conv_state[:, -(ssm.CONV_WIDTH - 1):]}
+
+    if "mamba" in params:
+        def group_fn(h, xs):
+            gp, parity = xs
+            h, cm = L.scan(mamba_prefill, h, gp)
+            sp = jax.tree.map(lambda a: a[parity], params["shared"])
+            a = L.rms_norm(h, sp["ln1"], cfg.norm_eps)
+            k = L.apply_rope((a @ sp["attn"]["wk"]).reshape(b, s, hkv, hd),
+                             positions, cfg.rope_theta)
+            v = (a @ sp["attn"]["wv"]).reshape(b, s, hkv, hd)
+            a = L.multi_head_attention(
+                sp["attn"], a, num_heads=cfg.num_heads, num_kv_heads=hkv,
+                head_dim=hd, positions=positions, theta=cfg.rope_theta,
+                causal=True)
+            h = h + a
+            m = L.rms_norm(h, sp["ln2"], cfg.norm_eps)
+            h = h + L.apply_mlp(sp["mlp"], m, cfg.act)
+            pad = ((0, 0), (0, cap - s), (0, 0), (0, 0))
+            return h, (cm, jnp.pad(k, pad).astype(dtype),
+                       jnp.pad(v, pad).astype(dtype))
+
+        parities = jnp.arange(g, dtype=jnp.int32) % NUM_SHARED
+        x, (cm, ck, cv) = L.scan(group_fn, x,
+                                       (params["mamba"], parities))
+        new["mamba"], new["attn_k"], new["attn_v"] = cm, ck, cv
+    if "tail" in params:
+        x, ct = L.scan(mamba_prefill, x, params["tail"])
+        new["tail"] = ct
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, -1] @ head_matrix(cfg, params)).astype(jnp.float32)
+    return logits, new

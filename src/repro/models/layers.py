@@ -1,0 +1,361 @@
+"""Shared pure-JAX building blocks for the model zoo.
+
+Functional style: params are nested dicts of jnp arrays; every layer is a
+pair of (init_*, apply) functions. No flax/haiku — the substrate is built
+from scratch per the reproduction scope.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Layer-scan control. Production uses lax.scan (flat HLO, fast compiles at
+# 1000-node scale); the dry-run unrolls so XLA cost_analysis counts every
+# trip (while-loop bodies are otherwise costed ONCE — see launch/roofline).
+# ---------------------------------------------------------------------------
+
+_SCAN_UNROLL = False
+
+
+@contextlib.contextmanager
+def scan_unroll(enable: bool = True):
+    global _SCAN_UNROLL
+    prev = _SCAN_UNROLL
+    _SCAN_UNROLL = enable
+    try:
+        yield
+    finally:
+        _SCAN_UNROLL = prev
+
+
+def remat(f, cfg):
+    """Activation-checkpoint policy selector (cfg.remat):
+    none | block (nothing_saveable; recompute everything) |
+    dots (save matmul outputs — less recompute, more memory; §Perf)."""
+    if cfg.remat == "none":
+        return f
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(f, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def scan(f, init, xs, length=None, *, unroll_ok: bool = True):
+    """lax.scan that fully unrolls under ``scan_unroll()`` (dry-run cost
+    accounting). Token-sequential recurrences pass unroll_ok=False.
+
+    The unrolled path is hand-rolled (static slices in, ONE stack out)
+    rather than lax.scan(unroll=True): scan-emitted unrolling updates the
+    stacked ys/carry buffers with dynamic-update-slice per step, which
+    XLA's cost model charges at full-buffer size per step — a ~L x
+    overcount of HBM bytes for decode caches that are updated in place on
+    real hardware. Static slice + single stack is charged once, matching
+    the TPU execution."""
+    if not (_SCAN_UNROLL and unroll_ok):
+        return jax.lax.scan(f, init, xs, length=length)
+    n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        xi = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = f(carry, xi)
+        ys.append(y)
+    stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys) if ys else None
+    return carry, stacked
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(rng, shape, dtype):
+    return (jax.random.normal(rng, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)
+            + beta.astype(jnp.float32)).astype(dt)
+
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":                      # nemotron squared ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                        # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * inv   # [..., S, hd/2]
+    ang = ang[..., None, :]                            # [..., S, 1, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float,
+                sections: tuple[int, int, int] = (2, 1, 1)):
+    """Qwen2-VL multimodal RoPE. positions3: [3, ..., S] (t, h, w) ids.
+
+    The head_dim/2 frequency slots are split into (t, h, w) sections in the
+    given ratio; each section rotates by its own position stream.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    tot = sum(sections)
+    bounds = [half * sections[0] // tot,
+              half * (sections[0] + sections[1]) // tot]
+    inv = rope_freqs(hd, theta)                        # [half]
+    sect = jnp.zeros((half,), jnp.int32)
+    sect = sect.at[bounds[0]:bounds[1]].set(1).at[bounds[1]:].set(2)
+    # pick the position stream per frequency slot
+    p3 = jnp.moveaxis(positions3, 0, -1)               # [..., S, 3]
+    pos = p3[..., sect]                                # [..., S, half]
+    ang = pos.astype(jnp.float32) * inv
+    ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, dim: int):
+    """Whisper-style fixed sinusoidal embeddings."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    idx = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (idx / max(dim // 2 - 1, 1)))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (reference path — the Pallas kernel mirrors this math)
+# ---------------------------------------------------------------------------
+
+def init_attention(rng, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, dtype) -> Params:
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(ks[0], (d_model, num_heads * head_dim), dtype),
+        "wk": dense_init(ks[1], (d_model, num_kv_heads * head_dim), dtype),
+        "wv": dense_init(ks[2], (d_model, num_kv_heads * head_dim), dtype),
+        "wo": dense_init(ks[3], (num_heads * head_dim, d_model), dtype),
+    }
+
+
+def gqa_scores_mask(q_len: int, kv_len: int, *, causal: bool,
+                    window: int, q_offset=0):
+    """Boolean [q_len, kv_len] mask. q_offset: absolute pos of q[0]."""
+    qp = jnp.arange(q_len)[:, None] + q_offset
+    kp = jnp.arange(kv_len)[None, :]
+    m = jnp.ones((q_len, kv_len), bool)
+    if causal:
+        m &= kp <= qp
+    if window:
+        m &= kp > qp - window
+    return m
+
+
+def multi_head_attention(p: Params, x, *, num_heads: int, num_kv_heads: int,
+                         head_dim: int, positions=None, theta: float = 1e4,
+                         causal: bool = True, window: int = 0,
+                         mrope_positions=None, kv_x=None,
+                         attn_fn=None) -> jnp.ndarray:
+    """Full-sequence GQA attention. x: [B, S, D]. kv_x: cross-attn source."""
+    b, s, _ = x.shape
+    src = x if kv_x is None else kv_x
+    sk = src.shape[1]
+    q = (x @ p["wq"]).reshape(b, s, num_heads, head_dim)
+    k = (src @ p["wk"]).reshape(b, sk, num_kv_heads, head_dim)
+    v = (src @ p["wv"]).reshape(b, sk, num_kv_heads, head_dim)
+    if mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, theta)
+        k = apply_mrope(k, mrope_positions, theta)
+    elif positions is not None:
+        q = apply_rope(q, positions, theta)
+        if kv_x is None:
+            k = apply_rope(k, positions, theta)
+    mask = None
+    if kv_x is None and (causal or window):
+        mask = gqa_scores_mask(s, sk, causal=causal, window=window)
+    if attn_fn is not None:
+        o = attn_fn(q, k, v, mask)
+    else:
+        o = gqa_attention_ref(q, k, v, mask)
+    return o.reshape(b, s, num_heads * head_dim) @ p["wo"]
+
+
+def pick_attn_fn(cfg, *, causal: bool, window: int):
+    """Full-sequence attention backend selector: None (jnp reference,
+    XLA-visible for the dry-run cost model) or the Pallas flash kernel
+    (cfg.use_flash_kernel; the TPU hot-spot path — interpret mode on
+    CPU). The kernel takes the same post-RoPE q/k/v layout."""
+    if not getattr(cfg, "use_flash_kernel", False):
+        return None
+
+    def flash(q, k, v, mask):            # mask encoded via causal/window
+        from repro.kernels import ops
+        return ops.flash_attention(q, k, v, causal=causal, window=window)
+
+    return flash
+
+
+def gqa_attention_ref(q, k, v, mask=None):
+    """Reference attention. q: [B,S,Hq,hd]; k,v: [B,Sk,Hkv,hd]."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    q = q.reshape(b, s, hkv, g, hd)
+    scores = jnp.einsum("bshgd,bthd->bhgst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(hd)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhgst,bthd->bshgd", w, v)
+    return o.reshape(b, s, hq, hd)
+
+
+def decode_attention(p: Params, x, cache_k, cache_v, cache_len, *,
+                     num_heads: int, num_kv_heads: int, head_dim: int,
+                     positions=None, theta: float = 1e4, window: int = 0):
+    """Single-step decode with KV cache.
+
+    x: [B, 1, D]; cache_k/v: [B, C, Hkv, hd] (C = window or max_len);
+    cache_len: scalar current length (== absolute position of the new token).
+    Window layers use a rolling cache of size C=window.
+    Returns (out [B,1,D], new_k, new_v).
+    """
+    b = x.shape[0]
+    cap = cache_k.shape[1]
+    q = (x @ p["wq"]).reshape(b, 1, num_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, 1, num_kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(b, 1, num_kv_heads, head_dim)
+    if positions is not None:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    slot = jnp.mod(cache_len, cap) if window else jnp.minimum(cache_len,
+                                                              cap - 1)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    # valid slots: rolling (window) or prefix (full)
+    idx = jnp.arange(cap)
+    if window:
+        valid = idx < jnp.minimum(cache_len + 1, cap)
+    else:
+        valid = idx <= slot
+    hkv, g = num_kv_heads, num_heads // num_kv_heads
+    qr = q.reshape(b, 1, hkv, g, head_dim)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qr, cache_k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(head_dim)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(cache_v.dtype)
+    o = jnp.einsum("bhgst,bthd->bshgd", w, cache_v)
+    o = o.reshape(b, 1, num_heads * head_dim) @ p["wo"]
+    return o, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, d_model: int, d_ff: int, act: str, dtype) -> Params:
+    ks = jax.random.split(rng, 3)
+    p = {"w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+         "w_down": dense_init(ks[1], (d_ff, d_model), dtype)}
+    if act in ("silu", "gelu"):           # gated variants
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def apply_mlp(p: Params, x, act: str):
+    f = act_fn(act)
+    if "w_gate" in p:
+        return (f(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return f(x @ p["w_up"]) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def chunked_softmax_xent(h, w_emb, labels, mask=None, chunk: int = 512):
+    """Cross-entropy over a huge vocab without materializing [B,S,V] at once.
+
+    h: [B, S, D] final hidden states; w_emb: [D, V]; labels: [B, S] int32.
+    Scans over sequence chunks — peak logits memory is [B, chunk, V].
+    Returns (mean_loss, token_count).
+    """
+    b, s, d = h.shape
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    n_chunks = max(s // chunk, 1)
+    chunk = s // n_chunks
+    hc = h.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    # checkpoint: recompute the [B, chunk, V] logits in the backward pass
+    # instead of saving them (peak logits memory = ONE chunk, fwd and bwd)
+    @jax.checkpoint
+    def body(carry, xs):
+        hx, lx, mx = xs
+        logits = (hx @ w_emb).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        loss = ((logz - gold) * mx).sum()
+        return (carry[0] + loss, carry[1] + mx.sum()), None
+
+    (tot, cnt), _ = scan(body, (jnp.float32(0), jnp.float32(0)),
+                         (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0), cnt

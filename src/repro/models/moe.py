@@ -1,0 +1,243 @@
+"""Mixture-of-Experts decoder (olmoe-1b-7b, kimi-k2-1t-a32b).
+
+Routing is sort-based ("dropped" capacity MoE, MaxText-style, adapted for
+TPU): token->expert assignments are argsorted by expert id, packed into a
+dense [E, C, d] buffer (C = capacity), processed with plain einsums (MXU
+friendly — no ragged ops), and scattered back. Overflow tokens beyond
+capacity are dropped (standard capacity-factor semantics). The expert
+dimension shards over the TP axis (EP), so the pack/unpack gathers lower to
+all-to-alls under GSPMD.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+CAPACITY_FACTOR = 1.25
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN layer
+# ---------------------------------------------------------------------------
+
+def init_moe_ffn(rng, cfg: ModelConfig, dtype):
+    d, e = cfg.d_model, cfg.num_experts
+    dff = cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": L.dense_init(ks[0], (d, e), jnp.float32, scale=0.02),
+        "w_gate": L.dense_init(ks[1], (e, d, dff), dtype),
+        "w_up": L.dense_init(ks[2], (e, d, dff), dtype),
+        "w_down": L.dense_init(ks[3], (e, dff, d), dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = L.init_mlp(ks[4], d,
+                                 cfg.num_shared_experts * dff, cfg.act, dtype)
+    return p
+
+
+def capacity(tokens: int, num_experts: int, k: int) -> int:
+    return max(1, math.ceil(k * tokens / num_experts * CAPACITY_FACTOR))
+
+
+def apply_moe_ffn(p, x, cfg: ModelConfig):
+    """x: [B, S, d] -> ([B, S, d], aux_loss).
+
+    cfg.moe_shard_groups > 0 (§Perf): shard-local dispatch — tokens are
+    routed within G independent groups (aligned with the data shards), so
+    the pack/unpack scatters never address the GLOBAL token buffer and
+    GSPMD lowers dispatch to group-local collectives instead of
+    all-gathering every token to every chip. Capacity is per group; the
+    drop pattern differs only at group boundaries."""
+    b, s, d = x.shape
+    groups = cfg.moe_shard_groups
+    if groups and (b * s) % groups == 0:
+        xg = x.reshape(groups, (b * s) // groups, 1, d)
+        yg, aux = jax.vmap(lambda xx: _moe_ffn_flat(p, xx, cfg))(xg)
+        return yg.reshape(b, s, d), aux.mean()
+    return _moe_ffn_flat(p, x, cfg)
+
+
+def _moe_ffn_flat(p, x, cfg: ModelConfig):
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    c = capacity(t, e, k)
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])           # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                      # [T, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing auxiliary loss (Switch-style).
+    me = probs.mean(axis=0)                                   # [E]
+    ce = jnp.zeros((e,)).at[eidx.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    # ---- pack: sort assignments by expert, drop beyond capacity ----
+    flat_e = eidx.reshape(t * k)
+    sidx = jnp.argsort(flat_e)                                # [T*k]
+    sorted_e = flat_e[sidx]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e))     # [E]
+    pos = jnp.arange(t * k) - seg_start[sorted_e]
+    keep = pos < c
+    slot = jnp.where(keep, sorted_e * c + jnp.clip(pos, 0, c - 1), e * c)
+    src_tok = sidx // k                                       # origin token
+    buf = jnp.zeros((e * c + 1, d), x.dtype).at[slot].set(xf[src_tok])
+    h = buf[:e * c].reshape(e, c, d)
+
+    # ---- expert computation (dense einsums; E shards over TP axis) ----
+    f = L.act_fn(cfg.act)
+    a = f(jnp.einsum("ecd,edf->ecf", h, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", h, p["w_up"])
+    o = jnp.einsum("ecf,efd->ecd", a, p["w_down"])            # [E, C, d]
+
+    # ---- unpack: gather back, unsort, combine with gates ----
+    of = jnp.concatenate([o.reshape(e * c, d),
+                          jnp.zeros((1, d), o.dtype)], axis=0)
+    y_rep = of[jnp.where(keep, slot, e * c)]                  # dropped -> 0
+    y_unsorted = jnp.zeros((t * k, d), x.dtype).at[sidx].set(y_rep)
+    y = (y_unsorted.reshape(t, k, d)
+         * gate[..., None].astype(x.dtype)).sum(axis=1)
+
+    if "shared" in p:
+        y = y + L.apply_mlp(p["shared"], xf, cfg.act)
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+def _block_init(rng, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.num_heads,
+                                 cfg.num_kv_heads, cfg.resolved_head_dim,
+                                 dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "moe": init_moe_ffn(k2, cfg, dtype),
+    }
+
+
+def init(cfg: ModelConfig, rng) -> dict:
+    dtype = L.dtype_of(cfg.dtype)
+    k_emb, k_blocks, k_head = jax.random.split(rng, 3)
+    ks = jax.random.split(k_blocks, cfg.num_layers)
+    p = {
+        "embed": L.embed_init(k_emb, (cfg.vocab_size, cfg.d_model), dtype),
+        "blocks": jax.vmap(lambda k: _block_init(k, cfg, dtype))(ks),
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(k_head, (cfg.d_model, cfg.vocab_size),
+                                    dtype)
+    return p
+
+
+def _block(cfg: ModelConfig, bp, x, positions):
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    h = L.multi_head_attention(
+        bp["attn"], h, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+        positions=positions, theta=cfg.rope_theta, causal=True,
+        attn_fn=L.pick_attn_fn(cfg, causal=True, window=0))
+    x = x + h
+    h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    y, aux = apply_moe_ffn(bp["moe"], h, cfg)
+    return x + y, aux
+
+
+def forward(cfg: ModelConfig, params: dict, tokens):
+    x = params["embed"][tokens]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def block_fn(h, bp):
+        h, aux = _block(cfg, bp, h, positions)
+        return h, aux
+
+    f = L.remat(block_fn, cfg)
+    x, auxes = L.scan(f, x, params["blocks"])
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps), auxes.mean()
+
+
+def head_matrix(cfg: ModelConfig, params: dict):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict):
+    h, aux = forward(cfg, params, batch["tokens"])
+    loss, cnt = L.chunked_softmax_xent(h, head_matrix(cfg, params),
+                                       batch["labels"],
+                                       batch.get("loss_mask"))
+    return loss + 0.01 * aux, {"tokens": cnt, "aux_loss": aux}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dtype = L.dtype_of(cfg.dtype)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((cfg.num_layers, batch, max_len, hkv, hd), dtype),
+        "v": jnp.zeros((cfg.num_layers, batch, max_len, hkv, hd), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens):
+    x = params["embed"][tokens]
+    b = x.shape[0]
+    pos = jnp.broadcast_to(cache["len"][None, None], (b, 1)).astype(jnp.int32)
+
+    def layer_scan(h, xs):
+        bp, ck, cv = xs
+        a = L.rms_norm(h, bp["ln1"], cfg.norm_eps)
+        a, ck, cv = L.decode_attention(
+            bp["attn"], a, ck, cv, cache["len"], num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            positions=pos, theta=cfg.rope_theta)
+        h = h + a
+        m = L.rms_norm(h, bp["ln2"], cfg.norm_eps)
+        y, _ = apply_moe_ffn(bp["moe"], m, cfg)
+        return h + y, (ck, cv)
+
+    x, (nk, nv) = L.scan(layer_scan, x,
+                               (params["blocks"], cache["k"], cache["v"]))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, 0] @ head_matrix(cfg, params)).astype(jnp.float32)
+    return logits, dict(cache, k=nk, v=nv, len=cache["len"] + 1)
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens, max_len: int = 0):
+    b, s = tokens.shape
+    cap = max_len or s
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def layer_fn(h, bp):
+        a = L.rms_norm(h, bp["ln1"], cfg.norm_eps)
+        k = L.apply_rope((a @ bp["attn"]["wk"]).reshape(b, s, hkv, hd),
+                         positions, cfg.rope_theta)
+        v = (a @ bp["attn"]["wv"]).reshape(b, s, hkv, hd)
+        a = L.multi_head_attention(
+            bp["attn"], a, num_heads=cfg.num_heads, num_kv_heads=hkv,
+            head_dim=hd, positions=positions, theta=cfg.rope_theta,
+            causal=True)
+        h = h + a
+        m = L.rms_norm(h, bp["ln2"], cfg.norm_eps)
+        y, _ = apply_moe_ffn(bp["moe"], m, cfg)
+        pad = ((0, 0), (0, cap - s), (0, 0), (0, 0))
+        return h + y, (jnp.pad(k, pad), jnp.pad(v, pad))
+
+    x, (ck, cv) = L.scan(layer_fn, params["embed"][tokens],
+                               params["blocks"])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, -1] @ head_matrix(cfg, params)).astype(jnp.float32)
+    return logits, {"k": ck, "v": cv, "len": jnp.asarray(s, jnp.int32)}

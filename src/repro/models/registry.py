@@ -1,0 +1,147 @@
+"""Model-zoo registry: family -> module with a uniform interface, plus
+batch builders shared by smoke tests, examples, and the dry-run.
+
+Uniform module interface (all pure functions over param pytrees):
+    init(cfg, rng) -> params
+    loss_fn(cfg, params, batch) -> (scalar_loss, metrics)
+    prefill(cfg, params, ...) -> (logits, cache)
+    decode_step(cfg, params, cache, tokens) -> (logits, cache)
+    init_cache(cfg, batch, max_len[, ...]) -> cache
+
+Family 'vlm' reuses the dense module (M-RoPE + prepended patch embeds are
+dense-model features); its modality frontend is a stub: batches carry
+precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import dense, encdec, hybrid, moe, xlstm
+from repro.models import layers as L
+
+_FAMILY = {
+    "dense": dense,
+    "moe": moe,
+    "vlm": dense,
+    "encdec": encdec,
+    "hybrid": hybrid,
+    "xlstm": xlstm,
+}
+
+VLM_VISION_FRACTION = 8       # S_vis = seq_len // 8
+
+
+def get_model(family: str):
+    if family not in _FAMILY:
+        raise KeyError(f"unknown model family {family!r}")
+    return _FAMILY[family]
+
+
+def init_params(cfg: ModelConfig, rng):
+    return get_model(cfg.family).init(cfg, rng)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    return get_model(cfg.family).loss_fn(cfg, params, batch)
+
+
+# ---------------------------------------------------------------------------
+# Batch construction (data for smoke/tests; shapes shared with input_specs)
+# ---------------------------------------------------------------------------
+
+def batch_shapes(cfg: ModelConfig, shape: InputShape,
+                 batch_override: int = 0) -> dict[str, jax.ShapeDtypeStruct]:
+    """Train-batch ShapeDtypeStructs for (cfg, shape)."""
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    dt = L.dtype_of(cfg.dtype)
+    if cfg.family == "encdec":
+        t = encdec.dec_len(s)
+        return {
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+            "tokens": jax.ShapeDtypeStruct((b, t), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, t), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        sv = s // VLM_VISION_FRACTION
+        st = s - sv
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, st), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, st), jnp.int32),
+            "vision_embeds": jax.ShapeDtypeStruct((b, sv, cfg.d_model), dt),
+            # batch-leading layout [B, 3, S] so worker stacking is uniform;
+            # dense.loss_fn moves the stream axis to the front
+            "mrope_positions": jax.ShapeDtypeStruct((b, 3, s), jnp.int32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+
+
+def make_batch(cfg: ModelConfig, shape: InputShape, rng,
+               batch_override: int = 0) -> dict:
+    """Random concrete batch matching ``batch_shapes`` (smoke/tests)."""
+    shapes = batch_shapes(cfg, shape, batch_override)
+    out = {}
+    keys = jax.random.split(rng, len(shapes))
+    for k, (name, sds) in zip(keys, sorted(shapes.items())):
+        if sds.dtype == jnp.int32 and name != "mrope_positions":
+            out[name] = jax.random.randint(k, sds.shape, 0, cfg.vocab_size,
+                                           jnp.int32)
+        elif name == "mrope_positions":
+            out[name] = mrope_positions_for(cfg, sds.shape[0], sds.shape[2])
+        else:
+            out[name] = jax.random.normal(k, sds.shape, jnp.float32) \
+                .astype(sds.dtype) * 0.02
+    return out
+
+
+def mrope_positions_for(cfg: ModelConfig, b: int, s: int) -> jnp.ndarray:
+    """Simple (t, h, w) position streams: a square-ish vision grid for the
+    first S//8 positions, then sequential text ids on all three streams."""
+    sv = s // VLM_VISION_FRACTION
+    side = max(int(np.sqrt(max(sv, 1))), 1)
+    idx = np.arange(s)
+    t = np.where(idx < sv, 0, idx - sv + 1)
+    h = np.where(idx < sv, np.minimum(idx // side, side - 1), idx - sv + 1)
+    w = np.where(idx < sv, idx % side, idx - sv + 1)
+    pos = np.stack([t, h, w]).astype(np.int32)          # [3, S]
+    return jnp.broadcast_to(jnp.asarray(pos)[None], (b, 3, s))
+
+
+# ---------------------------------------------------------------------------
+# Serving entry points (uniform across families)
+# ---------------------------------------------------------------------------
+
+def prefill_kwargs(cfg: ModelConfig, batch: dict) -> dict:
+    if cfg.family == "encdec":
+        return {"frames": batch["frames"], "tokens": batch["tokens"]}
+    return {"tokens": batch["tokens"]}
+
+
+def run_prefill(cfg: ModelConfig, params, batch: dict, max_len: int = 0):
+    m = get_model(cfg.family)
+    if cfg.family == "encdec":
+        return m.prefill(cfg, params, batch["frames"], batch["tokens"],
+                         max_dec_len=max_len)
+    return m.prefill(cfg, params, batch["tokens"], max_len=max_len)
+
+
+def make_decode_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    """Cache stand-in for decode benchmarks/dry-runs: capacity exactly
+    seq_len (a seq_len-1 context + the new token), keeping the sequence
+    dim power-of-two so it shards over mesh axes."""
+    m = get_model(cfg.family)
+    if cfg.family == "encdec":
+        return m.init_cache(cfg, batch, encdec.dec_len(seq_len), seq_len)
+    if cfg.family == "xlstm":
+        return m.init_cache(cfg, batch)
+    return m.init_cache(cfg, batch, seq_len)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    return get_model(cfg.family).decode_step(cfg, params, cache, tokens)

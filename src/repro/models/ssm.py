@@ -1,0 +1,231 @@
+"""Mamba2 / SSD blocks (zamba2 backbone).
+
+The selective-state-space layer is computed with the chunked SSD algorithm:
+intra-chunk terms are attention-like einsums (MXU-friendly — this is the
+TPU-native adaptation; no sequential scan over tokens), and only a tiny
+`lax.scan` over chunks carries the [B, H, n, p] state. Decode is the O(1)
+recurrent update. A sequential-scan reference (`ssd_ref`) is kept for tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+HEAD_DIM = 64          # mamba2 default headdim p
+CONV_WIDTH = 4
+
+
+def num_ssm_heads(d_inner: int) -> int:
+    return max(1, d_inner // HEAD_DIM)
+
+
+def init_mamba2(rng, d_model: int, ssm_state: int, dtype):
+    d_in = 2 * d_model
+    h = num_ssm_heads(d_in)
+    n = ssm_state
+    ks = jax.random.split(rng, 6)
+    conv_ch = d_in + 2 * n
+    return {
+        # projections: z (gate), x, B, C, dt
+        "in_proj": L.dense_init(ks[0], (d_model, 2 * d_in + 2 * n + h),
+                                dtype),
+        "conv_w": L.dense_init(ks[1], (CONV_WIDTH, conv_ch), dtype,
+                               scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": jnp.zeros((d_in,), dtype),
+        "out_proj": L.dense_init(ks[2], (d_in, d_model), dtype),
+    }
+
+
+def _split_proj(p, x, d_model: int, n: int):
+    d_in = 2 * d_model
+    h = num_ssm_heads(d_in)
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * n], axis=-1)
+    return z, xbc, dt, d_in, h
+
+
+def _causal_conv(p, xbc, conv_state=None):
+    """Depthwise causal conv width 4 over [B, S, C]; returns (out, new_state).
+
+    conv_state: [B, CONV_WIDTH-1, C] trailing context (decode path)."""
+    if conv_state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (CONV_WIDTH - 1,) + xbc.shape[2:],
+                        xbc.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xbc], axis=1)           # [B, S+3, C]
+    out = sum(xp[:, i:i + xbc.shape[1]] * p["conv_w"][i]
+              for i in range(CONV_WIDTH)) + p["conv_b"]
+    out = jax.nn.silu(out)
+    new_state = xp[:, -(CONV_WIDTH - 1):]
+    return out, new_state
+
+
+def chunked_recurrence(xh, gate, log_decay, b, c, chunk: int = 256,
+                       state0=None):
+    """Generalized chunked linear recurrence (SSD / mLSTM share this core).
+
+    State recurrence per head:  S_t = exp(log_decay_t) * S_{t-1}
+                                      + gate_t * b_t (x) x_t
+    Output:                     y_t = c_t . S_t
+
+    xh: [B,S,H,p]; gate, log_decay: [B,S,H];
+    b, c: [B,S,n] (shared across heads, mamba2) or [B,S,H,n] (per head, mLSTM).
+    Returns (y [B,S,H,p], final_state [B,H,n,p]). Intra-chunk terms are
+    attention-like einsums (MXU-friendly); only a tiny scan carries state
+    across chunks — the TPU-native adaptation of the recurrence.
+    """
+    bsz, s, h, p = xh.shape
+    n = b.shape[-1]
+    per_head = b.ndim == 4
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+    gate = gate.astype(jnp.float32)
+    # chunk views
+    xc = xh.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    dtc = gate.reshape(bsz, nc, q, h)
+    dac = log_decay.astype(jnp.float32).reshape(bsz, nc, q, h)
+    bshape = (bsz, nc, q, h, n) if per_head else (bsz, nc, q, n)
+    bc = b.reshape(bshape).astype(jnp.float32)
+    cc = c.reshape(bshape).astype(jnp.float32)
+    lcum = jnp.cumsum(dac, axis=2)                       # [B,nc,q,H]
+
+    # ---- intra-chunk (attention-like) ----
+    # M[t, s] = exp(l_t - l_s) * (C_t . B_s) * gate_s   for s <= t
+    rel = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]    # [B,nc,q,q,H]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    rel = jnp.where(tri[None, None, :, :, None], rel, -jnp.inf)
+    if per_head:
+        cb = jnp.einsum("bgthn,bgshn->bgtsh", cc, bc)        # [B,nc,q,q,H]
+        m = jnp.exp(rel) * cb * dtc[:, :, None, :, :]
+    else:
+        cb = jnp.einsum("bgtn,bgsn->bgts", cc, bc)           # [B,nc,q,q]
+        m = jnp.exp(rel) * cb[..., None] * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bgtsh,bgshp->bgthp", m, xc)
+
+    # ---- chunk summaries ----
+    # state contribution of chunk g: sum_s exp(l_end - l_s) gate_s B_s x_s^T
+    dec_end = jnp.exp(lcum[:, :, -1:, :] - lcum)             # [B,nc,q,H]
+    if per_head:
+        states = jnp.einsum("bgsh,bgshn,bgshp->bghnp",
+                            dec_end * dtc, bc, xc)           # [B,nc,H,n,p]
+    else:
+        states = jnp.einsum("bgsh,bgsn,bgshp->bghnp",
+                            dec_end * dtc, bc, xc)
+    chunk_decay = jnp.exp(lcum[:, :, -1, :])                 # [B,nc,H]
+
+    # ---- inter-chunk state recurrence (tiny scan over chunks) ----
+    s0 = (jnp.zeros((bsz, h, n, p), jnp.float32) if state0 is None
+          else state0.astype(jnp.float32))
+
+    def step(carry, xs):
+        st, dec = xs                                        # per-chunk
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                   # emit state BEFORE chunk
+
+    # unroll_ok=False: the body is an elementwise state update (<0.1% of
+    # layer FLOPs) but nc can be 128+ — unrolling it explodes compile time
+    # for no accounting gain (DESIGN.md §8b)
+    final, prev_states = L.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0),
+                   jnp.moveaxis(chunk_decay, 1, 0)), unroll_ok=False)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # [B,nc,H,n,p]
+
+    # ---- inter-chunk contribution: y_t += C_t^T (exp(l_t) * S_chunk_start)
+    dec_in = jnp.exp(lcum)                                   # [B,nc,q,H]
+    if per_head:
+        y_inter = jnp.einsum("bgthn,bghnp->bgthp", cc, prev_states) \
+            * dec_in[..., None]
+    else:
+        y_inter = jnp.einsum("bgtn,bghnp->bgthp", cc, prev_states) \
+            * dec_in[..., None]
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y.astype(xh.dtype), final
+
+
+def ssd_chunked(xh, dt, a_log, b, c, chunk: int = 256, state0=None):
+    """Chunked SSD (mamba2). xh: [B,S,H,p]; dt: [B,S,H]; b,c: [B,S,n].
+
+    Returns (y [B,S,H,p], final_state [B,H,n,p]).
+    """
+    a = -jnp.exp(a_log)                                  # [H]
+    dt = dt.astype(jnp.float32)
+    return chunked_recurrence(xh, gate=dt, log_decay=dt * a, b=b, c=c,
+                              chunk=chunk, state0=state0)
+
+
+def ssd_ref(xh, dt, a_log, b, c, state0=None):
+    """Sequential-scan oracle for tests. Same signature as ssd_chunked."""
+    bsz, s, h, p = xh.shape
+    n = b.shape[-1]
+    a = -jnp.exp(a_log)
+    st0 = (jnp.zeros((bsz, h, n, p), jnp.float32) if state0 is None
+           else state0.astype(jnp.float32))
+
+    def step(st, xs):
+        x_t, dt_t, b_t, c_t = xs
+        dec = jnp.exp(dt_t * a)                              # [B,H]
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dt_t, b_t,
+                         x_t.astype(jnp.float32))
+        st = st * dec[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", c_t, st)
+        return st, y
+
+    xs = (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c.astype(jnp.float32), 1, 0))
+    final, ys = jax.lax.scan(step, st0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype), final
+
+
+def apply_mamba2(p, x, ssm_state_dim: int, *, chunk: int = 256):
+    """Full-sequence Mamba2 block body. x: [B,S,d]. Returns [B,S,d]."""
+    bsz, s, d = x.shape
+    z, xbc, dt, d_in, h = _split_proj(p, x, d, ssm_state_dim)
+    xbc, _ = _causal_conv(p, xbc)
+    xs, b, c = jnp.split(xbc, [d_in, d_in + ssm_state_dim], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xs.reshape(bsz, s, h, HEAD_DIM)
+    y, _ = ssd_chunked(xh, dt, p["a_log"], b, c, chunk=chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, d_in).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"]
+
+
+def init_mamba2_cache(batch: int, d_model: int, ssm_state: int, dtype):
+    d_in = 2 * d_model
+    h = num_ssm_heads(d_in)
+    return {
+        "state": jnp.zeros((batch, h, ssm_state, HEAD_DIM), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, d_in + 2 * ssm_state),
+                          dtype),
+    }
+
+
+def decode_mamba2(p, x, cache, ssm_state_dim: int):
+    """Single-token decode. x: [B,1,d]. Returns (y [B,1,d], new_cache)."""
+    bsz, _, d = x.shape
+    z, xbc, dt, d_in, h = _split_proj(p, x, d, ssm_state_dim)
+    xbc, conv_state = _causal_conv(p, xbc, cache["conv"])
+    xs, b, c = jnp.split(xbc, [d_in, d_in + ssm_state_dim], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,1,H]
+    xh = xs.reshape(bsz, h, HEAD_DIM)
+    a = -jnp.exp(p["a_log"])
+    dec = jnp.exp(dt[:, 0] * a)                                  # [B,H]
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt[:, 0], b[:, 0],
+                     xh.astype(jnp.float32))
+    st = cache["state"] * dec[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", c[:, 0].astype(jnp.float32), st)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"], {"state": st, "conv": conv_state}

@@ -1,0 +1,395 @@
+"""xLSTM blocks (xlstm-1.3b): mLSTM (matrix memory, parallelizable) +
+sLSTM (scalar memory with recurrent memory mixing, sequential).
+
+TPU adaptation (DESIGN.md §3): the mLSTM recurrence
+    C_t = f_t C_{t-1} + i_t v_t k_t^T,  n_t = f_t n_{t-1} + i_t k_t
+is the same linear recurrence as mamba2's SSD, so training/prefill reuse
+``ssm.chunked_recurrence`` with per-head (k, q) playing (B, C) and the
+normalizer n folded in as an extra ones-column of v (MXU einsums; no
+token-sequential scan). The denominator uses max(|n.q|, 1) — the common
+stabilized variant. sLSTM has true memory mixing (recurrent gate inputs)
+and is inherently sequential — a `lax.scan` over tokens, as the paper
+states it is not parallelizable. Block layout: groups of `slstm_every`
+mLSTM blocks followed by one sLSTM block (xLSTM[7:1] -> 48 layers = 6
+groups of 7+1), tail mLSTM blocks if depth doesn't divide.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.ssm import chunked_recurrence
+
+QK_DIM_FACTOR = 0.5      # mLSTM qk dim = head_dim / 2
+UP_FACTOR = 2            # mLSTM block up-projection factor
+
+
+# ---------------------------------------------------------------------------
+# mLSTM layer
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    """(d_up, heads, head_dim_v, head_dim_qk)."""
+    d_up = UP_FACTOR * cfg.d_model
+    h = cfg.num_heads
+    hd = d_up // h
+    return d_up, h, hd, max(int(hd * QK_DIM_FACTOR), 4)
+
+
+def init_mlstm_block(rng, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_up, h, hd, nqk = _mlstm_dims(cfg)
+    ks = jax.random.split(rng, 8)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "w_up": L.dense_init(ks[0], (d, 2 * d_up), dtype),    # (mlstm in, gate)
+        "wq": L.dense_init(ks[1], (d_up, h * nqk), dtype),
+        "wk": L.dense_init(ks[2], (d_up, h * nqk), dtype),
+        "wv": L.dense_init(ks[3], (d_up, d_up), dtype),
+        "w_igate": L.dense_init(ks[4], (d_up, h), jnp.float32, scale=0.01),
+        "b_igate": jnp.full((h,), -3.0, jnp.float32),
+        "w_fgate": L.dense_init(ks[5], (d_up, h), jnp.float32, scale=0.01),
+        "b_fgate": jnp.full((h,), 3.0, jnp.float32),   # init: mostly remember
+        "ln_inner": jnp.zeros((d_up,), dtype),
+        "w_down": L.dense_init(ks[6], (d_up, d), dtype),
+    }
+
+
+def _mlstm_qkv_gates(p, a):
+    """Projections for the mLSTM inner cell. a: [B,S,d_up]."""
+    b, s, d_up = a.shape
+    h = p["w_igate"].shape[-1]
+    nqk = p["wq"].shape[-1] // h
+    hd = d_up // h
+    q = (a @ p["wq"]).reshape(b, s, h, nqk) * (nqk ** -0.5)
+    k = (a @ p["wk"]).reshape(b, s, h, nqk)
+    v = (a @ p["wv"]).reshape(b, s, h, hd)
+    af = a.astype(jnp.float32)
+    igate = af @ p["w_igate"] + p["b_igate"]                 # [B,S,H] pre-act
+    fgate = af @ p["w_fgate"] + p["b_fgate"]
+    return q, k, v, igate, fgate
+
+
+def apply_mlstm(p, x, cfg: ModelConfig, chunk: int = 256):
+    """Full-sequence mLSTM block. x: [B,S,d] -> [B,S,d]."""
+    bsz, s, d = x.shape
+    h_res = x
+    x = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    up = x @ p["w_up"]
+    a, gate = jnp.split(up, 2, axis=-1)                      # [B,S,d_up] each
+    q, k, v, igate, fgate = _mlstm_qkv_gates(p, a)
+    log_f = jax.nn.log_sigmoid(fgate)                        # [B,S,H]
+    i_mult = jnp.exp(igate)                                  # update gate
+    # normalizer: run the same recurrence with an extra ones column on v
+    v_aug = jnp.concatenate(
+        [v.astype(jnp.float32),
+         jnp.ones(v.shape[:-1] + (1,), jnp.float32)], axis=-1)
+    y_aug, _ = chunked_recurrence(v_aug, gate=i_mult, log_decay=log_f,
+                                  b=k, c=q, chunk=chunk)
+    num, den = y_aug[..., :-1], y_aug[..., -1:]
+    hid = num / jnp.maximum(jnp.abs(den), 1.0)               # [B,S,H,hd]
+    hid = hid.reshape(bsz, s, -1).astype(x.dtype)
+    hid = L.rms_norm(hid, p["ln_inner"], cfg.norm_eps)
+    out = (hid * jax.nn.silu(gate)) @ p["w_down"]
+    return h_res + out
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int):
+    d_up, h, hd, nqk = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, h, nqk, hd + 1), jnp.float32),  # aug column
+    }
+
+
+def decode_mlstm(p, x, cache, cfg: ModelConfig):
+    """Single-token mLSTM decode. x: [B,1,d]. O(1) state update."""
+    bsz, _, d = x.shape
+    h_res = x
+    x = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    up = x @ p["w_up"]
+    a, gate = jnp.split(up, 2, axis=-1)
+    q, k, v, igate, fgate = _mlstm_qkv_gates(p, a)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                       # [B,H,*]
+    f = jnp.exp(jax.nn.log_sigmoid(fgate[:, 0]))              # [B,H]
+    i = jnp.exp(igate[:, 0])
+    v_aug = jnp.concatenate(
+        [v.astype(jnp.float32),
+         jnp.ones(v.shape[:-1] + (1,), jnp.float32)], axis=-1)
+    # C_t = f C + i k (x) v_aug
+    C = cache["C"] * f[..., None, None] + \
+        i[..., None, None] * jnp.einsum("bhn,bhp->bhnp",
+                                        k.astype(jnp.float32), v_aug)
+    y_aug = jnp.einsum("bhn,bhnp->bhp", q.astype(jnp.float32), C)
+    num, den = y_aug[..., :-1], y_aug[..., -1:]
+    hid = (num / jnp.maximum(jnp.abs(den), 1.0)).reshape(bsz, 1, -1)
+    hid = L.rms_norm(hid.astype(x.dtype), p["ln_inner"], cfg.norm_eps)
+    out = (hid * jax.nn.silu(gate)) @ p["w_down"]
+    return h_res + out, {"C": C}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM layer (sequential; memory mixing via block-diagonal recurrence)
+# ---------------------------------------------------------------------------
+
+def _slstm_dims(cfg: ModelConfig) -> tuple[int, int]:
+    h = cfg.num_heads
+    return h, cfg.d_model // h
+
+
+def init_slstm_block(rng, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    h, dh = _slstm_dims(cfg)
+    ks = jax.random.split(rng, 7)
+    # 4 gates (z, i, f, o): input projections + block-diag recurrent
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "w_in": L.dense_init(ks[0], (d, 4 * d), dtype),
+        "r": L.dense_init(ks[1], (4, h, dh, dh), jnp.float32, scale=0.05),
+        "b": jnp.concatenate([jnp.zeros((2 * d,)), jnp.full((d,), 3.0),
+                              jnp.zeros((d,))]).astype(jnp.float32),
+        "ln_inner": jnp.zeros((d,), dtype),
+        # post-sLSTM gated FFN (factor 4/3, gated -> ~2x d params)
+        "w_ffn_gate": L.dense_init(ks[2], (d, 4 * d // 3), dtype),
+        "w_ffn_up": L.dense_init(ks[3], (d, 4 * d // 3), dtype),
+        "w_ffn_down": L.dense_init(ks[4], (4 * d // 3, d), dtype),
+        "ln2": jnp.zeros((d,), dtype),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    h, dh = _slstm_dims(cfg)
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.zeros((batch, h), jnp.float32)}
+
+
+def _slstm_step(p, state, x_proj):
+    """One token. x_proj: [B, 4d] precomputed W x + b. state dict of [B,H,dh]."""
+    bsz = x_proj.shape[0]
+    h_heads, dh = p["r"].shape[1], p["r"].shape[2]
+    # recurrent contribution: block-diag R @ h_{t-1}, per gate
+    rec = jnp.einsum("ghde,bhe->bghd", p["r"].astype(jnp.float32),
+                     state["h"])                              # [B,4,H,dh]
+    pre = x_proj.astype(jnp.float32).reshape(bsz, 4, h_heads, dh) + rec
+    z_t = jnp.tanh(pre[:, 0])
+    i_t = pre[:, 1]                                           # log-space
+    f_t = jax.nn.log_sigmoid(pre[:, 2])
+    o_t = jax.nn.sigmoid(pre[:, 3])
+    # stabilizer (per head, scalar): m_t = max(f + m, max_dh i)
+    i_head = i_t.max(axis=-1)                                 # [B,H]
+    m_new = jnp.maximum(f_t.mean(axis=-1) + state["m"], i_head)
+    f_s = jnp.exp(f_t + (state["m"] - m_new)[..., None])
+    i_s = jnp.exp(i_t - m_new[..., None])
+    c = f_s * state["c"] + i_s * z_t
+    n = f_s * state["n"] + i_s
+    h_new = o_t * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h_new, "m": m_new}
+
+
+def apply_slstm(p, x, cfg: ModelConfig, state=None):
+    """Full-sequence sLSTM block (sequential scan). x: [B,S,d]."""
+    bsz, s, d = x.shape
+    h_res = x
+    xn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    x_proj = xn @ p["w_in"] + p["b"].astype(xn.dtype)          # [B,S,4d]
+    st0 = state or init_slstm_state(cfg, bsz)
+
+    def step(st, xp):
+        st = _slstm_step(p, st, xp)
+        return st, st["h"]
+
+    final, hs = L.scan(step, st0, jnp.moveaxis(x_proj, 1, 0),
+                       unroll_ok=False)
+    hid = jnp.moveaxis(hs, 0, 1).reshape(bsz, s, d).astype(x.dtype)
+    hid = L.rms_norm(hid, p["ln_inner"], cfg.norm_eps)
+    x = h_res + hid
+    # gated FFN sub-block
+    m = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    ff = (jax.nn.silu(m @ p["w_ffn_gate"]) * (m @ p["w_ffn_up"])) \
+        @ p["w_ffn_down"]
+    return x + ff, final
+
+
+def decode_slstm(p, x, state, cfg: ModelConfig):
+    """Single-token sLSTM decode. x: [B,1,d]."""
+    bsz, _, d = x.shape
+    h_res = x
+    xn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    x_proj = (xn @ p["w_in"] + p["b"].astype(xn.dtype))[:, 0]
+    st = _slstm_step(p, state, x_proj)
+    hid = st["h"].reshape(bsz, 1, d).astype(x.dtype)
+    hid = L.rms_norm(hid, p["ln_inner"], cfg.norm_eps)
+    x = h_res + hid
+    m = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    ff = (jax.nn.silu(m @ p["w_ffn_gate"]) * (m @ p["w_ffn_up"])) \
+        @ p["w_ffn_down"]
+    return x + ff, st
+
+
+# ---------------------------------------------------------------------------
+# Model: groups of (slstm_every mLSTM blocks + 1 sLSTM block), mLSTM tail
+# ---------------------------------------------------------------------------
+
+def _group_shape(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(num_groups, mlstm_per_group, tail_mlstm)."""
+    per = cfg.slstm_every + 1 if cfg.slstm_every else cfg.num_layers
+    g = cfg.num_layers // per if cfg.slstm_every else 0
+    tail = cfg.num_layers - g * per
+    return g, cfg.slstm_every, tail
+
+
+def init(cfg: ModelConfig, rng) -> dict:
+    dtype = L.dtype_of(cfg.dtype)
+    g, mpg, tail = _group_shape(cfg)
+    k_emb, k_m, k_s, k_t, k_head = jax.random.split(rng, 5)
+    p = {"embed": L.embed_init(k_emb, (cfg.vocab_size, cfg.d_model), dtype),
+         "ln_f": jnp.zeros((cfg.d_model,), dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(k_head, (cfg.d_model, cfg.vocab_size),
+                                    dtype)
+
+    def stack(key, n, init_fn):
+        ks = jax.random.split(key, n)
+        return jax.vmap(lambda k: init_fn(k, cfg, dtype))(ks)
+
+    if g:
+        ks = jax.random.split(k_m, g)
+        p["mlstm"] = jax.vmap(
+            lambda k: stack(k, mpg, init_mlstm_block))(ks)    # [G, mpg, ...]
+        p["slstm"] = stack(k_s, g, init_slstm_block)          # [G, ...]
+    if tail:
+        p["tail"] = stack(k_t, tail, init_mlstm_block)
+    return p
+
+
+def _remat(f, cfg: ModelConfig):
+    return L.remat(f, cfg)
+
+
+def forward(cfg: ModelConfig, params: dict, tokens):
+    x = params["embed"][tokens]
+
+    def mlstm_fn(h, bp):
+        return apply_mlstm(bp, h, cfg), None
+
+    if "mlstm" in params:
+        def group_fn(h, gp):
+            h, _ = L.scan(_remat(mlstm_fn, cfg), h, gp["m"])
+            h, _ = _remat(lambda hh, sp: apply_slstm(sp, hh, cfg),
+                          cfg)(h, gp["s"])
+            return h, None
+
+        x, _ = L.scan(group_fn, x,
+                            {"m": params["mlstm"], "s": params["slstm"]})
+    if "tail" in params:
+        x, _ = L.scan(_remat(mlstm_fn, cfg), x, params["tail"])
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def head_matrix(cfg: ModelConfig, params: dict):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict):
+    h = forward(cfg, params, batch["tokens"])
+    loss, cnt = L.chunked_softmax_xent(h, head_matrix(cfg, params),
+                                       batch["labels"],
+                                       batch.get("loss_mask"))
+    return loss, {"tokens": cnt}
+
+
+# ---------------------------------------------------------------------------
+# Serving: recurrent state cache (constant size -> long_500k decode runs)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0) -> dict:
+    g, mpg, tail = _group_shape(cfg)
+
+    def rep(tree, n):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), tree)
+
+    cache = {"len": jnp.zeros((), jnp.int32)}
+    if g:
+        m1 = init_mlstm_cache(cfg, batch)
+        cache["mlstm"] = rep(rep(m1, mpg), g)                # [G, mpg, ...]
+        cache["slstm"] = rep(init_slstm_state(cfg, batch), g)
+    if tail:
+        cache["tail"] = rep(init_mlstm_cache(cfg, batch), tail)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens):
+    """One-token decode. tokens: [B,1]. Returns (logits [B,V], cache)."""
+    x = params["embed"][tokens]
+    new = dict(cache)
+
+    def mlstm_scan(h, xs):
+        bp, st = xs
+        h, st = decode_mlstm(bp, h, st, cfg)
+        return h, st
+
+    if "mlstm" in params:
+        def group_scan(h, xs):
+            gp_m, gp_s, cm, cs = xs
+            h, cm = L.scan(mlstm_scan, h, (gp_m, cm))
+            h, cs = decode_slstm(gp_s, h, cs, cfg)
+            return h, (cm, cs)
+
+        x, (cm, cs) = L.scan(
+            group_scan, x, (params["mlstm"], params["slstm"],
+                            cache["mlstm"], cache["slstm"]))
+        new["mlstm"], new["slstm"] = cm, cs
+    if "tail" in params:
+        x, ct = L.scan(mlstm_scan, x, (params["tail"], cache["tail"]))
+        new["tail"] = ct
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, 0] @ head_matrix(cfg, params)).astype(jnp.float32)
+    new["len"] = cache["len"] + 1
+    return logits, new
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens, max_len: int = 0):
+    """Prefill: chunked-parallel mLSTM + scan sLSTM, emitting final states."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    cache = init_cache(cfg, b)
+
+    def mlstm_prefill(h, bp):
+        # run parallel path, then recover final state via one recurrence call
+        bsz = h.shape[0]
+        h_res = h
+        hn = L.rms_norm(h, bp["ln"], cfg.norm_eps)
+        up = hn @ bp["w_up"]
+        a, gate = jnp.split(up, 2, axis=-1)
+        q, k, v, igate, fgate = _mlstm_qkv_gates(bp, a)
+        log_f = jax.nn.log_sigmoid(fgate)
+        i_mult = jnp.exp(igate)
+        v_aug = jnp.concatenate(
+            [v.astype(jnp.float32),
+             jnp.ones(v.shape[:-1] + (1,), jnp.float32)], axis=-1)
+        y_aug, st = chunked_recurrence(v_aug, gate=i_mult, log_decay=log_f,
+                                       b=k, c=q)
+        num, den = y_aug[..., :-1], y_aug[..., -1:]
+        hid = (num / jnp.maximum(jnp.abs(den), 1.0)).reshape(bsz, s, -1)
+        hid = L.rms_norm(hid.astype(h.dtype), bp["ln_inner"], cfg.norm_eps)
+        return h_res + (hid * jax.nn.silu(gate)) @ bp["w_down"], {"C": st}
+
+    new = dict(cache)
+    if "mlstm" in params:
+        def group_fn(h, xs):
+            gp_m, gp_s = xs
+            h, cm = L.scan(mlstm_prefill, h, gp_m)
+            h, cs = apply_slstm(gp_s, h, cfg)
+            return h, (cm, cs)
+
+        x, (cm, cs) = L.scan(group_fn, x,
+                                   (params["mlstm"], params["slstm"]))
+        new["mlstm"], new["slstm"] = cm, cs
+    if "tail" in params:
+        x, ct = L.scan(mlstm_prefill, x, params["tail"])
+        new["tail"] = ct
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, -1] @ head_matrix(cfg, params)).astype(jnp.float32)
+    new["len"] = jnp.asarray(s, jnp.int32)
+    return logits, new

@@ -1,0 +1,13 @@
+"""Pure-JAX optimizers (optax-like (init, update) pairs) + LR schedules.
+
+The paper's DSGD is plain SGD (Eq. 3-4): state-free, which is what makes
+the trillion-param archs fit (DESIGN.md §4). Momentum-SGD and AdamW are
+provided for the beyond-paper experiments.
+"""
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adamw,
+    exponential_decay,
+    momentum_sgd,
+    sgd,
+)

@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, gossip collectives, DFL train/serve
+steps, gradient compression, fault tolerance (DESIGN.md §3, §6)."""

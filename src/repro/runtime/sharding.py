@@ -1,0 +1,282 @@
+"""Sharding rules: map every param/batch/cache leaf to a PartitionSpec.
+
+Layout (DESIGN.md §3-4):
+- DFL worker-replica stacking: training state carries a leading worker dim
+  W; sharding it over the arch's ``worker_axes`` gives each mesh slice its
+  own model replica — DFL on TPU. Within a worker: TP over ``model``
+  (column/row-parallel matmuls, EP for MoE experts) and, for the 340B/1T
+  archs, FSDP over ``data``.
+- Serving state has no worker dim: one replica sharded over the whole
+  mesh; decode caches shard batch over (pod, data) and sequence over
+  ``model`` (contraction-dim psum), long-context batch-1 caches shard
+  sequence over (data, model).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+# ---------------------------------------------------------------------------
+# Param rules
+# ---------------------------------------------------------------------------
+
+# name pattern -> (trailing_rank, spec builder(tp, fsdp))
+# spec applies to the trailing `trailing_rank` dims; leading dims replicate.
+_COL = lambda tp, fsdp: (fsdp, tp)           # noqa: E731  [in, out] column-parallel
+_ROW = lambda tp, fsdp: (tp, fsdp)           # noqa: E731  [in, out] row-parallel
+
+_RULES: list[tuple[re.Pattern, int, object]] = [
+    # embeddings / heads
+    (re.compile(r"embed$"), 2, lambda tp, f: (tp, None)),
+    (re.compile(r"lm_head$"), 2, _COL),
+    # MoE expert banks: experts over TP axis (EP); within-expert over FSDP
+    (re.compile(r"moe/w_(gate|up)$"), 3, lambda tp, f: (tp, f, None)),
+    (re.compile(r"moe/w_down$"), 3, lambda tp, f: (tp, None, f)),
+    (re.compile(r"moe/router$"), 2, lambda tp, f: (f, None)),
+    (re.compile(r"moe/shared/w_(gate|up)$"), 2, _COL),
+    (re.compile(r"moe/shared/w_down$"), 2, _ROW),
+    # attention
+    (re.compile(r"attn/w[qkv]$"), 2, _COL),
+    (re.compile(r"attn/wo$"), 2, _ROW),
+    # dense MLP
+    (re.compile(r"mlp/w_(up|gate)$"), 2, _COL),
+    (re.compile(r"mlp/w_down$"), 2, _ROW),
+    # mamba2
+    (re.compile(r"mamba/in_proj$"), 2, _COL),
+    (re.compile(r"mamba/out_proj$"), 2, _ROW),
+    (re.compile(r"mamba/conv_w$"), 2, lambda tp, f: (None, tp)),
+    # xlstm mLSTM
+    (re.compile(r"w_up$"), 2, _COL),
+    (re.compile(r"w(q|k|v)$"), 2, _COL),
+    (re.compile(r"w_down$"), 2, _ROW),
+    (re.compile(r"w_(i|f)gate$"), 2, lambda tp, f: (f, None)),
+    # xlstm sLSTM
+    (re.compile(r"w_in$"), 2, _COL),
+    (re.compile(r"(^|/)r$"), 3, lambda tp, f: (tp, None, None)),
+    (re.compile(r"w_ffn_(gate|up)$"), 2, _COL),
+    (re.compile(r"w_ffn_down$"), 2, _ROW),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def _dims_divisible(shape, spec, mesh: Mesh) -> tuple:
+    """Drop shardings that don't divide the dim (e.g. 15 heads on 16-way)."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(ax if dim % size == 0 else None)
+    return tuple(out)
+
+
+def param_spec(path, leaf_shape, cfg: ModelConfig, mesh: Mesh,
+               *, worker_dim: bool) -> P:
+    """PartitionSpec for one param leaf (with/without worker stacking).
+
+    within_worker == "dp": params replicate inside the worker (tp=None);
+    the worker's batch splits over the idle model axis instead.
+    GQA with kv_heads < TP width: wk/wv stay REPLICATED (kv heads are
+    tiny; replicating them keeps the head reshape shardable — the
+    standard fix for kv < tp)."""
+    name = _path_str(path)
+    tp = _present(cfg.tp_axes, mesh) if cfg.within_worker == "tp" else None
+    fsdp = _present(cfg.fsdp_axes, mesh)
+    shape = leaf_shape[1:] if worker_dim else leaf_shape
+    trailing = ()
+    for pat, rank, builder in _RULES:
+        if pat.search(name) and len(shape) >= rank:
+            trailing = builder(tp, fsdp)
+            break
+    if tp is not None and re.search(r"attn/w[kv]$", name) \
+            and cfg.num_kv_heads % mesh.shape[tp] != 0:
+        trailing = (fsdp, None)                  # replicate kv heads
+    lead = (None,) * (len(shape) - len(trailing))
+    spec = lead + tuple(trailing)
+    spec = _dims_divisible(shape, spec, mesh)
+    if worker_dim:
+        w = worker_axes_in_mesh(cfg, mesh)
+        spec = ((w if w else None),) + spec
+    return P(*spec)
+
+
+def _present(axes, mesh: Mesh):
+    """First axis of `axes` present in the mesh (or None)."""
+    for a in axes:
+        if a in mesh.shape:
+            return a
+    return None
+
+
+def worker_axes_in_mesh(cfg: ModelConfig, mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in cfg.worker_axes if a in mesh.shape)
+
+
+def num_workers(cfg: ModelConfig, mesh: Mesh) -> int:
+    n = 1
+    for a in worker_axes_in_mesh(cfg, mesh):
+        n *= mesh.shape[a]
+    return max(n, 1)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape,
+                    *, worker_dim: bool = True):
+    """Pytree of NamedSharding matching `params_shape` (a ShapeDtypeStruct
+    tree, e.g. from jax.eval_shape)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf.shape, cfg, mesh,
+                             worker_dim=worker_dim)),
+        params_shape)
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, params_shape,
+                 *, worker_dim: bool = True):
+    """Same as param_shardings but raw PartitionSpecs (for shard_map)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf.shape, cfg, mesh,
+                                      worker_dim=worker_dim),
+        params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache rules
+# ---------------------------------------------------------------------------
+
+def train_batch_spec(cfg: ModelConfig, mesh: Mesh, name: str,
+                     leaf_shape) -> P:
+    """Train batches are worker-stacked: [W, b_w, ...]. The within-worker
+    batch dim splits over whatever axes the params leave idle: "data" for
+    FSDP archs (worker = pod), "model" for within-worker-DP archs."""
+    w = worker_axes_in_mesh(cfg, mesh)
+    avail = [a for a in ("data", "model") if a in mesh.shape
+             and a not in w]
+    if cfg.within_worker != "dp":
+        avail = [a for a in avail if a != "model"]
+    chosen: list[str] = []
+    size = 1
+    for a in avail:                       # greedy product divisibility
+        if len(leaf_shape) > 1 and leaf_shape[1] % (size * mesh.shape[a]) == 0:
+            chosen.append(a)
+            size *= mesh.shape[a]
+    spec = [w or None, tuple(chosen) if chosen else None] \
+        + [None] * (len(leaf_shape) - 2)
+    # batch too small to use "model"? fall back to sequence parallelism
+    seq_dim = 3 if name == "mrope_positions" else 2   # [W,b,3,S] vs [W,b,S,..]
+    if cfg.within_worker == "dp" and "model" not in chosen \
+            and len(leaf_shape) > seq_dim \
+            and leaf_shape[seq_dim] % mesh.shape["model"] == 0:
+        spec[seq_dim] = "model"
+    return P(*spec)
+
+
+def train_batch_shardings(cfg: ModelConfig, mesh: Mesh, batch_shapes: dict):
+    out = {}
+    for name, sds in batch_shapes.items():
+        out[name] = NamedSharding(mesh,
+                                  train_batch_spec(cfg, mesh, name, sds.shape))
+    return out
+
+
+def serve_batch_spec(cfg: ModelConfig, mesh: Mesh, leaf_shape) -> P:
+    """Serving batches: [B, ...] batch over (pod, data) when divisible.
+
+    cfg.serve_seq_shard (§Perf): within-worker-DP archs replicate params
+    over "model" — without sequence parallelism every model-chip computes
+    the full forward redundantly. Sharding dim 1 (sequence) over "model"
+    dedups that 16x at the cost of per-layer K/V all-gathers."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    b = leaf_shape[0]
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    first = axes if (axes and b % size == 0) else None
+    spec = [first] + [None] * (len(leaf_shape) - 1)
+    if cfg.serve_seq_shard and cfg.within_worker == "dp" \
+            and "model" in mesh.shape and len(leaf_shape) > 1 \
+            and leaf_shape[1] % mesh.shape["model"] == 0:
+        spec[1] = "model"
+    return P(*spec)
+
+
+def cache_spec(cfg: ModelConfig, mesh: Mesh, path, leaf_shape,
+               batch: int) -> P:
+    """Decode-cache leaves: KV caches [..., B, S, hkv, hd], SSM states.
+
+    batch > 1: batch over (pod, data), sequence over model (psum'd
+    contraction). batch == 1 (long-context): sequence over (data, model).
+    """
+    name = _path_str(path)
+    tp = _present(cfg.tp_axes, mesh)
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dims = list(leaf_shape)
+    spec: list = [None] * len(dims)
+    # find the batch dim: first dim equal to `batch` (after stack dims)
+    try:
+        b_idx = dims.index(batch)
+    except ValueError:
+        b_idx = None
+    if re.search(r"(^|/)(k|v|xk|xv|attn_k|attn_v|local_k|local_v|"
+                 r"global_k|global_v|tail_k|tail_v)$", name):
+        s_idx = b_idx + 1 if b_idx is not None else len(dims) - 3
+        if batch > 1:
+            size = 1
+            for a in dp_axes:
+                size *= mesh.shape[a]
+            if b_idx is not None and batch % size == 0 and dp_axes:
+                spec[b_idx] = dp_axes
+            if tp and dims[s_idx] % mesh.shape[tp] == 0:
+                spec[s_idx] = tp
+        else:
+            axes = tuple(a for a in (*dp_axes, tp) if a)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if axes and dims[s_idx] % size == 0:
+                spec[s_idx] = axes
+    else:
+        # SSM / mLSTM / conv states: shard heads or channels over model
+        if tp:
+            for i in range(len(dims) - 1, -1, -1):
+                if dims[i] % mesh.shape[tp] == 0 and dims[i] >= mesh.shape[tp]:
+                    spec[i] = tp
+                    break
+        if batch > 1 and b_idx is not None:
+            size = 1
+            for a in dp_axes:
+                size *= mesh.shape[a]
+            if batch % size == 0 and dp_axes:
+                spec[b_idx] = dp_axes
+    return P(*spec)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_shapes, batch: int):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_spec(cfg, mesh, path, leaf.shape, batch)
+            if leaf.ndim else P()),
+        cache_shapes)
+
+
+def stack_worker_dim(shapes_tree, w: int):
+    """Add a leading worker dim to every ShapeDtypeStruct leaf."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((w,) + s.shape, s.dtype), shapes_tree)

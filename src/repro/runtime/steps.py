@@ -1,0 +1,235 @@
+"""DFL train / serve step builders for the production mesh.
+
+``make_train_step`` is the paper's round engine in SPMD form: each worker
+(a mesh slice; sharding.py) holds its own replica ([W, ...] stacking),
+runs tau_i masked local SGD steps (Eq. 3 — masked `fori`-style scan, the
+SPMD rendering of heterogeneous trip counts, DESIGN.md §3), then gossips
+along the round topology's matchings (Eq. 5, collectives.py). tau and the
+topology are round-static arguments — each distinct (topology, tau_max)
+compiles once and is cached.
+
+``make_prefill_step`` / ``make_decode_step`` are single-replica serving
+steps for the inference shapes.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import registry
+from repro.runtime import collectives, sharding
+
+
+@dataclass
+class StepBundle:
+    """Everything dryrun/train need for one (arch, shape, mesh) cell."""
+    fn: Callable                      # the jit-able step function
+    in_shardings: Any
+    out_shardings: Any
+    abstract_args: tuple              # ShapeDtypeStructs to lower with
+    donate_argnums: tuple = ()
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+def _split_batch_for_workers(batch_shapes: dict, w: int) -> dict:
+    out = {}
+    for k, s in batch_shapes.items():
+        b = s.shape[0]
+        assert b % w == 0 or w == 1, (k, b, w)
+        out[k] = jax.ShapeDtypeStruct((w, b // w) + s.shape[1:], s.dtype)
+    return out
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
+                    adj: np.ndarray | None = None, tau_max: int = 1,
+                    mixing: str = "uniform", compressed: bool = False,
+                    measure_distances: bool = False) -> StepBundle:
+    """Build the FedHP round step for this cell.
+
+    adj: round topology over the cell's workers (default: ring; the
+    controller swaps in its own topology each round).
+    tau_max: local steps per round (batch carries a leading tau dim when
+    > 1; per-worker taus mask the extra steps).
+    """
+    w = sharding.num_workers(cfg, mesh)
+    worker_axes = sharding.worker_axes_in_mesh(cfg, mesh)
+    if adj is None:
+        adj = _default_adj(w)
+    from repro.core import topology as topo
+    mixfn = (topo.mixing_matrix_metropolis if mixing == "metropolis"
+             else topo.mixing_matrix_uniform)
+    mix = mixfn(adj) if w > 1 else np.ones((1, 1))
+    pairs = collectives.matchings_as_pairs(adj) if w > 1 else []
+    wt = (collectives.matching_weight_tables(adj, mix) if w > 1
+          else np.zeros((0, 1), np.float32))
+
+    # --- abstract shapes -------------------------------------------------
+    rng = jax.random.PRNGKey(0)
+    p1 = jax.eval_shape(lambda: registry.init_params(cfg, rng))
+    params_sds = sharding.stack_worker_dim(p1, w)
+    bs = registry.batch_shapes(cfg, shape)
+    batch_sds = split_sds = _split_batch_for_workers(bs, w)
+    if tau_max > 1:
+        batch_sds = {k: jax.ShapeDtypeStruct(
+            (s.shape[0], tau_max) + s.shape[1:], s.dtype)
+            for k, s in batch_sds.items()}
+    taus_sds = jax.ShapeDtypeStruct((w,), jnp.int32)
+    lr_sds = jax.ShapeDtypeStruct((), jnp.float32)
+
+    # --- shardings --------------------------------------------------------
+    pspecs = sharding.param_pspecs(cfg, mesh, params_sds, worker_dim=True)
+    pshard = sharding.param_shardings(cfg, mesh, params_sds, worker_dim=True)
+    bshard = {}
+    for k, s in batch_sds.items():
+        base = sharding.train_batch_spec(cfg, mesh, k, split_sds[k].shape)
+        if tau_max > 1:                   # [W, tau, b_w, ...]: tau unsharded
+            base = P(base[0], None, *tuple(base)[1:])
+        bshard[k] = NamedSharding(mesh, base)
+    gossip = (collectives.gossip_fn(mesh, worker_axes, pairs, wt, pspecs,
+                                    measure_distances=measure_distances)
+              if w > 1 and pairs else None)
+    gossip_c = (collectives.gossip_compressed_fn(mesh, worker_axes, pairs,
+                                                 wt, pspecs)
+                if compressed and w > 1 and pairs else None)
+
+    def one_worker_loss(p, b):
+        loss, _ = registry.loss_fn(cfg, p, b)
+        return loss
+
+    grad_one = jax.value_and_grad(one_worker_loss)
+
+    def local_steps(params, batch, taus, lr):
+        if tau_max == 1:
+            loss, grads = jax.vmap(grad_one)(params, batch)
+            mask = (taus > 0).astype(jnp.float32)
+            params = jax.tree.map(
+                lambda p, g: p - (lr * mask.reshape(
+                    (w,) + (1,) * (g.ndim - 1)) * g.astype(jnp.float32)
+                ).astype(p.dtype), params, grads)
+            return params, loss.mean()
+
+        def step(carry, k):
+            prm, acc = carry
+            bk = jax.tree.map(lambda x: x[:, k], batch)
+            loss, grads = jax.vmap(grad_one)(prm, bk)
+            mask = (k < taus).astype(jnp.float32)        # Eq. 3, masked
+            prm = jax.tree.map(
+                lambda p, g: p - (lr * mask.reshape(
+                    (w,) + (1,) * (g.ndim - 1)) * g.astype(jnp.float32)
+                ).astype(p.dtype), prm, grads)
+            return (prm, acc + loss.mean()), None
+
+        (params, tot), _ = jax.lax.scan(
+            step, (params, jnp.float32(0.0)), jnp.arange(tau_max))
+        return params, tot / tau_max
+
+    def train_step(params, batch, taus, lr):
+        params, loss = local_steps(params, batch, taus, lr)
+        aux = {}
+        if gossip_c is not None:
+            err = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                               params)
+            params, _ = gossip_c(params, err)
+        elif gossip is not None:
+            if measure_distances:
+                params, dists = gossip(params)
+                aux["neighbor_dists"] = dists
+            else:
+                params = gossip(params)
+        return params, loss, aux
+
+    out_shardings = (pshard, NamedSharding(mesh, P()),
+                     {"neighbor_dists": NamedSharding(mesh, P())}
+                     if measure_distances and gossip is not None else {})
+    in_shardings = (pshard, bshard, NamedSharding(mesh, P()),
+                    NamedSharding(mesh, P()))
+    return StepBundle(
+        fn=train_step,
+        in_shardings=in_shardings,
+        out_shardings=out_shardings,
+        abstract_args=(params_sds, batch_sds, taus_sds, lr_sds),
+        donate_argnums=(0,))
+
+
+def _default_adj(w: int) -> np.ndarray:
+    from repro.core import topology as topo
+    return topo.ring_topology(w) if w > 1 else np.zeros((1, 1), np.int8)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh,
+                      shape: InputShape) -> StepBundle:
+    rng = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(lambda: registry.init_params(cfg, rng))
+    pshard = sharding.param_shardings(cfg, mesh, params_sds,
+                                      worker_dim=False)
+    bs = registry.batch_shapes(cfg, shape)
+    bs = {k: v for k, v in bs.items() if k != "labels"}
+    bshard = {k: NamedSharding(mesh,
+                               sharding.serve_batch_spec(cfg, mesh, v.shape))
+              for k, v in bs.items()}
+
+    def prefill_step(params, batch):
+        logits, cache = registry.run_prefill(cfg, params, batch)
+        return logits
+
+    return StepBundle(
+        fn=prefill_step,
+        in_shardings=(pshard, bshard),
+        out_shardings=NamedSharding(
+            mesh, sharding.serve_batch_spec(
+                cfg, mesh, (shape.global_batch, cfg.vocab_size))),
+        abstract_args=(params_sds, bs))
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh,
+                     shape: InputShape) -> StepBundle:
+    """serve_step: ONE new token against a seq_len KV cache (decode_*)."""
+    rng = jax.random.PRNGKey(0)
+    b = shape.global_batch
+    params_sds = jax.eval_shape(lambda: registry.init_params(cfg, rng))
+    pshard = sharding.param_shardings(cfg, mesh, params_sds,
+                                      worker_dim=False)
+    cache_sds = jax.eval_shape(
+        lambda: registry.make_decode_cache(cfg, b, shape.seq_len))
+    cshard = sharding.cache_shardings(cfg, mesh, cache_sds, b)
+    tok_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tshard = NamedSharding(mesh, sharding.serve_batch_spec(cfg, mesh,
+                                                           (b, 1)))
+
+    def decode_step(params, cache, tokens):
+        logits, cache = registry.decode_step(cfg, params, cache, tokens)
+        return logits, cache
+
+    return StepBundle(
+        fn=decode_step,
+        in_shardings=(pshard, cshard, tshard),
+        out_shardings=(
+            NamedSharding(mesh, sharding.serve_batch_spec(
+                cfg, mesh, (b, cfg.vocab_size))),
+            cshard),
+        abstract_args=(params_sds, cache_sds, tok_sds),
+        donate_argnums=(1,))
+
+
+def make_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+              **train_kw) -> StepBundle:
+    if shape.kind == "train":
+        return make_train_step(cfg, mesh, shape, **train_kw)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, mesh, shape)
+    return make_decode_step(cfg, mesh, shape)

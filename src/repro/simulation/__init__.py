@@ -1,0 +1,10 @@
+"""Heterogeneous EC-cluster simulation substrate (paper Sec. V setup)."""
+from repro.simulation.cluster import (  # noqa: F401
+    DEVICE_PROFILES,
+    SimCluster,
+)
+from repro.simulation.model import (  # noqa: F401
+    accuracy,
+    init_classifier,
+    classifier_loss,
+)

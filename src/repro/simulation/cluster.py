@@ -1,0 +1,81 @@
+"""Heterogeneous edge-cluster model (paper Sec. V-C1).
+
+- Computing: each worker draws per-round per-iteration computing time from a
+  Gaussian whose (mean, std) comes from a commercial-device profile
+  (laptop / Jetson TX2 / Xavier NX / RPi-class), randomly assigned —
+  "tenfold difference in computing capabilities".
+- Communication: per-worker bandwidth fluctuates in [1, 10] Mb/s; link time
+  beta_ij = model_bits / min(bw_i, bw_j) (the slower endpoint gates the
+  P2P transfer).
+- Failure injection: workers die/recover at configured rounds (fault-
+  tolerance tests; DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+# (mean, std) seconds per local iteration — relative scales from the paper's
+# cited commercial devices; a ~10x spread between fastest and slowest.
+DEVICE_PROFILES: dict[str, tuple[float, float]] = {
+    "workstation": (0.05, 0.005),
+    "laptop": (0.10, 0.01),
+    "xavier_nx": (0.20, 0.03),
+    "jetson_tx2": (0.35, 0.05),
+    "rpi4": (0.55, 0.10),
+}
+
+BW_LOW_MBPS = 1.0
+BW_HIGH_MBPS = 10.0
+
+
+@dataclass
+class SimCluster:
+    num_workers: int
+    model_bits: float                    # per-transfer payload (bits)
+    seed: int = 0
+    heterogeneous: bool = True
+    fail_at: dict[int, list[int]] = field(default_factory=dict)
+    # round -> worker ids that die at that round
+    recover_at: dict[int, list[int]] = field(default_factory=dict)
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        profiles = list(DEVICE_PROFILES.values())
+        if self.heterogeneous:
+            pick = rng.integers(0, len(profiles), self.num_workers)
+        else:
+            pick = np.full(self.num_workers, 1)          # all "laptop"
+        self.mu_mean = np.array([profiles[i][0] for i in pick])
+        self.mu_std = np.array([profiles[i][1] for i in pick])
+        self._rng = rng
+        self.alive = np.ones(self.num_workers, bool)
+
+    # -- per-round draws ----------------------------------------------------
+    def sample_mu(self) -> np.ndarray:
+        """(N,) per-iteration computing time for this round."""
+        mu = self._rng.normal(self.mu_mean, self.mu_std)
+        return np.maximum(mu, 1e-3)
+
+    def sample_bandwidth(self) -> np.ndarray:
+        """(N,) worker uplink bandwidth in bit/s, fluctuating 1-10 Mb/s."""
+        mbps = self._rng.uniform(BW_LOW_MBPS, BW_HIGH_MBPS, self.num_workers)
+        return mbps * 1e6
+
+    def sample_beta(self) -> np.ndarray:
+        """(N,N) pairwise link time (s) for one model transfer."""
+        bw = self.sample_bandwidth()
+        pair_bw = np.minimum(bw[:, None], bw[None, :])
+        beta = self.model_bits / pair_bw
+        np.fill_diagonal(beta, 0.0)
+        return beta
+
+    # -- failures -----------------------------------------------------------
+    def advance_round(self, h: int) -> np.ndarray:
+        """Apply scheduled failures/recoveries; returns alive mask."""
+        for w in self.fail_at.get(h, []):
+            self.alive[w] = False
+        for w in self.recover_at.get(h, []):
+            self.alive[w] = True
+        return self.alive.copy()

@@ -1,0 +1,38 @@
+"""Small classifier trained by the DFL simulation (stands in for the
+paper's CNN/AlexNet/VGG on an offline container; DESIGN.md §8)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_classifier(rng, dim: int, hidden: int, num_classes: int):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s1 = 1.0 / jnp.sqrt(dim)
+    s2 = 1.0 / jnp.sqrt(hidden)
+    return {
+        "w1": jax.random.normal(k1, (dim, hidden)) * s1,
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, hidden)) * s2,
+        "b2": jnp.zeros((hidden,)),
+        "w3": jax.random.normal(k3, (hidden, num_classes)) * s2,
+        "b3": jnp.zeros((num_classes,)),
+    }
+
+
+def _logits(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    return h @ params["w3"] + params["b3"]
+
+
+def classifier_loss(params, batch):
+    logits = _logits(params, batch["x"])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["y"][:, None].astype(jnp.int32),
+                               axis=-1)[:, 0]
+    return (logz - gold).mean()
+
+
+def accuracy(params, x, y) -> jnp.ndarray:
+    return (jnp.argmax(_logits(params, x), -1) == y).mean()

@@ -1,0 +1,142 @@
+"""Multi-device runtime checks, run as a subprocess by test_runtime.py
+(device count must be set before jax initializes — never in conftest).
+
+Prints one line per check; exits non-zero on any failure.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import dataclasses
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_smoke_config
+from repro.core import topology as topo
+from repro.models import registry
+from repro.runtime import collectives, sharding, steps
+
+PASS = 0
+FAIL = 0
+
+
+def check(name, cond):
+    global PASS, FAIL
+    if cond:
+        PASS += 1
+        print(f"ok   {name}")
+    else:
+        FAIL += 1
+        print(f"FAIL {name}")
+
+
+def main():
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    w = 4                                   # pod x data workers
+    adj = topo.full_topology(w)
+    mix = topo.mixing_matrix_uniform(adj)
+    pairs = collectives.matchings_as_pairs(adj)
+    wt = collectives.matching_weight_tables(adj, mix)
+
+    # ---- gossip matches the dense mixing matrix --------------------------
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    x = jax.random.normal(jax.random.PRNGKey(0), (w, 6, 32))
+    spec = P(("pod", "data"), None, "model")
+    gossip = collectives.gossip_fn(mesh, ("pod", "data"), pairs, wt, spec)
+    with mesh:
+        y = jax.jit(gossip, in_shardings=(NamedSharding(mesh, spec),),
+                    out_shardings=NamedSharding(mesh, spec))(x)
+    want = jnp.tensordot(jnp.asarray(mix, jnp.float32), x, axes=1)
+    check("gossip == W @ X (Eq. 5)",
+          np.allclose(np.asarray(y), np.asarray(want), atol=1e-5))
+    check("gossip preserves mean",
+          np.allclose(np.asarray(y).mean(0), np.asarray(x).mean(0),
+                      atol=1e-5))
+
+    # ---- gossip with distance measurement --------------------------------
+    gossip_d = collectives.gossip_fn(mesh, ("pod", "data"), pairs, wt, spec,
+                                     measure_distances=True)
+    with mesh:
+        y2, dists = jax.jit(gossip_d)(x)
+    check("gossip(measure) same mix",
+          np.allclose(np.asarray(y2), np.asarray(want), atol=1e-5))
+    # distance of matching 0 equals ||x_i - x_partner|| for matched pairs
+    d0 = np.linalg.norm(
+        (np.asarray(x)[pairs[0][0][0]] - np.asarray(x)[pairs[0][0][1]]))
+    check("consensus distance correct (Alg.1 l.9)",
+          np.allclose(float(np.asarray(dists)[0]), d0, rtol=1e-4))
+
+    # ---- compressed gossip approximates the uncompressed one -------------
+    gossip_c = collectives.gossip_compressed_fn(mesh, ("pod", "data"),
+                                                pairs, wt, spec)
+    err0 = jnp.zeros_like(x)
+    with mesh:
+        yc, err = jax.jit(gossip_c)(x, err0)
+    rel = np.linalg.norm(np.asarray(yc) - np.asarray(want)) / \
+        np.linalg.norm(np.asarray(want))
+    check(f"int8 gossip close (rel={rel:.4f})", rel < 0.02)
+    check("error feedback nonzero", float(jnp.abs(err).max()) > 0)
+
+    # ---- full train step on a RING (sparse) topology ----------------------
+    # (a full graph with uniform weights is exact averaging — replicas
+    # would be identical after gossip, which is correct but untestable
+    # for divergence; the ring keeps them distinct)
+    cfg = get_smoke_config("smollm-360m")
+    cfg = dataclasses.replace(cfg, worker_axes=("pod", "data"))
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=32,
+                                global_batch=8)
+    ring = topo.ring_topology(w)
+    bundle = steps.make_train_step(cfg, mesh, shape, adj=ring, tau_max=2,
+                                   measure_distances=True)
+    rng = jax.random.PRNGKey(1)
+    p1 = registry.init_params(cfg, rng)
+    params = jax.tree.map(lambda l: jnp.broadcast_to(l[None],
+                                                     (w,) + l.shape), p1)
+    step_fn = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                      out_shardings=bundle.out_shardings)
+    taus = jnp.array([2, 1, 2, 1], jnp.int32)       # heterogeneous taus
+    # memorize ONE fixed batch -> loss must decrease
+    batch = registry.make_batch(cfg, shape, jax.random.PRNGKey(10))
+    batch = jax.tree.map(
+        lambda x: jnp.broadcast_to(
+            x.reshape((w, x.shape[0] // w) + x.shape[1:])[:, None],
+            (w, 2, x.shape[0] // w) + x.shape[1:]), batch)
+    losses = []
+    for i in range(6):
+        params, loss, aux = step_fn(params, batch, taus, jnp.float32(0.05))
+        losses.append(float(loss))
+    check(f"train_step loss decreases ({losses[0]:.3f}->{losses[-1]:.3f})",
+          losses[-1] < losses[0])
+    check("train_step reports distances",
+          "neighbor_dists" in aux and np.isfinite(
+              np.asarray(aux["neighbor_dists"])).all())
+
+    # ---- heterogeneous taus + sparse gossip -> replicas differ (DFL) -----
+    check("worker replicas diverge (DFL, not DP)",
+          not np.allclose(np.asarray(jax.tree.leaves(params)[0][0]),
+                          np.asarray(jax.tree.leaves(params)[0][1])))
+
+    # ---- checkpoint roundtrip with worker stacking + elastic reshard -----
+    from repro.checkpoint import save_checkpoint, load_checkpoint
+    from repro.checkpoint.store import elastic_reshard
+    with tempfile.TemporaryDirectory() as d:
+        state = jax.tree.map(np.asarray, params)
+        save_checkpoint(d, 3, state)
+        restored, meta = load_checkpoint(d, state)
+        check("checkpoint roundtrip",
+              all(np.array_equal(a, b) for a, b in
+                  zip(jax.tree.leaves(state), jax.tree.leaves(restored))))
+        r6 = elastic_reshard(restored, 6)
+        check("elastic reshard 4->6",
+              jax.tree.leaves(r6)[0].shape[0] == 6 and np.array_equal(
+                  jax.tree.leaves(r6)[0][4], jax.tree.leaves(state)[0][0]))
+
+    print(f"{PASS} passed, {FAIL} failed")
+    return 1 if FAIL else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,9 @@
+"""Shared pytest config. NOTE (spec): never set
+xla_force_host_platform_device_count here — smoke tests and benches must
+see 1 device; multi-device tests run in subprocesses."""
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers",
+                            "slow: long-running multi-device test")

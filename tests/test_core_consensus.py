@@ -1,0 +1,89 @@
+"""Tests for consensus-distance estimation (Eq. 7-9, 36-39, 43)."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import topology as topo
+from repro.core.consensus import (
+    ConsensusTracker,
+    consensus_distance_to_mean,
+    floyd_warshall_estimate,
+    measured_distance_matrix,
+    pairwise_distances,
+)
+
+
+def _random_models(n, p, seed):
+    return np.random.default_rng(seed).normal(size=(n, p))
+
+
+def test_pairwise_matches_direct():
+    x = _random_models(6, 40, 0)
+    d = pairwise_distances(x)
+    for i in range(6):
+        for j in range(6):
+            assert np.isclose(d[i, j], np.linalg.norm(x[i] - x[j]), atol=1e-8)
+
+
+@given(st.integers(2, 10), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_fw_estimate_upper_bounds_true_distance(n, seed):
+    """Triangle-inequality estimate (Eq. 37) never underestimates."""
+    x = _random_models(n, 16, seed)
+    true = pairwise_distances(x)
+    adj = topo.ring_topology(n)
+    est = floyd_warshall_estimate(measured_distance_matrix(adj, true))
+    assert (est >= true - 1e-9).all()
+    # measured edges are exact
+    mask = adj > 0
+    assert np.allclose(est[mask], true[mask])
+
+
+def test_fw_estimate_exact_on_full_topology():
+    x = _random_models(8, 32, 1)
+    true = pairwise_distances(x)
+    adj = topo.full_topology(8)
+    est = floyd_warshall_estimate(measured_distance_matrix(adj, true))
+    assert np.allclose(est, true)
+
+
+def test_tracker_budget_zero_for_full_topology():
+    """Eq. (36): fully-connected topology -> D^{h+1} bound is 0."""
+    n = 6
+    tr = ConsensusTracker(n)
+    x = _random_models(n, 8, 2)
+    adj = topo.full_topology(n)
+    tr.update(adj, pairwise_distances(x), mean_update_norm=1.0)
+    assert tr.average_consensus_bound(adj) == 0.0
+    assert tr.satisfies_budget(adj)
+
+
+def test_tracker_dmax_ema():
+    tr = ConsensusTracker(4, beta2=0.5)
+    adj = topo.full_topology(4)
+    d = np.zeros((4, 4))
+    tr.update(adj, d, mean_update_norm=2.0)
+    assert np.isclose(tr.d_max, 2.0)
+    tr.update(adj, d, mean_update_norm=4.0)
+    assert np.isclose(tr.d_max, 0.5 * 2.0 + 0.5 * 4.0)
+
+
+def test_tracker_ema_smooths_unmeasured_only():
+    n = 5
+    tr = ConsensusTracker(n, beta1=0.5)
+    x = _random_models(n, 8, 3)
+    true = pairwise_distances(x)
+    ring = topo.ring_topology(n)
+    tr.update(ring, true, 1.0)
+    first = tr.dist.copy()
+    # second round with the same measurements: measured entries unchanged,
+    # unmeasured entries EMA-converge toward the FW estimate
+    tr.update(ring, true, 1.0)
+    mask = ring > 0
+    assert np.allclose(tr.dist[mask], first[mask])
+
+
+def test_consensus_distance_to_mean():
+    x = np.stack([np.zeros(4), np.ones(4) * 2])
+    d = consensus_distance_to_mean(x)
+    assert np.allclose(d, [2.0, 2.0])  # mean=1 -> each at L2 distance 2

@@ -1,0 +1,152 @@
+"""Tests for the FedHP adaptive control algorithm (Alg. 3)."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import topology as topo
+from repro.core.consensus import ConsensusTracker, pairwise_distances
+from repro.core.controller import (
+    AdaptiveController,
+    equalized_taus,
+    evaluate_topology,
+    prune_dead,
+    theory_tau_star,
+)
+
+
+def _setup(n=8, seed=0, hetero=3.0):
+    rng = np.random.default_rng(seed)
+    mu = rng.uniform(1.0, hetero, size=n)          # per-iter compute time
+    beta = rng.uniform(0.5, 5.0, size=(n, n))
+    beta = (beta + beta.T) / 2
+    np.fill_diagonal(beta, 0.0)
+    x = rng.normal(size=(n, 32))
+    return mu, beta, x
+
+
+def _tracker(n, adj, x, d_scale=100.0):
+    tr = ConsensusTracker(n)
+    tr.update(adj, pairwise_distances(x), mean_update_norm=d_scale)
+    return tr
+
+
+def test_theory_tau_star_bounds_and_fallback():
+    assert theory_tau_star(8, 2.0, 1.0, 100, 0.1, 1.0, tau_max=50) >= 1
+    assert theory_tau_star(8, 0.0, 1.0, 100, 0.1, 1.0, tau_max=50) == 25
+    assert theory_tau_star(8, 2.0, 0.0, 100, 0.1, 0.0, tau_max=50) == 25
+    # monotone: more noise (sigma) -> smaller tau*
+    hi = theory_tau_star(8, 2.0, 1.0, 100, 0.1, 0.5, tau_max=1000)
+    lo = theory_tau_star(8, 2.0, 1.0, 100, 0.1, 2.0, tau_max=1000)
+    assert hi >= lo
+
+
+def test_equalized_taus_fast_worker_more_steps():
+    """Eq. (40): higher-capability workers get larger tau."""
+    n = 6
+    mu = np.array([1.0, 1.0, 2.0, 2.0, 4.0, 8.0])
+    beta = np.full((n, n), 1.0)
+    np.fill_diagonal(beta, 0.0)
+    adj = topo.full_topology(n)
+    taus, pace = equalized_taus(adj, mu, beta, tau_star=16, tau_max=50)
+    assert pace == 0 or pace == 1
+    assert taus[0] >= taus[2] >= taus[4] >= taus[5] >= 1
+    # equalization: all t_i <= pace time (up to tau >= 1 clamp)
+    t = taus * mu + 1.0
+    assert (t[:4] <= t[pace] + mu[:4]).all()
+
+
+def test_evaluate_topology_waiting_time():
+    mu, beta, _ = _setup()
+    adj = topo.full_topology(8)
+    d = evaluate_topology(adj, mu, beta, tau_star=10, tau_max=50)
+    assert d.round_time > 0
+    assert 0 <= d.waiting_time <= d.round_time
+
+
+def test_controller_improves_round_time_vs_base():
+    """Greedy link removal must never *increase* predicted round time."""
+    n = 10
+    mu, beta, x = _setup(n, seed=1)
+    base = topo.full_topology(n)
+    ctl = AdaptiveController(base, tau_max=50)
+    tr = _tracker(n, base, x)
+    d0 = evaluate_topology(base, mu, beta, 10, 50)
+    dec = ctl.decide(mu, beta, tr, f1=2.0, smooth_l=1.0, sigma=1.0,
+                     eta=0.1, rounds=100)
+    assert dec.round_time <= d0.round_time + 1e-9
+    assert topo.is_connected(dec.adj)
+    assert tr.satisfies_budget(dec.adj)
+
+
+def test_controller_respects_tight_consensus_budget():
+    """With a tiny D_max no link may be removed -> base topology returned."""
+    n = 6
+    mu, beta, x = _setup(n, seed=2)
+    base = topo.full_topology(n)
+    ctl = AdaptiveController(base, tau_max=50)
+    tr = _tracker(n, base, x, d_scale=1e-9)  # near-zero budget
+    dec = ctl.decide(mu, beta, tr, f1=2.0, smooth_l=1.0, sigma=1.0,
+                     eta=0.1, rounds=100)
+    assert (dec.adj == base).all()
+
+
+def test_controller_prunes_slow_links_with_loose_budget():
+    n = 8
+    mu, beta, x = _setup(n, seed=3)
+    # one pathologically slow link
+    beta[0, 1] = beta[1, 0] = 1e3
+    base = topo.full_topology(n)
+    ctl = AdaptiveController(base, tau_max=50)
+    tr = _tracker(n, base, x, d_scale=1e9)  # effectively unconstrained
+    dec = ctl.decide(mu, beta, tr, f1=2.0, smooth_l=1.0, sigma=1.0,
+                     eta=0.1, rounds=100)
+    assert dec.adj[0, 1] == 0, "slowest link should be pruned"
+    assert topo.is_connected(dec.adj)
+
+
+@given(st.integers(4, 12), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_controller_invariants(n, seed):
+    mu, beta, x = _setup(n, seed)
+    base = topo.full_topology(n)
+    ctl = AdaptiveController(base, tau_max=30)
+    tr = _tracker(n, base, x, d_scale=float(
+        np.random.default_rng(seed).uniform(0.1, 1e3)))
+    dec = ctl.decide(mu, beta, tr, f1=2.0, smooth_l=1.0, sigma=1.0,
+                     eta=0.1, rounds=50)
+    topo.validate_topology(dec.adj)
+    assert topo.is_connected(dec.adj)
+    assert tr.satisfies_budget(dec.adj)
+    assert (dec.taus >= 1).all() and (dec.taus <= 30).all()
+    # matchings cover the decided topology exactly
+    cover = np.zeros_like(dec.adj)
+    for m in dec.matchings:
+        for (i, j) in m:
+            cover[i, j] = cover[j, i] = 1
+    assert (cover == dec.adj).all()
+
+
+def test_prune_dead_repairs_connectivity():
+    n = 6
+    adj = topo.ring_topology(n)
+    alive = np.array([True, False, True, True, False, True])
+    pruned = prune_dead(adj, alive)
+    dead = np.nonzero(~alive)[0]
+    assert pruned[dead].sum() == 0 and pruned[:, dead].sum() == 0
+    live = np.nonzero(alive)[0]
+    assert topo.is_connected(pruned[np.ix_(live, live)])
+
+
+def test_controller_with_failures():
+    n = 8
+    mu, beta, x = _setup(n, seed=5)
+    base = topo.ring_topology(n)
+    ctl = AdaptiveController(base, tau_max=50)
+    tr = _tracker(n, base, x, d_scale=10.0)
+    alive = np.ones(n, dtype=bool)
+    alive[[2, 5]] = False
+    dec = ctl.decide(mu, beta, tr, f1=2.0, smooth_l=1.0, sigma=1.0,
+                     eta=0.1, rounds=100, alive=alive)
+    assert dec.adj[2].sum() == 0 and dec.adj[5].sum() == 0
+    live = np.nonzero(alive)[0]
+    assert topo.is_connected(dec.adj[np.ix_(live, live)])

@@ -1,0 +1,102 @@
+"""Unit + property tests for repro.core.topology."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import topology as topo
+
+
+def test_ring_and_full_shapes():
+    for n in (2, 3, 8, 30):
+        r = topo.ring_topology(n)
+        f = topo.full_topology(n)
+        topo.validate_topology(r)
+        topo.validate_topology(f)
+        assert topo.is_connected(r) and topo.is_connected(f)
+        assert f.sum() == n * (n - 1)
+
+
+def test_algebraic_connectivity_matches_bfs():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        n = int(rng.integers(2, 12))
+        a = topo.erdos_topology(n, 0.4, rng)
+        assert topo.is_connected(a) == (topo.algebraic_connectivity(a) > 1e-9)
+    # a deliberately disconnected graph
+    a = np.zeros((4, 4), dtype=np.int8)
+    a[0, 1] = a[1, 0] = 1
+    a[2, 3] = a[3, 2] = 1
+    assert not topo.is_connected(a)
+    assert topo.algebraic_connectivity(a) < 1e-9
+
+
+@given(st.integers(min_value=2, max_value=16), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_mixing_matrices_doubly_stochastic(n, seed):
+    rng = np.random.default_rng(seed)
+    a = topo.erdos_topology(n, 0.5, rng)
+    for fn in (topo.mixing_matrix_uniform, topo.mixing_matrix_metropolis):
+        w = fn(a)
+        assert np.allclose(w.sum(axis=0), 1.0)
+        assert np.allclose(w.sum(axis=1), 1.0)
+        assert np.allclose(w, w.T)
+        assert (w >= -1e-12).all()
+        # support: w_ij > 0 only on edges or diagonal
+        off = w - np.diag(np.diag(w))
+        assert ((off > 1e-12) <= (a > 0)).all()
+
+
+@given(st.integers(min_value=2, max_value=20), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_spectral_gap_less_than_one_iff_connected(n, seed):
+    rng = np.random.default_rng(seed)
+    a = topo.erdos_topology(n, 0.5, rng)
+    w = topo.mixing_matrix_uniform(a)
+    rho = topo.spectral_gap_rho(w)
+    assert 0.0 <= rho < 1.0  # Assumption 4 holds for connected graphs
+
+
+def test_rho_fully_connected_is_zero_and_ring_is_large():
+    w_full = topo.mixing_matrix_uniform(topo.full_topology(36))
+    assert topo.spectral_gap_rho(w_full) < 1e-10
+    w_ring = topo.mixing_matrix_uniform(topo.ring_topology(36))
+    rho = topo.spectral_gap_rho(w_ring)
+    assert rho > 0.95  # paper Sec III: ~0.99 for ring of 36
+
+
+@given(st.integers(min_value=2, max_value=16), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_matching_decomposition_partitions_edges(n, seed):
+    rng = np.random.default_rng(seed)
+    a = topo.erdos_topology(n, 0.5, rng)
+    matchings = topo.matching_decomposition(a)
+    seen = set()
+    for m in matchings:
+        verts = [v for e in m for v in e]
+        assert len(verts) == len(set(verts)), "matching has shared vertex"
+        for e in m:
+            assert a[e[0], e[1]] == 1
+            assert e not in seen
+            seen.add(e)
+    assert len(seen) == a.sum() // 2, "every edge exactly once"
+    # greedy bound: <= 2*Delta - 1
+    delta = int(a.sum(axis=1).max())
+    assert len(matchings) <= max(1, 2 * delta - 1)
+
+
+def test_matchings_to_perms_involutions():
+    a = topo.erdos_topology(8, 0.5, np.random.default_rng(3))
+    ms = topo.matching_decomposition(a)
+    perms = topo.matchings_to_perms(ms, 8)
+    for row in perms:
+        assert (row[row] == np.arange(8)).all()  # involution
+
+
+def test_validate_topology_rejects_bad():
+    with pytest.raises(ValueError):
+        topo.validate_topology(np.ones((3, 3), dtype=np.int8))  # self loops
+    bad = np.zeros((3, 3), dtype=np.int8)
+    bad[0, 1] = 1  # asymmetric
+    with pytest.raises(ValueError):
+        topo.validate_topology(bad)

@@ -1,0 +1,178 @@
+"""Pallas kernel validation (interpret=True on CPU) against ref.py oracles:
+fixed-shape allclose + hypothesis sweeps over shapes/dtypes (deliverable c).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.consensus_dist import consensus_dist_2d
+from repro.kernels.gossip_mix import gossip_mix_2d
+from repro.kernels.quantize_block import (BLOCK_COLS, BLOCK_ROWS,
+                                          dequantize_block_2d,
+                                          quantize_block_2d)
+
+KEY = jax.random.PRNGKey(42)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64),
+                                           (False, 0)])
+def test_flash_attention_vs_ref(dtype, causal, window):
+    b, hq, hkv, s, hd = 2, 4, 2, 256, 64
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (b, hq, s, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (b, hkv, s, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (b, hkv, s, hd), jnp.float32).astype(dtype)
+    out = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              block_q=128, block_k=128, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s_blocks=st.integers(1, 3),
+    hq_groups=st.sampled_from([(2, 1), (4, 2), (8, 2)]),
+    hd=st.sampled_from([64, 128]),
+    causal=st.booleans(),
+)
+def test_flash_attention_hypothesis(s_blocks, hq_groups, hd, causal):
+    hq, hkv = hq_groups
+    s = 128 * s_blocks
+    q = jax.random.normal(KEY, (1, hq, s, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, hkv, s, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, hkv, s, hd))
+    out = flash_attention_fwd(q, k, v, causal=causal, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_ops_wrapper_padding():
+    """ops.flash_attention pads ragged seq lens and matches the model-layout
+    reference used by the transformer stack."""
+    from repro.models import layers as L
+    b, s, hq, hkv, hd = 1, 100, 4, 2, 64       # s=100: needs padding
+    q = jax.random.normal(KEY, (b, s, hq, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 3), (b, s, hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (b, s, hkv, hd))
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    mask = L.gqa_scores_mask(s, s, causal=True, window=0)
+    want = L.gqa_attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# gossip mix
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(1, 6), rows=st.integers(1, 3),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+def test_gossip_mix_hypothesis(k, rows, dtype):
+    r, c = 8 * rows, 1024
+    x = jax.random.normal(KEY, (r, c), jnp.float32).astype(dtype)
+    u = jax.random.normal(jax.random.fold_in(KEY, k), (k, r, c),
+                          jnp.float32).astype(dtype)
+    w = jax.random.uniform(jax.random.fold_in(KEY, 9), (k,),
+                           minval=0.0, maxval=1.0 / (k + 1))
+    out = gossip_mix_2d(x, u, w, interpret=True)
+    want = ref.gossip_mix_ref(x, u, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_gossip_mix_flat_wrapper():
+    n = 5000                                  # ragged -> padding path
+    x = jax.random.normal(KEY, (n,))
+    u = jax.random.normal(jax.random.fold_in(KEY, 1), (3, n))
+    w = jnp.array([0.2, 0.3, 0.1])
+    out = ops.gossip_mix(x, u, w, interpret=True)
+    want = x + jnp.tensordot(w, u - x[None], axes=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+def test_gossip_mix_preserves_average():
+    """Doubly-stochastic mixing preserves the network average (the DFL
+    invariant behind Eq. 5)."""
+    n = ops.TILE
+    x0 = jax.random.normal(KEY, (n,))
+    x1 = jax.random.normal(jax.random.fold_in(KEY, 1), (n,))
+    w = jnp.array([0.5])
+    y0 = ops.gossip_mix(x0, x1[None], w, interpret=True)
+    y1 = ops.gossip_mix(x1, x0[None], w, interpret=True)
+    np.testing.assert_allclose(np.asarray(y0 + y1), np.asarray(x0 + x1),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# consensus distance
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(1, 5), rows=st.integers(1, 3))
+def test_consensus_dist_hypothesis(k, rows):
+    r, c = 8 * rows, 1024
+    x = jax.random.normal(KEY, (r, c))
+    u = jax.random.normal(jax.random.fold_in(KEY, k + 7), (k, r, c))
+    out = consensus_dist_2d(x, u, interpret=True)
+    want = ref.consensus_dist_ref(x, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4)
+
+
+def test_consensus_dist_flat_matches_norm():
+    n = 3000
+    x = jax.random.normal(KEY, (n,))
+    u = jax.random.normal(jax.random.fold_in(KEY, 5), (2, n))
+    out = ops.consensus_dist(x, u, interpret=True)
+    want = jnp.linalg.norm(u - x[None], axis=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantize
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(1, 4), scale=st.floats(1e-3, 1e3))
+def test_quantize_roundtrip_hypothesis(rows, scale):
+    r, c = BLOCK_ROWS * rows, BLOCK_COLS
+    x = jax.random.normal(KEY, (r, c)) * scale
+    q, s = quantize_block_2d(x, interpret=True)
+    qr, sr = ref.quantize_block_ref(x, BLOCK_ROWS, BLOCK_COLS)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s).ravel(),
+                               np.asarray(sr).ravel(), rtol=1e-6)
+    # round trip error bounded by scale/2 per element
+    y = dequantize_block_2d(q, s, interpret=True)
+    err = np.abs(np.asarray(y) - np.asarray(x))
+    bound = np.repeat(np.repeat(np.asarray(s), BLOCK_ROWS, 0),
+                      BLOCK_COLS, 1) * 0.5 + 1e-6
+    assert (err <= bound).all()
+
+
+def test_quantize_flat_roundtrip():
+    n = 10_000
+    x = jax.random.normal(KEY, (n,)) * 3.0
+    q, s, n_out = ops.quantize(x, interpret=True)
+    y = ops.dequantize(q, s, n, interpret=True)
+    assert y.shape == x.shape
+    # max error = half an int8 step of the per-tile scale
+    assert float(jnp.max(jnp.abs(y - x))) <= float(jnp.max(s)) * 0.51

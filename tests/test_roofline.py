@@ -1,0 +1,76 @@
+"""Roofline derivation unit tests: HLO collective parsing + term math."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.launch import roofline as rl
+
+HLO = """
+HloModule jit_step
+
+%region_0 (a: f32[], b: f32[]) -> f32[] {
+  ROOT %add = f32[] add(%a, %b)
+}
+
+ENTRY %main {
+  %p0 = bf16[2,6144]{1,0} parameter(0)
+  %p1 = f32[128,1024]{1,0} parameter(1)
+  %ag = bf16[32,6144]{1,0} all-gather(%p0), replica_groups=[16,16]<=[256]
+  %ar = f32[128,1024]{1,0} all-reduce(%p1), to_apply=%region_0
+  %cp = bf16[2,6144]{1,0} collective-permute(%p0), source_target_pairs={{0,1},{1,0}}
+  %rs-start = f32[8,1024]{1,0} reduce-scatter-start(%p1), dimensions={0}
+  %dot = f32[128,128]{1,0} dot(%p1, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+  ROOT %t = (bf16[32,6144]{1,0}) tuple(%ag)
+}
+"""
+
+
+def test_parse_collective_bytes_kinds_and_sizes():
+    stats = rl.parse_collective_bytes(HLO)
+    # all-gather operand: bf16[2,6144] = 24576 B
+    assert stats.bytes_by_kind["all-gather"] == 2 * 6144 * 2
+    # all-reduce operand: f32[128,1024] = 524288 B
+    assert stats.bytes_by_kind["all-reduce"] == 128 * 1024 * 4
+    # collective-permute operand: bf16[2,6144]
+    assert stats.bytes_by_kind["collective-permute"] == 2 * 6144 * 2
+    assert stats.count_by_kind == {"all-gather": 1, "all-reduce": 1,
+                                   "collective-permute": 1,
+                                   "reduce-scatter": 1}
+    # dot / tuple / parameter are NOT collectives
+    assert "dot" not in stats.bytes_by_kind
+
+
+def test_roofline_terms_and_dominance():
+    r = rl.Roofline(flops=197e12 * 256, hbm_bytes=819e9 * 256 * 2,
+                    collective_bytes=50e9 * 256 * 0.5, chips=256)
+    assert np.isclose(r.compute_s, 1.0)
+    assert np.isclose(r.memory_s, 2.0)
+    assert np.isclose(r.collective_s, 0.5)
+    assert r.dominant == "memory"
+    assert np.isclose(r.step_time_s, 2.0)
+    # MFU bound: useful fraction over the binding term
+    assert np.isclose(r.mfu(197e12 * 256), 0.5)
+
+
+def test_model_flops_kinds():
+    from repro.configs import SHAPES, get_config
+    cfg = get_config("smollm-360m")
+    t = rl.model_flops(cfg, SHAPES["train_4k"])
+    p = rl.model_flops(cfg, SHAPES["prefill_32k"])
+    d = rl.model_flops(cfg, SHAPES["decode_32k"])
+    n = cfg.param_count()
+    assert np.isclose(t, 6 * n * 4096 * 256, rtol=1e-6)
+    assert np.isclose(p, 2 * n * 32768 * 32, rtol=1e-6)
+    assert np.isclose(d, 2 * n * 128, rtol=1e-6)
+    # MoE uses ACTIVE params
+    moe = rl.model_flops(get_config("kimi-k2-1t-a32b"), SHAPES["train_4k"])
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert kimi.active_param_count() < 0.1 * kimi.param_count()
+    assert np.isclose(moe, 6 * kimi.active_param_count() * 4096 * 256,
+                      rtol=1e-6)
+
+
+def test_hardware_constants_match_spec():
+    assert rl.PEAK_FLOPS == 197e12
+    assert rl.HBM_BW == 819e9
+    assert rl.ICI_BW == 50e9

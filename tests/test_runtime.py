@@ -1,0 +1,25 @@
+"""Distributed-runtime tests: gossip collectives, train step, compression,
+checkpoint/elastic — run in a subprocess so the 8-device host platform
+doesn't leak into other tests (spec: never set device count globally)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_runtime_multi_device_checks():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "_runtime_checks.py")],
+        capture_output=True, text=True, env=env, timeout=1200)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-2000:])
+    assert proc.returncode == 0, "runtime checks failed (see output)"
+    assert "FAIL" not in proc.stdout

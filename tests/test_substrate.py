@@ -1,0 +1,183 @@
+"""Substrate tests: data partitioner (paper's p-skew), optimizers,
+checkpoint store, SSM/mLSTM kernels-vs-oracles, consensus machinery —
+with hypothesis property tests on the system invariants."""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.partition import label_histogram, pskew_partition
+from repro.data.synthetic import (make_classification_data, make_token_data,
+                                  worker_batch_iterator)
+
+KEY = jax.random.PRNGKey(7)
+
+
+# ---------------------------------------------------------------------------
+# p-skew partitioner (Sec. V-A)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(p=st.floats(0.0, 0.9), n=st.sampled_from([6, 12, 30]))
+def test_pskew_partition_covers_all_samples(p, n):
+    labels = np.repeat(np.arange(10), 60)
+    rng = np.random.default_rng(0)
+    shards = pskew_partition(labels, n, p, rng)
+    allix = np.sort(np.concatenate(shards))
+    assert np.array_equal(allix, np.arange(len(labels)))  # exact partition
+
+
+def test_pskew_skew_increases_with_p():
+    """Higher p => more concentrated class mass on the pinned group."""
+    labels = np.repeat(np.arange(10), 300)
+    rng = np.random.default_rng(1)
+
+    def peak_mass(p):
+        shards = pskew_partition(labels, 30, p, np.random.default_rng(2))
+        h = label_histogram(labels, shards, 10).astype(float)
+        h /= h.sum(0, keepdims=True)
+        return np.sort(h, axis=0)[-3:].sum(0).mean()   # top-3 worker mass
+
+    assert peak_mass(0.8) > peak_mass(0.4) > peak_mass(0.1)
+
+
+def test_worker_iterator_batches():
+    data = make_classification_data(600, 16, 5, seed=0)
+    shards = pskew_partition(data.y, 6, 0.4, np.random.default_rng(0))
+    it = worker_batch_iterator(data, shards[0], 32, seed=0)
+    b = next(it)
+    assert b["x"].shape == (32, 16) and b["y"].shape == (32,)
+
+
+def test_token_data_class_structure():
+    d = make_token_data(64, 64, 128, num_classes=4, seed=0)
+    assert d.x.shape == (64, 64)
+    assert d.x.max() < 128 and d.x.min() >= 0
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def _quad_problem():
+    target = jnp.array([1.0, -2.0, 3.0])
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    return loss, {"w": jnp.zeros(3)}
+
+
+@pytest.mark.parametrize("maker", ["sgd", "momentum", "adamw"])
+def test_optimizers_converge(maker):
+    from repro import optim
+    loss, params = _quad_problem()
+    opt = {"sgd": lambda: optim.sgd(0.1),
+           "momentum": lambda: optim.momentum_sgd(0.05, 0.9),
+           "adamw": lambda: optim.adamw(0.2)}[maker]()
+    state = opt.init(params)
+    for _ in range(120):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = jax.tree.map(lambda p, u: p + u, params, upd)
+    assert float(loss(params)) < 1e-2
+
+
+def test_exponential_decay_schedule():
+    from repro.optim import exponential_decay
+    s = exponential_decay(0.1, 0.98)
+    assert np.isclose(float(s(jnp.asarray(0))), 0.1)
+    assert np.isclose(float(s(jnp.asarray(10))), 0.1 * 0.98 ** 10)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint retention / atomicity
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_manager_retention():
+    from repro.checkpoint import CheckpointManager
+    state = {"a": np.arange(6).reshape(2, 3), "b": {"c": np.ones(4)}}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for s in range(5):
+            mgr.save(s, state, meta={"s": s})
+        from repro.checkpoint.store import list_steps
+        assert list_steps(d) == [3, 4]
+        restored, meta = mgr.restore(state)
+        assert meta["step"] == 4
+        assert np.array_equal(restored["a"], state["a"])
+        assert not any(f.startswith("tmp") for f in os.listdir(d))
+
+
+# ---------------------------------------------------------------------------
+# SSD / mLSTM chunked-vs-sequential oracles (property sweep)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([32, 64, 96]), h=st.sampled_from([1, 2]),
+       n=st.sampled_from([8, 16]), chunk=st.sampled_from([16, 32]))
+def test_ssd_chunked_matches_sequential(s, h, n, chunk):
+    from repro.models.ssm import ssd_chunked, ssd_ref
+    b, p = 2, 16
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    xh = jax.random.normal(k1, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(k2, (b, s, h)))
+    a_log = jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32))
+    bb = jax.random.normal(k3, (b, s, n)) * 0.3
+    cc = jax.random.normal(k4, (b, s, n)) * 0.3
+    y1, st1 = ssd_chunked(xh, dt, a_log, bb, cc, chunk=chunk)
+    y2, st2 = ssd_ref(xh, dt, a_log, bb, cc)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(st1), np.asarray(st2),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_mlstm_parallel_matches_recurrent_decode():
+    """Chunked-parallel mLSTM (train path) == recurrent decode (serve path)
+    on the same sequence — the xLSTM parallel/recurrent equivalence."""
+    import dataclasses
+    from repro.configs import get_smoke_config
+    from repro.models import xlstm
+    cfg = get_smoke_config("xlstm-1.3b")
+    p = xlstm.init_mlstm_block(KEY, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 16, cfg.d_model),
+                          jnp.float32) * 0.5
+    y_par = xlstm.apply_mlstm(p, x, cfg, chunk=8)
+    cache = xlstm.init_mlstm_cache(cfg, 1)
+    outs = []
+    for t in range(16):
+        y, cache = xlstm.decode_mlstm(p, x[:, t:t + 1], cache, cfg)
+        outs.append(y)
+    y_rec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_rec),
+                               atol=2e-3, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# consensus machinery (Eq. 36-39)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([4, 8, 12]))
+def test_floyd_warshall_upper_bounds_true_distance(n):
+    """Triangle-inequality estimates never UNDER-estimate (Eq. 37)."""
+    from repro.core.consensus import (floyd_warshall_estimate,
+                                      measured_distance_matrix,
+                                      pairwise_distances)
+    from repro.core.topology import ring_topology
+    rng = np.random.default_rng(n)
+    x = rng.normal(size=(n, 20))
+    true = pairwise_distances(x)
+    est = floyd_warshall_estimate(
+        measured_distance_matrix(ring_topology(n), true))
+    assert (est >= true - 1e-9).all()
+    # measured edges are exact
+    ring = ring_topology(n)
+    assert np.allclose(est[ring > 0], true[ring > 0])
