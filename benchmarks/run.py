@@ -120,6 +120,28 @@ def bench_fig7(rows, hs):
         emit(rows, "fig7", f"avg_wait[{a}]", round(h.avg_waiting, 3))
 
 
+def bench_churn(rows, full):
+    """Dynamic membership (churn): completion time to a target accuracy for
+    FedHP vs D-PSGD / AD-PSGD while 10-30% of the fleet joins/leaves/
+    crashes/straggles on a seeded ChurnSchedule."""
+    from repro.core.experiment import churn_from_config, run_algorithm
+    cfg = base_cfg(full)
+    target = 0.85
+    for rate in ((0.1, 0.3) if full else (0.3,)):
+        c = replace(cfg, churn_rate=rate)
+        sched = churn_from_config(c)
+        emit(rows, "churn", f"events@{rate}", len(sched.events))
+        for a in ("fedhp", "dpsgd", "adpsgd"):
+            h = run_algorithm(a, c, non_iid_p=0.4, rounds=cfg.rounds,
+                              spread=SPREAD, churn=sched,
+                              time_budget=time_budget(full))
+            emit(rows, "churn", f"acc@{rate}[{a}]",
+                 round(h.final_accuracy, 4))
+            t = h.completion_time(target)
+            emit(rows, "churn", f"time_to_{target}@{rate}[{a}]",
+                 round(t, 1) if t else "never")
+
+
 def bench_kernels(rows, full):
     """Pallas kernels vs jnp oracle, us/call (interpret mode on CPU —
     correctness substrate; TPU is the perf target)."""
@@ -172,6 +194,7 @@ BENCHES = {
     "fig2_3": bench_fig2_3,
     "fig4_5": bench_fig4_5,
     "fig6": bench_fig6,
+    "churn": bench_churn,
     "kernels": bench_kernels,
     "collective": bench_collective,
 }

@@ -5,16 +5,28 @@ completion time / average waiting time — the compact version of
 Figs. 2-7 — plus a fault-injection leg (two workers die mid-run).
 
     PYTHONPATH=src python examples/heterogeneity_study.py
+
+``--churn`` runs the dynamic-membership scenario instead: a seeded
+ChurnSchedule (joins, graceful leaves, crashes, straggler spikes) hits
+10% and 30% of the fleet and the engines race to a target accuracy —
+FedHP's adaptive topology + tau re-equalization vs the static baselines.
+
+    PYTHONPATH=src python examples/heterogeneity_study.py --churn
 """
+import argparse
+from dataclasses import replace
+
 from repro.configs.base import FedHPConfig
-from repro.core.experiment import run_algorithm
+from repro.core.experiment import churn_from_config, run_algorithm
 
 CFG = FedHPConfig(num_workers=10, rounds=100, tau_init=8, tau_max=30,
                   lr=0.15, lr_decay=0.993, batch_size=32, seed=7)
 BUDGET = 60.0
+TARGET_ACC = 0.85
+CHURN_ALGOS = ("fedhp", "dpsgd", "adpsgd")
 
 
-def main():
+def heterogeneity_study():
     print(f"{'algo':8s} {'p':>4s} {'acc':>6s} {'time(s)':>8s} {'wait':>6s}")
     for p in (0.1, 0.8):
         for algo in ("fedhp", "dpsgd", "ldsgd", "pens", "adpsgd"):
@@ -29,6 +41,38 @@ def main():
                       time_budget=BUDGET, fail_at={5: [0, 3]})
     print(f"  survived; final accuracy {h.final_accuracy:.3f} "
           f"(topology repaired, Sec. DESIGN §6)")
+
+
+def churn_study():
+    """FedHP vs D-PSGD vs AD-PSGD under 10% / 30% dynamic membership."""
+    print("dynamic membership: join/leave/crash/straggle schedule, seeded")
+    print(f"{'algo':8s} {'churn':>6s} {'acc':>6s} "
+          f"{'t_to_{:.0%}'.format(TARGET_ACC):>9s} {'total(s)':>9s} "
+          f"{'events':>7s}")
+    for rate in (0.1, 0.3):
+        cfg = replace(CFG, churn_rate=rate)
+        sched = churn_from_config(cfg)
+        kinds = ",".join(f"{k}:{sum(e.kind == k for e in sched.events)}"
+                         for k in ("leave", "crash", "join", "straggle")
+                         if any(e.kind == k for e in sched.events))
+        for algo in CHURN_ALGOS:
+            h = run_algorithm(algo, cfg, non_iid_p=0.4, spread=3.0,
+                              churn=sched, time_budget=BUDGET)
+            t = h.completion_time(TARGET_ACC)
+            t_str = f"{t:9.1f}" if t is not None else f"{'never':>9s}"
+            print(f"{algo:8s} {rate:6.0%} {h.final_accuracy:6.3f} {t_str} "
+                  f"{h.records[-1].cumulative_time:9.1f} {kinds:>7s}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--churn", action="store_true",
+                    help="run the dynamic-membership (churn) scenario")
+    args = ap.parse_args()
+    if args.churn:
+        churn_study()
+    else:
+        heterogeneity_study()
 
 
 if __name__ == "__main__":

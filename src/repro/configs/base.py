@@ -175,6 +175,14 @@ class FedHPConfig:
     # PENS neighbor selection (baseline)
     pens_top_m: int = 3
     pens_sample: int = 6
+    # dynamic membership (ChurnSchedule; 0.0 disables churn)
+    churn_rate: float = 0.0          # fraction of the fleet that departs
+    churn_seed: int = 101            # schedule generator seed
+    churn_min_alive: int = 2         # never drop below this many workers
+    crash_timeout: float = 2.0       # failure-detection timeout (s) charged
+    # to the round when a worker crashes (graceful leaves cost nothing)
+    straggle_factor: float = 4.0     # mu multiplier during a straggler spike
+    straggle_duration: int = 5       # spike length in rounds
 
 
 @dataclass(frozen=True)

@@ -36,9 +36,25 @@ class Strategy:
         self.n = base_adj.shape[0]
         self.alive = np.ones(self.n, bool)
 
-    def plan(self, h: int) -> RoundPlan:
-        return RoundPlan(self.base_adj.copy(),
-                         np.full(self.n, self.cfg.tau_init, np.int64))
+    def _membership(self, alive: np.ndarray | None) -> np.ndarray:
+        """Record the round's alive set (churn is applied at round start,
+        before planning) and return it as a bool mask."""
+        if alive is not None:
+            self.alive = np.asarray(alive, bool)
+        return self.alive
+
+    def _restrict(self, adj: np.ndarray) -> np.ndarray:
+        """Drop departed workers' links; cheapest-reconnect the survivors
+        if the departure disconnected the round topology."""
+        if self.alive.all():
+            return adj
+        return topo.repair_connectivity(adj, self.alive)
+
+    def plan(self, h: int, alive: np.ndarray | None = None) -> RoundPlan:
+        self._membership(alive)
+        taus = np.full(self.n, self.cfg.tau_init, np.int64)
+        taus[~self.alive] = 0
+        return RoundPlan(self._restrict(self.base_adj.copy()), taus)
 
     def observe(self, h: int, *, adj, mu, beta, edge_dist, update_norms,
                 smooth_l, sigma, loss, cross_loss=None, alive=None) -> None:
@@ -55,9 +71,11 @@ class DPSGDStrategy(Strategy):
         super().__init__(cfg, base_adj)
         self.ring = topo.ring_topology(self.n)
 
-    def plan(self, h: int) -> RoundPlan:
-        return RoundPlan(self.ring.copy(),
-                         np.full(self.n, self.cfg.tau_init, np.int64))
+    def plan(self, h: int, alive: np.ndarray | None = None) -> RoundPlan:
+        self._membership(alive)
+        taus = np.full(self.n, self.cfg.tau_init, np.int64)
+        taus[~self.alive] = 0
+        return RoundPlan(self._restrict(self.ring.copy()), taus)
 
 
 class LDSGDStrategy(Strategy):
@@ -66,13 +84,15 @@ class LDSGDStrategy(Strategy):
 
     name = "ldsgd"
 
-    def plan(self, h: int) -> RoundPlan:
+    def plan(self, h: int, alive: np.ndarray | None = None) -> RoundPlan:
+        self._membership(alive)
         i1, i2 = self.cfg.ldsgd_i1, self.cfg.ldsgd_i2
         period = max(i1 + i2, 1)
         taus = np.full(self.n, self.cfg.tau_init, np.int64)
+        taus[~self.alive] = 0
         if (h % period) < i1:                        # local-only round
             return RoundPlan(np.zeros_like(self.base_adj), taus)
-        return RoundPlan(topo.ring_topology(self.n), taus)
+        return RoundPlan(self._restrict(topo.ring_topology(self.n)), taus)
 
 
 class PENSStrategy(Strategy):
@@ -91,14 +111,19 @@ class PENSStrategy(Strategy):
         self._mu = np.full(self.n, 0.1)
         self._beta = np.full((self.n, self.n), 1.0)
 
-    def plan(self, h: int) -> RoundPlan:
+    def plan(self, h: int, alive: np.ndarray | None = None) -> RoundPlan:
+        live = self._membership(alive)
         taus = np.full(self.n, self.cfg.tau_init, np.int64)
+        taus[~live] = 0
         m, s = self.cfg.pens_top_m, self.cfg.pens_sample
         adj = np.zeros((self.n, self.n), np.int8)
         samples = np.zeros(self.n)
-        for i in range(self.n):
-            cand = self.rng.choice([j for j in range(self.n) if j != i],
-                                   size=min(s, self.n - 1), replace=False)
+        pool = np.nonzero(live)[0]
+        for i in pool:
+            if len(pool) < 2:       # lone survivor: nothing to sample
+                break
+            cand = self.rng.choice([j for j in pool if j != i],
+                                   size=min(s, len(pool) - 1), replace=False)
             samples[i] = len(cand)
             if self._cross is None:             # round 0: random top_m
                 pick = cand[:m]
@@ -107,8 +132,11 @@ class PENSStrategy(Strategy):
             adj[i, pick] = 1
         adj = np.maximum(adj, adj.T)            # symmetrize
         np.fill_diagonal(adj, 0)
-        if not topo.is_connected(adj):          # keep gossip well-defined
-            adj = np.maximum(adj, topo.ring_topology(self.n))
+        adj = self._restrict(adj)               # keep gossip well-defined
+        sub = adj[np.ix_(pool, pool)]
+        if len(pool) > 1 and not topo.is_connected(sub):
+            adj = np.maximum(adj, topo.repair_connectivity(
+                topo.ring_topology(self.n), live))
         # selection overhead: receive + evaluate `s` candidate models
         extra = samples * (self._mu * 2.0) + \
             samples * np.median(self._beta[self._beta > 0]) \
@@ -143,14 +171,19 @@ class FedHPStrategy(Strategy):
         self._sigma = 1.0
         self.last_decision = None
 
-    def plan(self, h: int) -> RoundPlan:
+    def plan(self, h: int, alive: np.ndarray | None = None) -> RoundPlan:
+        live = self._membership(alive)
+        # membership can change between observe() and plan() (churn is
+        # applied at round start): reconcile the tracker before deciding
+        self.tracker.sync_membership(live)
         if self._mu is None:                    # round 0: no measurements yet
-            return RoundPlan(self.base_adj.copy(),
-                             np.full(self.n, self.cfg.tau_init, np.int64))
+            taus = np.full(self.n, self.cfg.tau_init, np.int64)
+            taus[~live] = 0
+            return RoundPlan(self._restrict(self.base_adj.copy()), taus)
         d = self.controller.decide(
             self._mu, self._beta, self.tracker, f1=self._f1,
             smooth_l=self._L, sigma=self._sigma, eta=self.cfg.lr,
-            rounds=self.cfg.rounds, alive=self.alive)
+            rounds=self.cfg.rounds, alive=live)
         self.last_decision = d
         return RoundPlan(d.adj, d.taus)
 

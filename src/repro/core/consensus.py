@@ -48,6 +48,38 @@ class ConsensusTracker:
         self.dist = np.zeros((num_workers, num_workers))
         self.d_max = 0.0
         self._rounds = 0
+        # dynamic membership: rows/cols of absent workers are dropped so the
+        # Floyd-Warshall estimate never routes through (or budgets for) a
+        # worker that has churned out
+        self.present = np.ones(num_workers, bool)
+
+    def sync_membership(self, alive: np.ndarray) -> None:
+        """Reconcile tracker state with the round's alive set.
+
+        Departed workers' rows/columns are zeroed (no stale estimates carry
+        over, and Eq. 36 stops charging their pairs). Newly joined workers
+        start from the mean surviving pair distance — a pessimistic fresh
+        prior that keeps the budget check meaningful until their first
+        measured edges arrive.
+        """
+        alive = np.asarray(alive, bool)
+        departed = self.present & ~alive
+        joined = alive & ~self.present
+        if departed.any():
+            self.dist[departed, :] = 0.0
+            self.dist[:, departed] = 0.0
+        if joined.any():
+            stay = np.nonzero(alive & self.present)[0]
+            if len(stay) > 1:
+                sub = self.dist[np.ix_(stay, stay)]
+                fill = float(sub.sum() / max(len(stay) * (len(stay) - 1), 1))
+            else:
+                fill = 0.0
+            for w in np.nonzero(joined)[0]:
+                self.dist[w, alive] = fill
+                self.dist[alive, w] = fill
+                self.dist[w, w] = 0.0
+        self.present = alive.copy()
 
     def update(self, adj: np.ndarray, edge_dist: np.ndarray,
                mean_update_norm: float) -> np.ndarray:
@@ -80,11 +112,13 @@ class ConsensusTracker:
         return self.dist
 
     def average_consensus_bound(self, adj: np.ndarray) -> float:
-        """Eq. (36): E D^{h+1} <= (1/N^2) sum_ij (1 - a_ij) D_ij."""
-        n = self.n
+        """Eq. (36): E D^{h+1} <= (1/N^2) sum_ij (1 - a_ij) D_ij, summed and
+        normalized over the present worker set only."""
         off = (1 - adj) * self.dist
         np.fill_diagonal(off, 0.0)
-        return float(off.sum() / (n * n))
+        mask = np.outer(self.present, self.present)
+        m = max(int(self.present.sum()), 1)
+        return float((off * mask).sum() / (m * m))
 
     def satisfies_budget(self, adj: np.ndarray) -> bool:
         """First constraint of Eq. (42)."""

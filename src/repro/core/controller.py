@@ -63,23 +63,28 @@ def theory_tau_star(n: int, f1: float, smooth_l: float, rounds: int,
 
 
 def equalized_taus(adj: np.ndarray, mu: np.ndarray, beta: np.ndarray,
-                   tau_star: int, tau_max: int) -> tuple[np.ndarray, int]:
+                   tau_star: int, tau_max: int,
+                   alive: np.ndarray | None = None
+                   ) -> tuple[np.ndarray, int]:
     """Eq. (40): assign taus so every worker's t_i matches the pace-setter.
 
     Pace-setter l = argmin_i (tau* mu_i + max_j beta_ij): the worker that can
     finish a tau*-step round fastest. Everyone else gets
     tau_i = floor((t_l - comm_i) / mu_i) clamped to [1, tau_max].
-    Returns (taus, pace_worker).
+    Under churn the pace-setter and the equalization run over the surviving
+    set only; departed workers get tau 0. Returns (taus, pace_worker).
     """
     n = adj.shape[0]
+    alive = np.ones(n, bool) if alive is None else np.asarray(alive, bool)
     comm = link_times(adj, beta)
-    t_full = tau_star * mu + comm
+    t_full = np.where(alive, tau_star * mu + comm, np.inf)
     pace = int(np.argmin(t_full))
     t_pace = float(t_full[pace])
     with np.errstate(divide="ignore", invalid="ignore"):
         taus = np.floor((t_pace - comm) / np.maximum(mu, 1e-12))
     taus = np.clip(taus, 1, tau_max).astype(np.int64)
     taus[pace] = tau_star
+    taus[~alive] = 0
     return taus, pace
 
 
@@ -90,12 +95,15 @@ def link_times(adj: np.ndarray, beta: np.ndarray) -> np.ndarray:
 
 
 def evaluate_topology(adj: np.ndarray, mu: np.ndarray, beta: np.ndarray,
-                      tau_star: int, tau_max: int) -> ControlDecision:
-    taus, pace = equalized_taus(adj, mu, beta, tau_star, tau_max)
+                      tau_star: int, tau_max: int,
+                      alive: np.ndarray | None = None) -> ControlDecision:
+    n = adj.shape[0]
+    alive = np.ones(n, bool) if alive is None else np.asarray(alive, bool)
+    taus, pace = equalized_taus(adj, mu, beta, tau_star, tau_max, alive)
     comm = link_times(adj, beta)
-    t = taus * mu + comm
-    round_time = float(t.max())
-    waiting = float((round_time - t).mean())
+    t = np.where(alive, taus * mu + comm, 0.0)
+    round_time = float(t[alive].max()) if alive.any() else 0.0
+    waiting = float((round_time - t[alive]).mean()) if alive.any() else 0.0
     return ControlDecision(
         adj=adj, taus=taus, round_time=round_time, waiting_time=waiting,
         tau_pace=int(taus[pace]), pace_worker=pace, consensus_bound=0.0)
@@ -128,17 +136,26 @@ class AdaptiveController:
         mu = np.asarray(mu, dtype=np.float64)
         beta = np.asarray(beta, dtype=np.float64)
         adj = np.array(self.base_adj, copy=True)
-        if alive is not None:
-            adj = prune_dead(adj, np.asarray(alive, dtype=bool))
+        mask = np.ones(self.n, bool) if alive is None \
+            else np.asarray(alive, dtype=bool)
+        if not mask.all():
+            adj = prune_dead(adj, mask, cost=beta)
+        live = np.nonzero(mask)[0]
+
+        def live_connected(a: np.ndarray) -> bool:
+            return topo.is_connected(a[np.ix_(live, live)])
+
         # comm floor: the pace setter should compute at least as long as it
         # communicates, else rounds are wire-bound regardless of topology
         link = beta[adj > 0]
+        mu_live = mu[mask] if mask.any() else mu
         comm_floor = int(math.ceil(
-            float(np.median(link)) / max(float(mu.min()), 1e-9))) \
+            float(np.median(link)) / max(float(mu_live.min()), 1e-9))) \
             if link.size else 1
-        tau_star = theory_tau_star(self.n, f1, smooth_l, rounds, eta, sigma,
-                                   self.tau_max, comm_floor=comm_floor)
-        best = evaluate_topology(adj, mu, beta, tau_star, self.tau_max)
+        tau_star = theory_tau_star(max(len(live), 1), f1, smooth_l, rounds,
+                                   eta, sigma, self.tau_max,
+                                   comm_floor=comm_floor)
+        best = evaluate_topology(adj, mu, beta, tau_star, self.tau_max, mask)
         best.consensus_bound = tracker.average_consensus_bound(adj)
 
         s = self.n
@@ -154,13 +171,14 @@ class AdaptiveController:
                 trial = np.array(best.adj, copy=True)
                 for (i, j) in cand:
                     trial[i, j] = trial[j, i] = 0
-                    if not topo.is_connected(trial):
+                    if not live_connected(trial):
                         trial[i, j] = trial[j, i] = 1
                         continue
                     if not tracker.satisfies_budget(trial):
                         trial[i, j] = trial[j, i] = 1
                         continue
-                d = evaluate_topology(trial, mu, beta, tau_star, self.tau_max)
+                d = evaluate_topology(trial, mu, beta, tau_star,
+                                      self.tau_max, mask)
                 if d.round_time < best.round_time and \
                         d.waiting_time <= self.epsilon:
                     d.consensus_bound = tracker.average_consensus_bound(d.adj)
@@ -198,18 +216,10 @@ class AdaptiveController:
         return out
 
 
-def prune_dead(adj: np.ndarray, alive: np.ndarray) -> np.ndarray:
-    """Vertex removal for failed workers; keeps the survivors connected by
-    chaining them in a ring if the prune disconnected the graph."""
-    adj = np.array(adj, copy=True)
-    dead = np.nonzero(~alive)[0]
-    adj[dead, :] = 0
-    adj[:, dead] = 0
-    live = np.nonzero(alive)[0]
-    if len(live) > 1:
-        sub = adj[np.ix_(live, live)]
-        if not topo.is_connected(sub):
-            for a, b in zip(live, np.roll(live, -1)):
-                if a != b:
-                    adj[a, b] = adj[b, a] = 1
-    return adj
+def prune_dead(adj: np.ndarray, alive: np.ndarray,
+               cost: np.ndarray | None = None) -> np.ndarray:
+    """Vertex removal for churned-out workers + cheapest-reconnect repair:
+    if the prune disconnects the survivors, the minimum-cost (link-time)
+    cross-component edges are added back until the alive subgraph is one
+    component (``topology.repair_connectivity``)."""
+    return topo.repair_connectivity(adj, np.asarray(alive, bool), cost)

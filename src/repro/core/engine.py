@@ -105,6 +105,21 @@ def _gossip(stacked, mix):
 
 
 @jax.jit
+def _reinit_joined(stacked, joined, donors):
+    """Joining workers adopt the average of the incumbent alive models
+    (a fresh worker starting from x^0 mid-run would wreck consensus)."""
+    w = donors.astype(jnp.float32)
+    w = w / jnp.maximum(w.sum(), 1.0)
+
+    def leaf(l):
+        mean = jnp.tensordot(w, l.astype(jnp.float32), axes=1)
+        keep = joined.reshape((-1,) + (1,) * (l.ndim - 1))
+        return jnp.where(keep, mean[None].astype(l.dtype), l)
+
+    return jax.tree.map(leaf, stacked)
+
+
+@jax.jit
 def _flatten_workers(stacked):
     """[W, ...] pytree -> [W, P] matrix."""
     leaves = jax.tree.leaves(stacked)
@@ -148,10 +163,17 @@ def _cross_loss_matrix(stacked, xs, ys):
     return jax.vmap(on_data)(xs, ys)          # [data_i, model_j]
 
 
-def _mean_accuracy(stacked, test_x, test_y) -> tuple[float, float]:
+def _mean_accuracy(stacked, test_x, test_y,
+                   alive: np.ndarray | None = None) -> tuple[float, float]:
+    """Fleet-average test accuracy/loss over the alive workers (departed
+    workers' frozen models are not part of the deployment)."""
     accs = jax.vmap(lambda p: accuracy(p, test_x, test_y))(stacked)
     losses = jax.vmap(
         lambda p: classifier_loss(p, {"x": test_x, "y": test_y}))(stacked)
+    if alive is not None and not alive.all() and alive.any():
+        w = jnp.asarray(alive, jnp.float32)
+        w = w / w.sum()
+        return float(jnp.dot(w, accs)), float(jnp.dot(w, losses))
     return float(jnp.mean(accs)), float(jnp.mean(losses))
 
 
@@ -199,14 +221,25 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
     needs_cross = strategy.name == "pens"
     for h in range(rounds):
         alive = cluster.advance_round(h)
-        plan = strategy.plan(h)
+        joined = cluster.last_joined
+        if joined.any():
+            donors = alive & ~joined
+            if donors.any():
+                stacked = _reinit_joined(stacked, jnp.asarray(joined),
+                                         jnp.asarray(donors))
+        mu = cluster.sample_mu()
+        beta = cluster.sample_beta()
+
+        plan = strategy.plan(h, alive=alive)
         adj = plan.adj.copy()
         adj[~alive, :] = 0
         adj[:, ~alive] = 0
+        # churn safety net: if the strategy's topology lost connectivity to
+        # a departure, cheapest-reconnect the survivors (link-time cost)
+        if not alive.all() and alive.sum() > 1 \
+                and adj[alive][:, alive].sum() > 0:
+            adj = topo.repair_connectivity(adj, alive, cost=beta)
         taus = np.where(alive, np.clip(plan.taus, 1, cfg.tau_max), 0)
-
-        mu = cluster.sample_mu()
-        beta = cluster.sample_beta()
         lr = cfg.lr * (cfg.lr_decay ** h)
 
         # --- local updating (Eq. 3), masked to tau_i ---
@@ -223,6 +256,10 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
         if plan.extra_time is not None:
             t_i = t_i + plan.extra_time * alive
         t_round = float(t_i[alive].max()) if alive.any() else 0.0
+        if cluster.last_crashed.any():
+            # abrupt failures: survivors block on the dead peer until the
+            # detection timeout fires (crash vs graceful-leave distinction)
+            t_round += cfg.crash_timeout
         waiting = float((t_round - t_i[alive]).mean()) if alive.any() else 0.0
         clock += t_round
 
@@ -249,8 +286,9 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
             loss=float(np.mean(np.asarray(losses)[alive])),
             cross_loss=cross, alive=alive)
 
-        mean_acc, mean_loss = _mean_accuracy(stacked, tx, ty)
-        d_bar = float(np.linalg.norm(flat - flat.mean(0), axis=1).mean())
+        mean_acc, mean_loss = _mean_accuracy(stacked, tx, ty, alive)
+        fa = flat[alive] if alive.any() else flat
+        d_bar = float(np.linalg.norm(fa - fa.mean(0), axis=1).mean())
         hist.records.append(RoundRecord(
             round=h, round_time=t_round, waiting_time=waiting,
             accuracy=mean_acc, loss=mean_loss,
@@ -320,9 +358,12 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
 
     # per-worker snapshot taken when its computation started
     snapshots = [jax.tree.map(lambda l: l[i], stacked) for i in range(n)]
-    while hist.records.__len__() < rounds:
+    alive = cluster.advance_round(0)
+    while hist.records.__len__() < rounds and q:
         t_now, i = heapq.heappop(q)
         clock = t_now
+        if not alive[i]:
+            continue                  # churned out: event dies with it
         shard = shards[i]
         ix = rng.integers(0, len(shard), (tau, cfg.batch_size))
         bx = jnp.asarray(data.x[shard[ix]])
@@ -330,7 +371,10 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
         # delta from the stale snapshot, applied to the live model, then
         # atomic pairwise averaging with a random neighbor
         delta = train_delta(snapshots[i], bx, by, jnp.float32(lr), tau)
-        j = int(rng.choice(neighbors[i]))
+        cand = [j for j in neighbors[i] if alive[j]]
+        if not cand:                  # ring neighbors churned out: any peer
+            cand = [j for j in np.nonzero(alive)[0] if j != i]
+        j = int(rng.choice(cand)) if cand else int(i)
         stacked = apply_and_average(stacked, delta, jnp.int32(i),
                                     jnp.int32(j))
         snapshots[i] = jax.tree.map(lambda l: l[i], stacked)
@@ -341,9 +385,10 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
         events += 1
         if events % n == 0:
             lr *= cfg.lr_decay
-            mean_acc, mean_loss = _mean_accuracy(stacked, tx, ty)
+            mean_acc, mean_loss = _mean_accuracy(stacked, tx, ty, alive)
             flat = np.asarray(_flatten_workers(stacked))
-            d_bar = float(np.linalg.norm(flat - flat.mean(0), axis=1).mean())
+            fa = flat[alive] if alive.any() else flat
+            d_bar = float(np.linalg.norm(fa - fa.mean(0), axis=1).mean())
             hist.records.append(RoundRecord(
                 round=len(hist.records), round_time=0.0,
                 waiting_time=0.0,          # async: no synchronization barrier
@@ -352,4 +397,16 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
                 cumulative_time=clock))
             if time_budget is not None and clock >= time_budget:
                 break
+            # event clock -> round clock: churn for the NEXT round advances
+            # after this round's record, matching run_dfl's round-start
+            # semantics (a round-r event affects record r in both engines)
+            alive = cluster.advance_round(len(hist.records))
+            joined = cluster.last_joined
+            if joined.any() and (alive & ~joined).any():
+                stacked = _reinit_joined(stacked, jnp.asarray(joined),
+                                         jnp.asarray(alive & ~joined))
+                mu_now = cluster.sample_mu()
+                for w in np.nonzero(joined)[0]:
+                    snapshots[w] = jax.tree.map(lambda l, w=w: l[w], stacked)
+                    heapq.heappush(q, (clock + tau * mu_now[w], int(w)))
     return hist

@@ -12,16 +12,30 @@ from repro.core.algorithms import make_strategy
 from repro.core.topology import make_base_topology
 from repro.data.partition import pskew_partition
 from repro.data.synthetic import make_classification_data
-from repro.simulation.cluster import SimCluster
+from repro.simulation.cluster import ChurnSchedule, SimCluster
 
 # MLP stand-in model size (bits) for link-time simulation: ~7k params f32
 MODEL_BITS_DEFAULT = 7.3e3 * 32
 
 
+def churn_from_config(cfg: FedHPConfig,
+                      rounds: int | None = None) -> ChurnSchedule | None:
+    """Generate the seeded churn schedule cfg describes (None if disabled)."""
+    if cfg.churn_rate <= 0.0:
+        return None
+    return ChurnSchedule.generate(
+        cfg.num_workers, rounds or cfg.rounds, rate=cfg.churn_rate,
+        seed=cfg.churn_seed, min_alive=cfg.churn_min_alive,
+        straggle_factor=cfg.straggle_factor,
+        straggle_duration=cfg.straggle_duration)
+
+
 def setup_experiment(cfg: FedHPConfig, *, non_iid_p: float = 0.1,
                      num_samples: int = 6000, dim: int = 32,
                      num_classes: int = 10, spread: float = 1.0,
-                     fail_at: dict | None = None):
+                     fail_at: dict | None = None,
+                     churn: ChurnSchedule | None = None,
+                     rounds: int | None = None):
     """Build (data, test split, shards, cluster) for one experiment."""
     data = make_classification_data(num_samples=num_samples, dim=dim,
                                     num_classes=num_classes, spread=spread,
@@ -31,8 +45,10 @@ def setup_experiment(cfg: FedHPConfig, *, non_iid_p: float = 0.1,
     train = replace_dataset(data, data.x[n_test:], data.y[n_test:])
     rng = np.random.default_rng(cfg.seed + 1)
     shards = pskew_partition(train.y, cfg.num_workers, non_iid_p, rng)
+    if churn is None:
+        churn = churn_from_config(cfg, rounds)
     cluster = SimCluster(cfg.num_workers, model_bits=MODEL_BITS_DEFAULT,
-                         seed=cfg.seed, fail_at=fail_at or {})
+                         seed=cfg.seed, fail_at=fail_at or {}, churn=churn)
     return train, test_x, test_y, shards, cluster
 
 
@@ -44,11 +60,13 @@ def replace_dataset(data, x, y):
 def run_algorithm(algorithm: str, cfg: FedHPConfig, *, non_iid_p: float = 0.1,
                   rounds: int | None = None, mixing: str = "uniform",
                   fail_at: dict | None = None, spread: float = 1.0,
+                  churn: ChurnSchedule | None = None,
                   time_budget: float | None = None) -> engine.History:
     """Run one (algorithm, non-IID level) cell and return its History."""
     cfg = replace(cfg, algorithm=algorithm)
     train, tx, ty, shards, cluster = setup_experiment(
-        cfg, non_iid_p=non_iid_p, fail_at=fail_at, spread=spread)
+        cfg, non_iid_p=non_iid_p, fail_at=fail_at, spread=spread,
+        churn=churn, rounds=rounds)
     if algorithm == "adpsgd":
         return engine.run_adpsgd(train, tx, ty, shards, cluster, cfg,
                                  rounds=rounds, time_budget=time_budget)

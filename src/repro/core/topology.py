@@ -90,6 +90,69 @@ def is_connected(adj: np.ndarray) -> bool:
     return bool(seen.all())
 
 
+def connected_components(adj: np.ndarray,
+                         nodes: np.ndarray | None = None) -> list[np.ndarray]:
+    """Connected components of the subgraph induced by ``nodes`` (default:
+    all vertices). Returns a list of index arrays."""
+    n = adj.shape[0]
+    nodes = np.arange(n) if nodes is None else np.asarray(nodes)
+    in_sub = np.zeros(n, bool)
+    in_sub[nodes] = True
+    seen = np.zeros(n, bool)
+    comps: list[np.ndarray] = []
+    for start in nodes:
+        if seen[start]:
+            continue
+        stack = [int(start)]
+        seen[start] = True
+        comp = [int(start)]
+        while stack:
+            i = stack.pop()
+            for j in np.nonzero(adj[i])[0]:
+                if in_sub[j] and not seen[j]:
+                    seen[j] = True
+                    comp.append(int(j))
+                    stack.append(int(j))
+        comps.append(np.array(sorted(comp)))
+    return comps
+
+
+def repair_connectivity(adj: np.ndarray, alive: np.ndarray | None = None,
+                        cost: np.ndarray | None = None) -> np.ndarray:
+    """Cheapest-reconnect pass (churn tolerance): if the alive-induced
+    subgraph is disconnected, greedily add the min-cost cross-component
+    edge until one component remains (Kruskal over the component graph).
+
+    ``cost`` is an (N,N) link-time matrix (e.g. beta); unit costs when
+    None. Dead rows/columns are zeroed in the result. Returns a new array.
+    """
+    adj = np.array(adj, copy=True)
+    n = adj.shape[0]
+    alive = np.ones(n, bool) if alive is None else np.asarray(alive, bool)
+    dead = np.nonzero(~alive)[0]
+    adj[dead, :] = 0
+    adj[:, dead] = 0
+    live = np.nonzero(alive)[0]
+    if len(live) <= 1:
+        return adj
+    cost = np.ones((n, n)) if cost is None else np.asarray(cost, np.float64)
+    comps = connected_components(adj, live)
+    while len(comps) > 1:
+        best: tuple[float, int, int] | None = None
+        base = comps[0]
+        for other in comps[1:]:
+            sub = cost[np.ix_(base, other)]
+            k = int(np.argmin(sub))
+            i, j = base[k // len(other)], other[k % len(other)]
+            c = float(sub.flat[k])
+            if best is None or c < best[0]:
+                best = (c, int(i), int(j))
+        _, i, j = best
+        adj[i, j] = adj[j, i] = 1
+        comps = connected_components(adj, live)
+    return adj
+
+
 # ---------------------------------------------------------------------------
 # Mixing matrices (Eq. 5-6; Assumption 4)
 # ---------------------------------------------------------------------------

@@ -24,6 +24,17 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import topology as topo
 
+if hasattr(jax, "shard_map"):                           # jax >= 0.6
+    def _shard_map(body, mesh, in_specs, out_specs):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:                                                   # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def _shard_map(body, mesh, in_specs, out_specs):
+        return _exp_shard_map(body, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+
 
 def matchings_as_pairs(adj: np.ndarray) -> list[list[tuple[int, int]]]:
     """Topology -> list of ppermute pair-lists (each an involution, with
@@ -87,8 +98,7 @@ def gossip_fn(mesh: Mesh, worker_axes: tuple[str, ...],
         return acc
 
     out_specs = (param_specs, P(None)) if measure_distances else param_specs
-    return jax.shard_map(body, mesh=mesh, in_specs=(param_specs,),
-                         out_specs=out_specs, check_vma=False)
+    return _shard_map(body, mesh, (param_specs,), out_specs)
 
 
 def gossip_compressed_fn(mesh: Mesh, worker_axes: tuple[str, ...],
@@ -150,9 +160,8 @@ def gossip_compressed_fn(mesh: Mesh, worker_axes: tuple[str, ...],
             acc = jax.tree.map(mix, acc, pq, ps, deq_self)
         return acc, new_err
 
-    return jax.shard_map(
-        body, mesh=mesh, in_specs=(param_specs, param_specs),
-        out_specs=(param_specs, param_specs), check_vma=False)
+    return _shard_map(body, mesh, (param_specs, param_specs),
+                      (param_specs, param_specs))
 
 
 def ring_allreduce_mean_fn(mesh: Mesh, worker_axes: tuple[str, ...],
@@ -164,5 +173,4 @@ def ring_allreduce_mean_fn(mesh: Mesh, worker_axes: tuple[str, ...],
             lambda l: (jax.lax.pmean(l.astype(jnp.float32), worker_axes)
                        ).astype(l.dtype), x)
 
-    return jax.shard_map(body, mesh=mesh, in_specs=(param_specs,),
-                         out_specs=param_specs, check_vma=False)
+    return _shard_map(body, mesh, (param_specs,), param_specs)

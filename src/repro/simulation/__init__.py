@@ -1,5 +1,8 @@
 """Heterogeneous EC-cluster simulation substrate (paper Sec. V setup)."""
 from repro.simulation.cluster import (  # noqa: F401
+    CHURN_KINDS,
+    ChurnEvent,
+    ChurnSchedule,
     DEVICE_PROFILES,
     SimCluster,
 )

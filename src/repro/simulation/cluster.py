@@ -1,4 +1,4 @@
-"""Heterogeneous edge-cluster model (paper Sec. V-C1).
+"""Heterogeneous edge-cluster model (paper Sec. V-C1) + dynamic membership.
 
 - Computing: each worker draws per-round per-iteration computing time from a
   Gaussian whose (mean, std) comes from a commercial-device profile
@@ -7,8 +7,10 @@
 - Communication: per-worker bandwidth fluctuates in [1, 10] Mb/s; link time
   beta_ij = model_bits / min(bw_i, bw_j) (the slower endpoint gates the
   P2P transfer).
-- Failure injection: workers die/recover at configured rounds (fault-
-  tolerance tests; DESIGN.md §6).
+- Churn: a declarative, seeded ``ChurnSchedule`` of join / leave / crash /
+  straggler-spike events drives dynamic membership — the scenario axis the
+  paper's fixed worker set never exercises (DySTop-style dynamics). The
+  legacy ``fail_at``/``recover_at`` hooks remain as a thin special case.
 """
 from __future__ import annotations
 
@@ -29,6 +31,111 @@ DEVICE_PROFILES: dict[str, tuple[float, float]] = {
 BW_LOW_MBPS = 1.0
 BW_HIGH_MBPS = 10.0
 
+CHURN_KINDS = ("leave", "crash", "join", "straggle")
+
+
+@dataclass(frozen=True)
+class ChurnEvent:
+    """One membership/performance event at the start of round ``round``.
+
+    kind:
+      leave    — graceful departure (worker announces and drops out)
+      crash    — abrupt failure (survivors also pay a detection timeout)
+      join     — (re-)admission; the engine re-initializes the model row
+      straggle — compute slows by ``factor`` for ``duration`` rounds
+    """
+    round: int
+    kind: str
+    worker: int
+    factor: float = 4.0
+    duration: int = 5
+
+    def __post_init__(self):
+        if self.kind not in CHURN_KINDS:
+            raise ValueError(f"unknown churn kind {self.kind!r}")
+
+
+@dataclass(frozen=True)
+class ChurnSchedule:
+    """Declarative, immutable event list; index by round via events_at()."""
+
+    events: tuple[ChurnEvent, ...] = ()
+
+    def events_at(self, h: int) -> list[ChurnEvent]:
+        return [e for e in self.events if e.round == h]
+
+    @property
+    def departure_rounds(self) -> list[int]:
+        return sorted(e.round for e in self.events
+                      if e.kind in ("leave", "crash"))
+
+    @classmethod
+    def generate(cls, num_workers: int, rounds: int, *, rate: float,
+                 seed: int = 0, kinds: tuple[str, ...] = CHURN_KINDS,
+                 min_alive: int = 2, rejoin_p: float = 0.5,
+                 straggle_factor: float = 4.0,
+                 straggle_duration: int = 5) -> "ChurnSchedule":
+        """Seeded generator: ~``rate`` of the fleet departs over the run
+        (split between leave and crash), departed workers rejoin with
+        probability ``rejoin_p``, and an equal number of straggler spikes
+        hits random survivors. Never schedules a departure that would take
+        the alive set below ``min_alive``.
+        """
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"rate must be in [0,1], got {rate}")
+        rng = np.random.default_rng(seed)
+        n_depart = int(round(rate * num_workers))
+        events: list[ChurnEvent] = []
+        # spread departures over the middle of the run so there is a
+        # before/after on both sides
+        lo, hi = max(1, rounds // 10), max(2, rounds - rounds // 10)
+        depart_rounds = np.sort(rng.integers(lo, hi, n_depart))
+
+        def alive_at(r: int) -> np.ndarray:
+            """Replay membership events scheduled so far up to round r —
+            the ground truth the min_alive guard must hold against (a
+            rejoin only restores the worker from its `back` round on)."""
+            a = np.ones(num_workers, bool)
+            for e in sorted(events, key=lambda e: e.round):
+                if e.round > r:
+                    break
+                if e.kind in ("leave", "crash"):
+                    a[e.worker] = False
+                elif e.kind == "join":
+                    a[e.worker] = True
+            return a
+
+        for r in depart_rounds:
+            a = alive_at(int(r))
+            # the departure must keep min_alive from round r until the
+            # departed worker's own rejoin (if any) — check the minimum
+            # alive count over the remaining rounds after removing w
+            if a.sum() <= min_alive:
+                continue
+            w = int(rng.choice(np.nonzero(a)[0]))
+            kind = "crash" if ("crash" in kinds and rng.random() < 0.5
+                              ) else "leave"
+            if kind not in kinds:
+                continue
+            events.append(ChurnEvent(int(r), kind, w))
+            if any(alive_at(rr).sum() < min_alive
+                   for rr in range(int(r), rounds)):
+                events.pop()                       # would starve the fleet
+                continue
+            if "join" in kinds and rng.random() < rejoin_p:
+                back = int(rng.integers(r + 2, max(r + 3, rounds)))
+                if back < rounds:
+                    events.append(ChurnEvent(back, "join", w))
+        if "straggle" in kinds:
+            for _ in range(n_depart):
+                w = int(rng.integers(0, num_workers))
+                r = int(rng.integers(lo, hi))
+                events.append(ChurnEvent(r, "straggle", w,
+                                         factor=straggle_factor,
+                                         duration=straggle_duration))
+        events.sort(key=lambda e: (e.round, e.worker))
+        return cls(tuple(events))
+
 
 @dataclass
 class SimCluster:
@@ -39,8 +146,15 @@ class SimCluster:
     fail_at: dict[int, list[int]] = field(default_factory=dict)
     # round -> worker ids that die at that round
     recover_at: dict[int, list[int]] = field(default_factory=dict)
+    churn: ChurnSchedule | None = None
 
     def __post_init__(self):
+        if self.churn is not None:
+            for e in self.churn.events:
+                if not 0 <= e.worker < self.num_workers:
+                    raise ValueError(
+                        f"churn event {e} targets worker {e.worker}; "
+                        f"cluster has {self.num_workers} workers")
         rng = np.random.default_rng(self.seed)
         profiles = list(DEVICE_PROFILES.values())
         if self.heterogeneous:
@@ -51,12 +165,18 @@ class SimCluster:
         self.mu_std = np.array([profiles[i][1] for i in pick])
         self._rng = rng
         self.alive = np.ones(self.num_workers, bool)
+        # churn bookkeeping, refreshed by advance_round
+        self._straggle_factor = np.ones(self.num_workers)
+        self._straggle_until = np.full(self.num_workers, -1)
+        self.last_joined = np.zeros(self.num_workers, bool)
+        self.last_crashed = np.zeros(self.num_workers, bool)
 
     # -- per-round draws ----------------------------------------------------
     def sample_mu(self) -> np.ndarray:
-        """(N,) per-iteration computing time for this round."""
+        """(N,) per-iteration computing time for this round (straggler
+        spikes multiply the base draw)."""
         mu = self._rng.normal(self.mu_mean, self.mu_std)
-        return np.maximum(mu, 1e-3)
+        return np.maximum(mu, 1e-3) * self._straggle_factor
 
     def sample_bandwidth(self) -> np.ndarray:
         """(N,) worker uplink bandwidth in bit/s, fluctuating 1-10 Mb/s."""
@@ -71,11 +191,33 @@ class SimCluster:
         np.fill_diagonal(beta, 0.0)
         return beta
 
-    # -- failures -----------------------------------------------------------
+    # -- membership ---------------------------------------------------------
     def advance_round(self, h: int) -> np.ndarray:
-        """Apply scheduled failures/recoveries; returns alive mask."""
+        """Apply round-h churn + legacy failures/recoveries; returns the
+        alive mask. ``last_joined``/``last_crashed`` flag this round's
+        admissions and abrupt failures for the engine."""
+        self.last_joined[:] = False
+        self.last_crashed[:] = False
+        expired = self._straggle_until <= h
+        self._straggle_factor[expired] = 1.0
         for w in self.fail_at.get(h, []):
             self.alive[w] = False
         for w in self.recover_at.get(h, []):
-            self.alive[w] = True
+            if not self.alive[w]:
+                self.alive[w] = True
+                self.last_joined[w] = True
+        if self.churn is not None:
+            for ev in self.churn.events_at(h):
+                w = ev.worker
+                if ev.kind in ("leave", "crash") and self.alive[w]:
+                    self.alive[w] = False
+                    if ev.kind == "crash":
+                        self.last_crashed[w] = True
+                elif ev.kind == "join" and not self.alive[w]:
+                    self.alive[w] = True
+                    self.last_joined[w] = True
+                elif ev.kind == "straggle":
+                    # active for rounds h .. h+duration-1 (exactly duration)
+                    self._straggle_factor[w] = max(ev.factor, 1.0)
+                    self._straggle_until[w] = h + max(ev.duration, 1)
         return self.alive.copy()

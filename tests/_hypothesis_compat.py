@@ -1,0 +1,58 @@
+"""Degrade-don't-error guard for the hypothesis property tests.
+
+``hypothesis`` is a dev-only dependency (requirements-dev.txt). With it
+installed this module is a pure re-export. Without it, importing modules
+still collect and their plain tests still run: each ``@given`` test body
+is replaced by ``pytest.importorskip("hypothesis")``, so only the
+property tests report as skipped instead of the whole module erroring at
+collection time.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Inert placeholder accepted anywhere a SearchStrategy is; every
+        operation (call, attribute, map/filter chain) returns itself. Only
+        ever constructed at decoration time — the guarded test never runs."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    class _StrategiesModule:
+        def __getattr__(self, name):
+            return _Strategy()
+
+    st = _StrategiesModule()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # zero-arg replacement: the original signature's hypothesis-
+            # injected parameters must not look like pytest fixtures
+            def skipper():
+                pytest.importorskip(
+                    "hypothesis",
+                    reason="property test needs hypothesis "
+                           "(pip install -r requirements-dev.txt)")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def settings(*args, **_kwargs):
+        if args and callable(args[0]):                 # bare @settings
+            return args[0]
+
+        def deco(fn):
+            return fn
+        return deco

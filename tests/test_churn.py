@@ -1,0 +1,275 @@
+"""Dynamic-membership (churn) tests: schedule generation, topology repair,
+tau re-equalization over survivors, consensus-tracker membership, and a
+full engine round loop under a crash schedule.
+
+Covers the four tentpole guarantees:
+  (a) the round topology stays connected after any single departure,
+  (b) taus are re-equalized over the surviving set,
+  (c) the consensus tracker holds no rows for departed workers,
+  (d) run_dfl under a crash schedule still improves accuracy.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.configs.base import FedHPConfig
+from repro.core import topology as topo
+from repro.core.algorithms import STRATEGIES
+from repro.core.consensus import ConsensusTracker, pairwise_distances
+from repro.core.controller import AdaptiveController, equalized_taus, prune_dead
+from repro.core.experiment import churn_from_config, run_algorithm
+from repro.simulation.cluster import ChurnEvent, ChurnSchedule, SimCluster
+
+
+def _star(n: int) -> np.ndarray:
+    """Hub-and-spoke: removing the hub (0) disconnects everything."""
+    a = np.zeros((n, n), np.int8)
+    a[0, 1:] = 1
+    a[1:, 0] = 1
+    return a
+
+
+# ---------------------------------------------------------------------------
+# ChurnSchedule
+# ---------------------------------------------------------------------------
+
+def test_schedule_generate_deterministic():
+    a = ChurnSchedule.generate(10, 50, rate=0.3, seed=4)
+    b = ChurnSchedule.generate(10, 50, rate=0.3, seed=4)
+    assert a.events == b.events
+    c = ChurnSchedule.generate(10, 50, rate=0.3, seed=5)
+    assert a.events != c.events
+
+
+def test_schedule_generate_respects_min_alive():
+    n = 6
+    for seed in range(20):           # incl. rejoin interleavings (default p)
+        sched = ChurnSchedule.generate(n, 60, rate=1.0, seed=seed,
+                                       min_alive=3)
+        cl = SimCluster(n, model_bits=1e3, churn=sched)
+        for h in range(60):
+            assert cl.advance_round(h).sum() >= 3, (seed, h)
+
+
+def test_cluster_applies_events():
+    n = 5
+    sched = ChurnSchedule((
+        ChurnEvent(2, "leave", 1),
+        ChurnEvent(3, "crash", 2),
+        ChurnEvent(5, "join", 1),
+        ChurnEvent(4, "straggle", 0, factor=8.0, duration=3),
+    ))
+    cl = SimCluster(n, model_bits=1e3, seed=0, churn=sched)
+    assert cl.advance_round(0).all()
+    assert not cl.advance_round(2)[1]
+    alive = cl.advance_round(3)
+    assert not alive[2] and cl.last_crashed[2]
+    mu_before = cl.mu_mean[0]
+    cl.advance_round(4)
+    assert cl.sample_mu()[0] > 4 * mu_before       # 8x spike, small noise
+    alive = cl.advance_round(5)
+    assert alive[1] and cl.last_joined[1]
+    cl.advance_round(8)                            # spike expired
+    assert cl._straggle_factor[0] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# (a) topology repair
+# ---------------------------------------------------------------------------
+
+def test_repair_connectivity_any_single_departure():
+    for base in (_star(7), topo.ring_topology(8),
+                 topo.make_base_topology(9, "erdos:0.3", seed=1)):
+        n = base.shape[0]
+        for dead in range(n):
+            alive = np.ones(n, bool)
+            alive[dead] = False
+            rep = topo.repair_connectivity(base, alive)
+            live = np.nonzero(alive)[0]
+            assert rep[dead].sum() == 0 and rep[:, dead].sum() == 0
+            assert topo.is_connected(rep[np.ix_(live, live)])
+
+
+def test_repair_prefers_cheap_links():
+    # two components {0,1} and {2,3}; the 1-3 link is far cheaper
+    adj = np.zeros((4, 4), np.int8)
+    adj[0, 1] = adj[1, 0] = 1
+    adj[2, 3] = adj[3, 2] = 1
+    cost = np.full((4, 4), 100.0)
+    cost[1, 3] = cost[3, 1] = 1.0
+    rep = topo.repair_connectivity(adj, np.ones(4, bool), cost)
+    assert rep[1, 3] == 1 and rep[3, 1] == 1
+    assert topo.is_connected(rep)
+
+
+def test_strategies_return_connected_topology_under_departure():
+    n = 8
+    cfg = FedHPConfig(num_workers=n, tau_init=4, tau_max=20)
+    alive = np.ones(n, bool)
+    alive[[0, 5]] = False
+    live = np.nonzero(alive)[0]
+    for name, cls in STRATEGIES.items():
+        strat = cls(cfg, topo.full_topology(n))
+        plan = strat.plan(0, alive=alive)
+        assert plan.adj[~alive].sum() == 0, name
+        if name == "ldsgd":                      # round 0 is local-only
+            plan = strat.plan(cfg.ldsgd_i1, alive=alive)
+        sub = plan.adj[np.ix_(live, live)]
+        assert topo.is_connected(sub), name
+        assert (plan.taus[~alive] == 0).all(), name
+
+
+# ---------------------------------------------------------------------------
+# (b) tau re-equalization over survivors
+# ---------------------------------------------------------------------------
+
+def test_taus_reequalized_over_survivors():
+    n = 8
+    rng = np.random.default_rng(2)
+    mu = rng.uniform(0.05, 0.5, n)
+    beta = rng.uniform(0.5, 3.0, (n, n))
+    np.fill_diagonal(beta, 0.0)
+    alive = np.ones(n, bool)
+    alive[[1, 4]] = False
+    adj = prune_dead(topo.full_topology(n), alive, cost=beta)
+    taus, pace = equalized_taus(adj, mu, beta, tau_star=16, tau_max=50,
+                                alive=alive)
+    assert (taus[~alive] == 0).all()
+    assert alive[pace]
+    # survivors' predicted finish times cluster at the pace-setter's
+    comm = np.where(adj > 0, beta, 0.0).max(1)
+    t = taus * mu + comm
+    t_pace = t[pace]
+    for i in np.nonzero(alive)[0]:
+        if 1 < taus[i] < 50:                     # not floor/cap-clamped
+            assert t[i] <= t_pace + 1e-9
+            assert t[i] + mu[i] > t_pace - 1e-9  # within one local step
+
+
+def test_controller_decides_over_survivors_only():
+    n = 10
+    rng = np.random.default_rng(3)
+    mu = rng.uniform(0.05, 0.5, n)
+    beta = rng.uniform(0.5, 3.0, (n, n))
+    beta = (beta + beta.T) / 2
+    np.fill_diagonal(beta, 0.0)
+    ctl = AdaptiveController(topo.full_topology(n), tau_max=30)
+    tr = ConsensusTracker(n)
+    x = rng.normal(size=(n, 16))
+    tr.update(topo.full_topology(n), pairwise_distances(x), 5.0)
+    alive = np.ones(n, bool)
+    alive[[0, 7, 9]] = False
+    tr.sync_membership(alive)
+    dec = ctl.decide(mu, beta, tr, f1=2.0, smooth_l=1.0, sigma=1.0,
+                     eta=0.1, rounds=100, alive=alive)
+    assert (dec.taus[~alive] == 0).all()
+    assert (dec.taus[alive] >= 1).all()
+    assert alive[dec.pace_worker]
+    live = np.nonzero(alive)[0]
+    assert topo.is_connected(dec.adj[np.ix_(live, live)])
+    # round time is attained by a survivor, not a ghost
+    t = dec.taus * mu + np.where(dec.adj > 0, beta, 0.0).max(1)
+    assert np.isclose(dec.round_time, t[alive].max())
+
+
+# ---------------------------------------------------------------------------
+# (c) consensus tracker membership
+# ---------------------------------------------------------------------------
+
+def test_tracker_drops_rows_for_departed():
+    n = 6
+    tr = ConsensusTracker(n)
+    x = np.random.default_rng(0).normal(size=(n, 8))
+    tr.update(topo.full_topology(n), pairwise_distances(x), 1.0)
+    assert (tr.dist[np.triu_indices(n, 1)] > 0).all()
+    alive = np.ones(n, bool)
+    alive[[2, 4]] = False
+    tr.sync_membership(alive)
+    assert tr.dist[2].sum() == 0 and tr.dist[:, 2].sum() == 0
+    assert tr.dist[4].sum() == 0 and tr.dist[:, 4].sum() == 0
+    assert not tr.present[2] and not tr.present[4]
+    # Eq. 36 normalizes over survivors and never charges departed pairs
+    empty = np.zeros((n, n), np.int8)
+    bound = tr.average_consensus_bound(empty)
+    live = np.nonzero(alive)[0]
+    sub = tr.dist[np.ix_(live, live)]
+    assert np.isclose(bound, sub.sum() / len(live) ** 2)
+
+
+def test_tracker_reinit_on_rejoin():
+    n = 5
+    tr = ConsensusTracker(n)
+    x = np.random.default_rng(1).normal(size=(n, 8))
+    tr.update(topo.full_topology(n), pairwise_distances(x), 1.0)
+    alive = np.ones(n, bool)
+    alive[3] = False
+    tr.sync_membership(alive)
+    alive[3] = True
+    tr.sync_membership(alive)
+    assert tr.present[3]
+    # fresh row gets the pessimistic mean prior, not stale zeros
+    others = [i for i in range(n) if i != 3]
+    assert (tr.dist[3, others] > 0).all()
+    assert tr.dist[3, 3] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# (d) engine round loop under a crash schedule
+# ---------------------------------------------------------------------------
+
+CFG = FedHPConfig(num_workers=8, rounds=14, tau_init=5, tau_max=20,
+                  lr=0.1, batch_size=32, seed=3)
+
+
+def test_run_dfl_improves_under_crash_schedule():
+    sched = ChurnSchedule((
+        ChurnEvent(3, "crash", 2),
+        ChurnEvent(6, "crash", 5),
+        ChurnEvent(8, "straggle", 1, factor=5.0, duration=4),
+    ))
+    h = run_algorithm("fedhp", CFG, non_iid_p=0.3, rounds=14, churn=sched)
+    assert len(h.records) == 14
+    assert np.isfinite([r.loss for r in h.records]).all()
+    assert h.final_accuracy > 0.8
+    assert h.final_accuracy > h.records[0].accuracy
+    # crash rounds charge the detection timeout on top of compute+comm
+    r3 = h.records[3]
+    assert r3.round_time >= CFG.crash_timeout
+
+
+def test_run_dfl_generated_churn_all_strategies():
+    cfg = FedHPConfig(num_workers=8, rounds=12, tau_init=5, tau_max=20,
+                      lr=0.1, batch_size=32, seed=3, churn_rate=0.3)
+    sched = churn_from_config(cfg, 12)
+    assert sched is not None and len(sched.events) > 0
+    for algo in ("fedhp", "dpsgd", "ldsgd", "pens"):
+        h = run_algorithm(algo, cfg, non_iid_p=0.3, rounds=12, churn=sched)
+        assert h.final_accuracy > 0.7, algo
+        assert np.isfinite([r.loss for r in h.records]).all(), algo
+
+
+def test_run_adpsgd_survives_churn():
+    sched = ChurnSchedule((
+        ChurnEvent(2, "leave", 0),
+        ChurnEvent(4, "crash", 3),
+        ChurnEvent(7, "join", 0),
+    ))
+    h = run_algorithm("adpsgd", CFG, non_iid_p=0.3, rounds=12, churn=sched)
+    assert len(h.records) > 0
+    assert h.final_accuracy > 0.7
+    assert np.isfinite([r.loss for r in h.records]).all()
+
+
+def test_join_reinits_from_population():
+    """A worker that rejoins adopts the incumbents' average model, so the
+    fleet's consensus distance does not blow up at the join round."""
+    sched = ChurnSchedule((
+        ChurnEvent(2, "leave", 1),
+        ChurnEvent(8, "join", 1),
+    ))
+    h = run_algorithm("fedhp", CFG, non_iid_p=0.3, rounds=12, churn=sched)
+    cons = [r.consensus for r in h.records]
+    assert np.isfinite(cons).all()
+    # join round's consensus stays within the run's historical envelope
+    assert cons[8] <= 3.0 * max(cons[:8]) + 1e-6

@@ -1,7 +1,8 @@
 """Tests for consensus-distance estimation (Eq. 7-9, 36-39, 43)."""
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+# hypothesis is optional (dev dependency): the guard skips only the
+# property tests when it is absent, plain tests still run
+from _hypothesis_compat import given, settings, st
 
 from repro.core import topology as topo
 from repro.core.consensus import (

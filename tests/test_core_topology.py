@@ -1,8 +1,9 @@
 """Unit + property tests for repro.core.topology."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+# hypothesis is optional (dev dependency): the guard skips only the
+# property tests when it is absent, plain tests still run
+from _hypothesis_compat import given, settings, st
 
 from repro.core import topology as topo
 

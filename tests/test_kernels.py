@@ -7,7 +7,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+# hypothesis is optional (dev dependency): the guard skips only the
+# property tests when it is absent, plain tests still run
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_fwd

@@ -10,7 +10,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+# hypothesis is optional (dev dependency): the guard skips only the
+# property tests when it is absent, plain tests still run
+from _hypothesis_compat import given, settings, st
 
 from repro.data.partition import label_histogram, pskew_partition
 from repro.data.synthetic import (make_classification_data, make_token_data,
