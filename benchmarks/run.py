@@ -7,11 +7,14 @@
   fig7   average waiting time, 5 algorithms
   kernels  Pallas kernel micro-benches (interpret mode) vs jnp references
   collective  gossip-vs-allreduce wire bytes for the adapted topology
+  fused    scan-based engine vs reference engine rounds/sec (D-PSGD shape)
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6]
 Output: CSV lines  benchmark,metric,value  + a summary table.
 Quick mode (default) shrinks workers/rounds to finish on one CPU core;
---full uses the paper's 30 workers / full rounds.
+--full uses the paper's 30 workers / full rounds; --smoke shrinks the
+fused bench further for CI, where a fused-slower-than-reference result
+fails the run (exit 1).
 """
 from __future__ import annotations
 
@@ -174,6 +177,57 @@ def bench_kernels(rows, full):
          float(jnp.max(jnp.abs(ref - got))))
 
 
+def bench_fused(rows, full):
+    """Scan-based fused engine (core/fused.py) vs the reference round loop
+    on the D-PSGD smoke shape: identical work, rounds/sec compared.
+
+    Timed on the second run each (first run pays jit compilation for both
+    engines); fresh cluster/strategy per run so RNG streams match, but
+    data synthesis/sharding stays OUTSIDE the timer — only the engine
+    loop is measured. In --smoke mode a speedup < 1 marks the whole
+    benchmark run failed."""
+    from repro.core import engine
+    from repro.core.experiment import setup_experiment
+    from repro.core.algorithms import make_strategy
+    from repro.core.fused import run_dfl_fused
+    from repro.core.topology import make_base_topology
+    from repro.simulation.cluster import SimCluster
+
+    cfg = base_cfg(full)
+    rounds = 20 if SMOKE else (40 if not full else 80)
+    if SMOKE:
+        cfg = replace(cfg, num_workers=8)
+    cfg = replace(cfg, algorithm="dpsgd")
+    train, tx, ty, shards, cluster0 = setup_experiment(
+        cfg, non_iid_p=0.4, spread=SPREAD, rounds=rounds)
+    base = make_base_topology(cfg.num_workers, cfg.base_topology, cfg.seed)
+
+    def timed(fused):
+        # stateful inputs rebuilt per run so the RNG streams restart
+        cluster = SimCluster(cfg.num_workers, model_bits=cluster0.model_bits,
+                             seed=cfg.seed)
+        strategy = make_strategy(cfg, base)
+        fn = run_dfl_fused if fused else engine.run_dfl
+        t0 = time.perf_counter()
+        h = fn(train, tx, ty, shards, cluster, cfg, strategy, rounds=rounds)
+        return time.perf_counter() - t0, h
+
+    for fused in (False, True):               # warm the jit caches
+        timed(fused)
+    t_ref, h_ref = timed(False)
+    t_fus, h_fus = timed(True)
+    assert len(h_ref.records) == len(h_fus.records)
+    emit(rows, "fused", "ref_rounds_per_s", round(rounds / t_ref, 2))
+    emit(rows, "fused", "fused_rounds_per_s", round(rounds / t_fus, 2))
+    speedup = t_ref / t_fus
+    emit(rows, "fused", "speedup", round(speedup, 2))
+    emit(rows, "fused", "final_acc_drift",
+         round(abs(h_ref.final_accuracy - h_fus.final_accuracy), 6))
+    if SMOKE and speedup < 1.0:
+        FAILURES.append(f"fused engine slower than reference "
+                        f"({speedup:.2f}x)")
+
+
 def bench_collective(rows, full):
     """Adapted-topology gossip vs all-reduce wire bytes (the roofline knob
     the paper's technique controls; DESIGN.md §3)."""
@@ -197,15 +251,23 @@ BENCHES = {
     "churn": bench_churn,
     "kernels": bench_kernels,
     "collective": bench_collective,
+    "fused": bench_fused,
 }
+
+SMOKE = False              # set by --smoke; bench_fused reads it
+FAILURES: list[str] = []   # regressions collected during the run
 
 
 def main(argv=None) -> int:
+    global SMOKE
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper scale: 30 workers, full rounds")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI shape: tiny cluster, perf regressions fatal")
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
+    SMOKE = args.smoke
 
     rows: list = []
     print("benchmark,metric,value")
@@ -215,7 +277,9 @@ def main(argv=None) -> int:
         BENCHES[name](rows, args.full)
     print(f"\n# {len(rows)} metrics in {time.time() - t0:.0f}s "
           f"({'full' if args.full else 'quick'} mode)")
-    return 0
+    for f in FAILURES:
+        print(f"# FAIL: {f}")
+    return 1 if FAILURES else 0
 
 
 if __name__ == "__main__":

@@ -12,6 +12,13 @@ ChurnSchedule (joins, graceful leaves, crashes, straggler spikes) hits
 FedHP's adaptive topology + tau re-equalization vs the static baselines.
 
     PYTHONPATH=src python examples/heterogeneity_study.py --churn
+
+``--fused`` routes the synchronous algorithms through the scan-based
+fused engine (core/fused.py) — same trajectories, one device dispatch
+per replan segment instead of ~10 per round (AD-PSGD is event-driven
+and always runs on its reference engine):
+
+    PYTHONPATH=src python examples/heterogeneity_study.py --fused
 """
 import argparse
 from dataclasses import replace
@@ -26,24 +33,25 @@ TARGET_ACC = 0.85
 CHURN_ALGOS = ("fedhp", "dpsgd", "adpsgd")
 
 
-def heterogeneity_study():
+def heterogeneity_study(fused: bool = False):
     print(f"{'algo':8s} {'p':>4s} {'acc':>6s} {'time(s)':>8s} {'wait':>6s}")
     for p in (0.1, 0.8):
         for algo in ("fedhp", "dpsgd", "ldsgd", "pens", "adpsgd"):
             h = run_algorithm(algo, CFG, non_iid_p=p, spread=3.0,
-                              time_budget=BUDGET)
+                              time_budget=BUDGET,
+                              fused=fused and algo != "adpsgd")
             print(f"{algo:8s} {p:4.1f} {h.final_accuracy:6.3f} "
                   f"{h.records[-1].cumulative_time:8.1f} "
                   f"{h.avg_waiting:6.2f}")
 
     print("\nfault tolerance: workers {0, 3} die at round 5 (FedHP)")
     h = run_algorithm("fedhp", CFG, non_iid_p=0.4, spread=3.0,
-                      time_budget=BUDGET, fail_at={5: [0, 3]})
+                      time_budget=BUDGET, fail_at={5: [0, 3]}, fused=fused)
     print(f"  survived; final accuracy {h.final_accuracy:.3f} "
           f"(topology repaired, Sec. DESIGN §6)")
 
 
-def churn_study():
+def churn_study(fused: bool = False):
     """FedHP vs D-PSGD vs AD-PSGD under 10% / 30% dynamic membership."""
     print("dynamic membership: join/leave/crash/straggle schedule, seeded")
     print(f"{'algo':8s} {'churn':>6s} {'acc':>6s} "
@@ -57,7 +65,8 @@ def churn_study():
                          if any(e.kind == k for e in sched.events))
         for algo in CHURN_ALGOS:
             h = run_algorithm(algo, cfg, non_iid_p=0.4, spread=3.0,
-                              churn=sched, time_budget=BUDGET)
+                              churn=sched, time_budget=BUDGET,
+                              fused=fused and algo != "adpsgd")
             t = h.completion_time(TARGET_ACC)
             t_str = f"{t:9.1f}" if t is not None else f"{'never':>9s}"
             print(f"{algo:8s} {rate:6.0%} {h.final_accuracy:6.3f} {t_str} "
@@ -68,11 +77,13 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--churn", action="store_true",
                     help="run the dynamic-membership (churn) scenario")
+    ap.add_argument("--fused", action="store_true",
+                    help="run synchronous algorithms on the fused engine")
     args = ap.parse_args()
     if args.churn:
-        churn_study()
+        churn_study(fused=args.fused)
     else:
-        heterogeneity_study()
+        heterogeneity_study(fused=args.fused)
 
 
 if __name__ == "__main__":

@@ -169,6 +169,11 @@ class FedHPConfig:
     base_topology: str = "full"      # full | ring | erdos:<p>
     algorithm: str = "fedhp"         # fedhp | dpsgd | adpsgd | ldsgd | pens
     seed: int = 0
+    # fused engine (core/fused.py): adaptive strategies replan every this
+    # many rounds; 1 == reference behavior (replan each round), larger
+    # segments freeze (A^h, tau^h) between replans for throughput.
+    # Static-plan strategies always fuse the whole horizon.
+    replan_every: int = 1
     # LD-SGD alternation (baseline)
     ldsgd_i1: int = 4
     ldsgd_i2: int = 1

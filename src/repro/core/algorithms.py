@@ -29,6 +29,10 @@ class Strategy:
     """Base: fixed base topology, fixed tau (what D-PSGD does on a ring)."""
 
     name = "base"
+    # adaptive strategies plan from the previous round's measurements, so
+    # the fused engine must surface observations between scan segments;
+    # static (observation-free) strategies fuse the whole horizon
+    adaptive = False
 
     def __init__(self, cfg: FedHPConfig, base_adj: np.ndarray):
         self.cfg = cfg
@@ -103,6 +107,7 @@ class PENSStrategy(Strategy):
     overhead the paper measures in Fig. 7."""
 
     name = "pens"
+    adaptive = True
 
     def __init__(self, cfg: FedHPConfig, base_adj: np.ndarray):
         super().__init__(cfg, base_adj)
@@ -157,6 +162,7 @@ class FedHPStrategy(Strategy):
     """The paper's adaptive control (Alg. 1-3): joint tau + topology."""
 
     name = "fedhp"
+    adaptive = True
 
     def __init__(self, cfg: FedHPConfig, base_adj: np.ndarray):
         super().__init__(cfg, base_adj)

@@ -78,22 +78,28 @@ class History:
 # jit'd worker math (vmapped over the worker dimension)
 # ---------------------------------------------------------------------------
 
+def _sgd_worker(params, bx, by, tau, lr, tau_max: int):
+    """tau-masked local SGD for ONE worker (Eq. 3). Shared with the fused
+    engine (core/fused.py) — the equivalence guarantee rests on both
+    engines running this exact step."""
+
+    def step(p, xs):
+        k, (x, y) = xs
+        g = jax.grad(classifier_loss)(p, {"x": x, "y": y})
+        mask = (k < tau).astype(jnp.float32)
+        return jax.tree.map(lambda w, gg: w - lr * mask * gg, p, g), None
+
+    ks = jnp.arange(tau_max)
+    out, _ = jax.lax.scan(step, params, (ks, (bx, by)))
+    return out
+
+
 @partial(jax.jit, static_argnames=("tau_max",))
 def _local_train(stacked, batches_x, batches_y, taus, lr, tau_max: int):
     """tau_i masked local SGD. stacked: [W,...] pytree; batches: [W,T,B,*]."""
-
-    def one_worker(params, bx, by, tau):
-        def step(p, xs):
-            k, (x, y) = xs
-            g = jax.grad(classifier_loss)(p, {"x": x, "y": y})
-            mask = (k < tau).astype(jnp.float32)
-            return jax.tree.map(lambda w, gg: w - lr * mask * gg, p, g), None
-
-        ks = jnp.arange(tau_max)
-        out, _ = jax.lax.scan(step, params, (ks, (bx, by)))
-        return out
-
-    return jax.vmap(one_worker)(stacked, batches_x, batches_y, taus)
+    return jax.vmap(
+        lambda p, bx, by, tau: _sgd_worker(p, bx, by, tau, lr, tau_max))(
+            stacked, batches_x, batches_y, taus)
 
 
 @jax.jit
@@ -104,19 +110,26 @@ def _gossip(stacked, mix):
         stacked)
 
 
+def _blend_joined(stacked, keep, w):
+    """Rows in ``keep`` adopt the w-weighted average of the fleet; an
+    all-False keep (or all-zero w) leaves the pytree untouched exactly.
+    Shared with the fused engine, which precomputes keep/w host-side."""
+
+    def leaf(l):
+        mean = jnp.tensordot(w, l.astype(jnp.float32), axes=1)
+        k = keep.reshape((-1,) + (1,) * (l.ndim - 1))
+        return jnp.where(k, mean[None].astype(l.dtype), l)
+
+    return jax.tree.map(leaf, stacked)
+
+
 @jax.jit
 def _reinit_joined(stacked, joined, donors):
     """Joining workers adopt the average of the incumbent alive models
     (a fresh worker starting from x^0 mid-run would wreck consensus)."""
     w = donors.astype(jnp.float32)
     w = w / jnp.maximum(w.sum(), 1.0)
-
-    def leaf(l):
-        mean = jnp.tensordot(w, l.astype(jnp.float32), axes=1)
-        keep = joined.reshape((-1,) + (1,) * (l.ndim - 1))
-        return jnp.where(keep, mean[None].astype(l.dtype), l)
-
-    return jax.tree.map(leaf, stacked)
+    return _blend_joined(stacked, joined, w)
 
 
 @jax.jit
@@ -128,28 +141,33 @@ def _flatten_workers(stacked):
         axis=1)
 
 
+def _measure_worker(p, q, eval_x, eval_y, probe_x, probe_y):
+    """One worker's Alg. 1 measurements. NOTE the eval/probe tensors are
+    the FULL [W, 256] stacks for every worker (historical semantics both
+    engines must share — FedHP's decisions were tuned against it)."""
+    loss_p = classifier_loss(p, {"x": eval_x, "y": eval_y})
+    acc = accuracy(p, eval_x, eval_y)
+    g_p = jax.grad(classifier_loss)(p, {"x": eval_x, "y": eval_y})
+    g_q = jax.grad(classifier_loss)(q, {"x": eval_x, "y": eval_y})
+    num = jnp.sqrt(sum(jnp.sum(jnp.square(a - b)) for a, b in
+                       zip(jax.tree.leaves(g_p), jax.tree.leaves(g_q))))
+    den = jnp.sqrt(sum(jnp.sum(jnp.square(a - b)) for a, b in
+                       zip(jax.tree.leaves(p), jax.tree.leaves(q))))
+    smooth_l = num / jnp.maximum(den, 1e-8)
+    # sigma_i: variance of a small-probe gradient vs full-batch gradient
+    g_s = jax.grad(classifier_loss)(p, {"x": probe_x, "y": probe_y})
+    sig2 = sum(jnp.sum(jnp.square(a - b)) for a, b in
+               zip(jax.tree.leaves(g_s), jax.tree.leaves(g_p)))
+    upd = den
+    return loss_p, acc, smooth_l, jnp.sqrt(sig2), upd
+
+
 @jax.jit
 def _measure(stacked, prev_stacked, eval_x, eval_y, probe_x, probe_y):
     """Per-worker loss/acc + Alg. 1 estimates (L_i, sigma_i) + update norms."""
-
-    def per_worker(p, q):
-        loss_p = classifier_loss(p, {"x": eval_x, "y": eval_y})
-        acc = accuracy(p, eval_x, eval_y)
-        g_p = jax.grad(classifier_loss)(p, {"x": eval_x, "y": eval_y})
-        g_q = jax.grad(classifier_loss)(q, {"x": eval_x, "y": eval_y})
-        num = jnp.sqrt(sum(jnp.sum(jnp.square(a - b)) for a, b in
-                           zip(jax.tree.leaves(g_p), jax.tree.leaves(g_q))))
-        den = jnp.sqrt(sum(jnp.sum(jnp.square(a - b)) for a, b in
-                           zip(jax.tree.leaves(p), jax.tree.leaves(q))))
-        smooth_l = num / jnp.maximum(den, 1e-8)
-        # sigma_i: variance of a small-probe gradient vs full-batch gradient
-        g_s = jax.grad(classifier_loss)(p, {"x": probe_x, "y": probe_y})
-        sig2 = sum(jnp.sum(jnp.square(a - b)) for a, b in
-                   zip(jax.tree.leaves(g_s), jax.tree.leaves(g_p)))
-        upd = den
-        return loss_p, acc, smooth_l, jnp.sqrt(sig2), upd
-
-    return jax.vmap(per_worker)(stacked, prev_stacked)
+    return jax.vmap(lambda p, q: _measure_worker(p, q, eval_x, eval_y,
+                                                 probe_x, probe_y))(
+        stacked, prev_stacked)
 
 
 @jax.jit
@@ -191,7 +209,9 @@ def _draw_batches(rng, data: Dataset, shards, taus_cap: int, batch: int):
         sel = shard[ix]
         bx[w] = data.x[sel]
         by[w] = data.y[sel]
-    return jnp.asarray(bx), jnp.asarray(by)
+    # numpy out: run_dfl feeds these straight into jit (implicit transfer);
+    # the fused engine pads and stacks whole segments host-side first
+    return bx, by
 
 
 def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
@@ -235,9 +255,13 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
         adj[~alive, :] = 0
         adj[:, ~alive] = 0
         # churn safety net: if the strategy's topology lost connectivity to
-        # a departure, cheapest-reconnect the survivors (link-time cost)
-        if not alive.all() and alive.sum() > 1 \
-                and adj[alive][:, alive].sum() > 0:
+        # a departure, cheapest-reconnect the survivors (link-time cost).
+        # Gate on the strategy's INTENT (plan.adj has links) rather than on
+        # surviving links — `adj[alive][:, alive].sum() > 0` skipped repair
+        # exactly when the survivors lost every link, silently disabling
+        # gossip for the round (LD-SGD local-only rounds, with an all-zero
+        # plan, still legitimately skip)
+        if not alive.all() and alive.sum() > 1 and plan.adj.sum() > 0:
             adj = topo.repair_connectivity(adj, alive, cost=beta)
         taus = np.where(alive, np.clip(plan.taus, 1, cfg.tau_max), 0)
         lr = cfg.lr * (cfg.lr_decay ** h)

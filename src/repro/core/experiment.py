@@ -61,17 +61,34 @@ def run_algorithm(algorithm: str, cfg: FedHPConfig, *, non_iid_p: float = 0.1,
                   rounds: int | None = None, mixing: str = "uniform",
                   fail_at: dict | None = None, spread: float = 1.0,
                   churn: ChurnSchedule | None = None,
-                  time_budget: float | None = None) -> engine.History:
-    """Run one (algorithm, non-IID level) cell and return its History."""
+                  time_budget: float | None = None,
+                  fused: bool = False, seeds=None):
+    """Run one (algorithm, non-IID level) cell and return its History.
+
+    ``fused=True`` routes synchronous algorithms through the scan-based
+    engine (``core.fused.run_dfl_fused``) — equivalent trajectories, far
+    fewer host round trips; ``seeds`` (fused only) batches S experiments
+    through one vmapped scan and returns ``list[History]``. AD-PSGD is
+    event-driven and always uses its reference engine.
+    """
+    if seeds is not None and not fused:
+        raise ValueError("seeds batching requires fused=True")
     cfg = replace(cfg, algorithm=algorithm)
     train, tx, ty, shards, cluster = setup_experiment(
         cfg, non_iid_p=non_iid_p, fail_at=fail_at, spread=spread,
         churn=churn, rounds=rounds)
     if algorithm == "adpsgd":
+        if fused:
+            raise ValueError("adpsgd is event-driven; no fused path")
         return engine.run_adpsgd(train, tx, ty, shards, cluster, cfg,
                                  rounds=rounds, time_budget=time_budget)
     base = make_base_topology(cfg.num_workers, cfg.base_topology, cfg.seed)
     strategy = make_strategy(cfg, base)
+    if fused:
+        from repro.core.fused import run_dfl_fused
+        return run_dfl_fused(train, tx, ty, shards, cluster, cfg, strategy,
+                             rounds=rounds, mixing=mixing,
+                             time_budget=time_budget, seeds=seeds)
     return engine.run_dfl(train, tx, ty, shards, cluster, cfg, strategy,
                           rounds=rounds, mixing=mixing,
                           time_budget=time_budget)

@@ -1,0 +1,405 @@
+"""Fused scan-based DFL round engine — the fast path next to ``run_dfl``.
+
+``run_dfl_fused`` executes whole blocks of rounds on device inside one
+``jax.lax.scan`` instead of the reference engine's one Python iteration
+(~10 dispatches + host syncs) per round:
+
+- Static-plan baselines (D-PSGD ring, LD-SGD alternation, the plain base
+  strategy) fuse the entire horizon into a single scan.
+- Adaptive strategies (FedHP, PENS) scan in segments of
+  ``cfg.replan_every`` rounds; measurements (Alg. 1 lines 4-5) surface to
+  the host only at segment boundaries, where the strategy's
+  ``observe``/``plan`` cycle is replayed round by round. With
+  ``replan_every=1`` the fused engine replans every round exactly like
+  the reference; larger segments freeze (A^h, tau^h) within a segment —
+  a documented behavioral deviation bought for throughput (README.md).
+- Gossip (Eq. 5-6) runs through the Pallas ``gossip_mix_2d`` kernel on
+  the flattened [W, P] parameter matrix; the kernel's padding shim means
+  P need not be a tile multiple, so real model sizes work.
+- Churn masks (alive / joined / donor weights) become traced arrays
+  threaded through the scan — join re-init, metric masking and mixing all
+  happen on device. The schedule itself is replayed host-side so the
+  cluster's RNG stream matches the reference engine draw for draw.
+- ``seeds=jnp.arange(S)`` adds a ``jax.vmap`` axis over model-init /
+  batch-sampling seeds: S experiments amortize one scan (sweep workloads
+  like benchmarks/hillclimb.py). Static-plan strategies only — an
+  adaptive plan is feedback from one seed's trajectory.
+
+Interchangeability with ``run_dfl`` is proven by the differential harness
+in ``tests/test_fused_equivalence.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedHPConfig
+from repro.core import topology as topo
+from repro.core.algorithms import Strategy
+from repro.core.engine import (History, RoundRecord, _blend_joined,
+                               _cross_loss_matrix, _draw_batches,
+                               _flatten_workers, _measure_worker,
+                               _sgd_worker)
+from repro.data.synthetic import Dataset
+from repro.kernels.gossip_mix import gossip_mix_2d
+from repro.simulation.cluster import SimCluster
+from repro.simulation.model import accuracy, classifier_loss, init_classifier
+
+# static-plan strategies would otherwise stage the whole horizon's batch
+# tensors host-side at once ([S, K, W, tau, B, D] f32); chunking the scan
+# bounds that at ~64 rounds per dispatch with no semantic difference
+# (static plans are recomputed per round either way)
+MAX_FUSE_ROUNDS = 64
+
+
+# ---------------------------------------------------------------------------
+# device code: one scan over the rounds of a segment
+# ---------------------------------------------------------------------------
+
+def _unflatten(flat, stacked):
+    """Inverse of ``engine._flatten_workers`` against the template pytree."""
+    leaves = jax.tree.leaves(stacked)
+    out, off = [], 0
+    for l in leaves:
+        sz = int(np.prod(l.shape[1:])) if l.ndim > 1 else 1
+        out.append(flat[:, off:off + sz].reshape(l.shape).astype(l.dtype))
+        off += sz
+    return jax.tree.unflatten(jax.tree.structure(stacked), out)
+
+
+@partial(jax.jit, static_argnames=("tau_cap", "measure", "needs_cross",
+                                   "interpret"))
+def _scan_segment(stacked, bx, by, ex, ey, px, py, taus, lrs, mixes, ew, cw,
+                  keep, rw, tx, ty, *, tau_cap: int, measure: bool,
+                  needs_cross: bool, interpret: bool):
+    """Run K rounds on device. Batched over a leading seed axis S on
+    (stacked, bx, by, ex, ey, px, py); control inputs (taus .. rw, [K]-
+    leading) and the test set are shared across seeds.
+
+    Returns (stacked', outs) where outs is a dict of [S, K, ...] metric
+    trajectories.
+    """
+    leaves = jax.tree.leaves(stacked)
+    p_total = sum(int(np.prod(l.shape[2:])) for l in leaves)
+    cols = min(1024, p_total)
+    rows = -(-p_total // cols)
+
+    def one_seed(stacked, bx, by, ex, ey, px, py):
+
+        def body(carry, xs):
+            bxh, byh, tau_h, lr_h, mix_h, ew_h, cw_h, keep_h, rw_h = xs
+
+            # --- join re-init: the reference's _reinit_joined with
+            # (keep, donor weights) precomputed host-side; an all-False
+            # keep_h makes the blend an exact no-op ---
+            carry = _blend_joined(carry, keep_h, rw_h)
+            prev = carry
+
+            # --- local updating (Eq. 3), masked to tau_i — the SAME
+            # per-worker step function the reference engine vmaps ---
+            carry = jax.vmap(
+                lambda p, bxw, byw, tau: _sgd_worker(p, bxw, byw, tau,
+                                                     lr_h, tau_cap))(
+                carry, bxh, byh, tau_h)
+
+            # --- gossip (Eq. 5-6) through the Pallas kernel on [W, R, C].
+            # Row i of the mixing matrix becomes the kernel's neighbor
+            # weights: y_i = x_i + sum_j w_ij (x_j - x_i) = sum_j w_ij x_j
+            # for a row-stochastic mix; rounds without communication carry
+            # an identity mix, which the kernel maps to an exact no-op ---
+            flat = _flatten_workers(carry)
+            x2 = jnp.pad(flat, ((0, 0), (0, rows * cols - p_total)))
+            x2 = x2.reshape(-1, rows, cols)
+            y2 = jax.vmap(
+                lambda xi, wi: gossip_mix_2d(xi, x2, wi,
+                                             interpret=interpret))(x2, mix_h)
+            y_flat = y2.reshape(y2.shape[0], -1)[:, :p_total]
+            carry = _unflatten(y_flat, carry)
+
+            # --- per-round metrics: fleet accuracy/loss over alive
+            # workers + consensus distance to the alive mean ---
+            accs = jax.vmap(lambda p: accuracy(p, tx, ty))(carry)
+            tloss = jax.vmap(
+                lambda p: classifier_loss(p, {"x": tx, "y": ty}))(carry)
+            dmean = jnp.tensordot(cw_h, y_flat, axes=1)
+            dists = jnp.sqrt(jnp.sum((y_flat - dmean[None]) ** 2, axis=1))
+            outs = {"acc": jnp.dot(ew_h, accs),
+                    "loss": jnp.dot(ew_h, tloss),
+                    "consensus": jnp.dot(cw_h, dists)}
+
+            if measure:
+                # --- Alg. 1 lines 4-5: the SAME per-worker measurement
+                # function as the reference engine's _measure (eval/probe
+                # tensors passed whole, only params vmapped) ---
+                losses, _, ls, sigs, upds = jax.vmap(
+                    lambda p, q: _measure_worker(p, q, ex, ey, px, py))(
+                    carry, prev)
+                # consensus.pairwise_distances' f32 gram trick, including
+                # its cancellation noise floor for near-identical models —
+                # that floor feeds FedHP's tracker, so it is part of the
+                # behavior being reproduced
+                sq = jnp.sum(y_flat * y_flat, axis=1)
+                d2 = jnp.maximum(
+                    sq[:, None] + sq[None, :] - 2.0 * (y_flat @ y_flat.T),
+                    0.0)
+                d2 = d2 * (1.0 - jnp.eye(d2.shape[0]))
+                outs.update(losses=losses, ls=ls, sigs=sigs, upds=upds,
+                            edge=jnp.sqrt(d2))
+                if needs_cross:
+                    outs["cross"] = _cross_loss_matrix(
+                        carry, ex[:, :64], ey[:, :64])
+            return carry, outs
+
+        return jax.lax.scan(body, stacked,
+                            (bx, by, taus, lrs, mixes, ew, cw, keep, rw))
+
+    return jax.vmap(one_seed,
+                    in_axes=(0, 0, 0, 0, 0, 0, 0))(stacked, bx, by,
+                                                    ex, ey, px, py)
+
+
+# ---------------------------------------------------------------------------
+# host code: segment precompute replaying the reference engine's streams
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Segment:
+    """Per-round control inputs + host-side record fields for K rounds."""
+    bx: np.ndarray            # [S, K, W, T, B, D]
+    by: np.ndarray            # [S, K, W, T, B]
+    taus: np.ndarray          # [K, W] i32
+    lrs: np.ndarray           # [K] f32
+    mixes: np.ndarray         # [K, W, W] f32
+    ew: np.ndarray            # [K, W] f32  eval (accuracy/loss) weights
+    cw: np.ndarray            # [K, W] f32  consensus weights
+    keep: np.ndarray          # [K, W] bool join re-init mask
+    rw: np.ndarray            # [K, W] f32  donor weights
+    tau_cap: int
+    alive: list[np.ndarray]
+    adjs: list[np.ndarray]
+    mus: list[np.ndarray]
+    betas: list[np.ndarray]
+    round_time: list[float]
+    waiting: list[float]
+    mean_tau: list[float]
+    num_links: list[int]
+    cum_time: list[float]
+
+    def __len__(self) -> int:
+        return len(self.round_time)
+
+
+def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
+                        strategy: Strategy, cfg: FedHPConfig, rngs, data,
+                        shards, mixfn, clock: float,
+                        time_budget: float | None, adaptive: bool):
+    """Advance cluster/strategy/batch RNG streams for rounds h0..h0+K-1 in
+    the exact order ``run_dfl`` would, and pack the device inputs.
+
+    For an adaptive strategy the plan is frozen at the segment's first
+    round; static strategies re-plan every round (observation-free, so
+    this is exactly the reference behavior).
+    """
+    n = cfg.num_workers
+    per: list[dict] = []
+    plan = None
+    stop = False
+    for t in range(seg_len):
+        h = h0 + t
+        alive = cluster.advance_round(h)
+        joined = cluster.last_joined.copy()
+        crashed = cluster.last_crashed.copy()
+        mu = cluster.sample_mu()
+        beta = cluster.sample_beta()
+        if plan is None or not adaptive:
+            plan = strategy.plan(h, alive=alive)
+        adj = plan.adj.copy()
+        adj[~alive, :] = 0
+        adj[:, ~alive] = 0
+        # churn safety net: reconnect survivors whenever the strategy
+        # intended communication this round (plan.adj has links) but
+        # departures may have disconnected — or fully severed — them
+        if not alive.all() and alive.sum() > 1 and plan.adj.sum() > 0:
+            adj = topo.repair_connectivity(adj, alive, cost=beta)
+        taus = np.where(alive, np.clip(plan.taus, 1, cfg.tau_max), 0)
+        tau_cap = int(max(taus.max(), 1))
+        batches = [_draw_batches(rng, data, shards, tau_cap, cfg.batch_size)
+                   for rng in rngs]
+
+        # --- clock (Eq. 10-11), formulas identical to run_dfl ---
+        comm = np.where(adj.sum(1) > 0,
+                        np.where(adj > 0, beta, 0.0).max(1), 0.0)
+        t_i = taus * mu + comm
+        if plan.extra_time is not None:
+            t_i = t_i + plan.extra_time * alive
+        t_round = float(t_i[alive].max()) if alive.any() else 0.0
+        if crashed.any():
+            t_round += cfg.crash_timeout
+        waiting = float((t_round - t_i[alive]).mean()) if alive.any() else 0.0
+        clock += t_round
+
+        # --- device-side control inputs ---
+        mix = mixfn(adj) if adj.sum() > 0 else np.eye(n)
+        donors = alive & ~joined
+        do_reinit = joined.any() and donors.any()
+        keep = joined if do_reinit else np.zeros(n, bool)
+        rw = donors / max(donors.sum(), 1.0) if do_reinit else np.zeros(n)
+        if alive.any() and not alive.all():
+            ew = alive / alive.sum()
+        else:
+            ew = np.full(n, 1.0 / n)
+        cw = alive / alive.sum() if alive.any() else np.full(n, 1.0 / n)
+
+        per.append(dict(alive=alive, adj=adj, mu=mu, beta=beta, taus=taus,
+                        tau_cap=tau_cap, batches=batches, mix=mix,
+                        keep=keep, rw=rw, ew=ew, cw=cw,
+                        lr=cfg.lr * (cfg.lr_decay ** h),
+                        t_round=t_round, waiting=waiting,
+                        mean_tau=float(taus[alive].mean())
+                        if alive.any() else 0.0,
+                        num_links=int(adj.sum() // 2), cum=clock))
+        if time_budget is not None and clock >= time_budget:
+            stop = True
+            break
+
+    # bucket the scan's tau extent to the next power of two: the masked
+    # step makes extra iterations no-ops, and bucketing caps the number of
+    # distinct (seg_len, tau_cap) jit specializations the adaptive path
+    # (whose taus change every replan) can trigger at ~log2(tau_max)
+    cap = max(p["tau_cap"] for p in per)
+    cap = 1 << (cap - 1).bit_length() if cap > 1 else 1
+    n_seeds = len(rngs)
+
+    def pad(b, tc):
+        return np.pad(b, ((0, 0), (0, cap - tc)) + ((0, 0),) * (b.ndim - 2))
+
+    bx = np.stack([np.stack([pad(p["batches"][s][0], p["tau_cap"])
+                             for p in per]) for s in range(n_seeds)])
+    by = np.stack([np.stack([pad(p["batches"][s][1], p["tau_cap"])
+                             for p in per]) for s in range(n_seeds)])
+    seg = _Segment(
+        bx=bx.astype(np.float32), by=by.astype(np.int32),
+        taus=np.stack([p["taus"] for p in per]).astype(np.int32),
+        lrs=np.array([p["lr"] for p in per], np.float32),
+        mixes=np.stack([p["mix"] for p in per]).astype(np.float32),
+        ew=np.stack([p["ew"] for p in per]).astype(np.float32),
+        cw=np.stack([p["cw"] for p in per]).astype(np.float32),
+        keep=np.stack([p["keep"] for p in per]),
+        rw=np.stack([p["rw"] for p in per]).astype(np.float32),
+        tau_cap=cap,
+        alive=[p["alive"] for p in per], adjs=[p["adj"] for p in per],
+        mus=[p["mu"] for p in per], betas=[p["beta"] for p in per],
+        round_time=[p["t_round"] for p in per],
+        waiting=[p["waiting"] for p in per],
+        mean_tau=[p["mean_tau"] for p in per],
+        num_links=[p["num_links"] for p in per],
+        cum_time=[p["cum"] for p in per])
+    return seg, clock, stop
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def run_dfl_fused(data: Dataset, test_x, test_y, shards,
+                  cluster: SimCluster, cfg: FedHPConfig, strategy: Strategy,
+                  *, rounds: int | None = None, hidden: int = 64,
+                  eval_subset: int = 512, mixing: str = "uniform",
+                  time_budget: float | None = None, seeds=None,
+                  interpret: bool | None = None):
+    """Drop-in fused replacement for ``engine.run_dfl``.
+
+    With ``seeds=None`` runs one experiment from ``cfg.seed`` and returns
+    a ``History`` matching the reference engine's to tolerance. With an
+    array of ``seeds`` returns ``list[History]``, one per seed, batched
+    through a single vmapped scan: each lane uses its seed for the model
+    init PRNGKey and the batch-sampling RNG while sharing the data split,
+    cluster and (static) plans.
+    """
+    rounds = rounds or cfg.rounds
+    n = cfg.num_workers
+    adaptive = getattr(strategy, "adaptive", False)
+    batched = seeds is not None
+    seed_list = ([int(s) for s in np.asarray(seeds).reshape(-1)]
+                 if batched else [int(cfg.seed)])
+    if adaptive and len(seed_list) > 1:
+        raise ValueError(
+            f"strategy {strategy.name!r} adapts its plan to per-round "
+            "measurements; a batched seeds axis would need one plan per "
+            "seed. Batch static-plan strategies (dpsgd/ldsgd) or run "
+            "seeds sequentially.")
+    interp = (jax.default_backend() == "cpu") if interpret is None \
+        else interpret
+
+    # per-seed setup, consuming each seed's RNG exactly like run_dfl
+    rngs = [np.random.default_rng(s) for s in seed_list]
+    stacked0, exs, eys = [], [], []
+    for s, rng in zip(seed_list, rngs):
+        key = jax.random.PRNGKey(s)
+        p0 = init_classifier(key, data.x.shape[-1], hidden, data.num_classes)
+        stacked0.append(jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (n,) + l.shape), p0))
+        exs.append(np.stack([data.x[sh[rng.integers(0, len(sh), 256)]]
+                             for sh in shards]))
+        eys.append(np.stack([data.y[sh[rng.integers(0, len(sh), 256)]]
+                             for sh in shards]))
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *stacked0)
+    ex = jnp.asarray(np.stack(exs))
+    ey = jnp.asarray(np.stack(eys))
+    px, py = ex[:, :, :32], ey[:, :, :32]
+    tx = jnp.asarray(test_x[:eval_subset])
+    ty = jnp.asarray(test_y[:eval_subset])
+
+    mixfn = (topo.mixing_matrix_metropolis if mixing == "metropolis"
+             else topo.mixing_matrix_uniform)
+    needs_cross = strategy.name == "pens"
+    replan = max(int(getattr(cfg, "replan_every", 1)), 1)
+
+    hists = [History() for _ in seed_list]
+    clock = 0.0
+    h = 0
+    stop = False
+    while h < rounds and not stop:
+        seg_len = (min(replan, rounds - h) if adaptive
+                   else min(rounds - h, MAX_FUSE_ROUNDS))
+        seg, clock, stop = _precompute_segment(
+            h, seg_len, cluster, strategy, cfg, rngs, data, shards, mixfn,
+            clock, time_budget, adaptive)
+        stacked, outs = _scan_segment(
+            stacked, jnp.asarray(seg.bx), jnp.asarray(seg.by), ex, ey, px,
+            py, jnp.asarray(seg.taus), jnp.asarray(seg.lrs),
+            jnp.asarray(seg.mixes), jnp.asarray(seg.ew),
+            jnp.asarray(seg.cw), jnp.asarray(seg.keep), jnp.asarray(seg.rw),
+            tx, ty, tau_cap=seg.tau_cap, measure=adaptive,
+            needs_cross=needs_cross, interpret=interp)
+        outs = {k: np.asarray(v) for k, v in outs.items()}
+
+        for t in range(len(seg)):
+            hh = h + t
+            for si, hist in enumerate(hists):
+                hist.records.append(RoundRecord(
+                    round=hh, round_time=seg.round_time[t],
+                    waiting_time=seg.waiting[t],
+                    accuracy=float(outs["acc"][si, t]),
+                    loss=float(outs["loss"][si, t]),
+                    mean_tau=seg.mean_tau[t], num_links=seg.num_links[t],
+                    consensus=float(outs["consensus"][si, t]),
+                    cumulative_time=seg.cum_time[t]))
+            if adaptive:
+                a = seg.alive[t]
+                strategy.observe(
+                    hh, adj=seg.adjs[t], mu=seg.mus[t], beta=seg.betas[t],
+                    edge_dist=np.asarray(outs["edge"][0, t], np.float64),
+                    update_norms=outs["upds"][0, t][a] if a.any() else [0.0],
+                    smooth_l=float(np.median(outs["ls"][0, t][a])),
+                    sigma=float(np.median(outs["sigs"][0, t][a])),
+                    loss=float(np.mean(outs["losses"][0, t][a])),
+                    cross_loss=np.asarray(outs["cross"][0, t], np.float64)
+                    if needs_cross else None,
+                    alive=a)
+        h += len(seg)
+    return hists if batched else hists[0]

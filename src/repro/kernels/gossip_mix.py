@@ -6,7 +6,9 @@ over K stacked neighbor buffers. Unfused this is K+1 HBM round trips of
 the full parameter vector; fused it is ONE read of x, one streamed read
 of each u_k block, one write — memory-bound, so the fusion is the whole
 win. Blocks are (8, 1024) f32 tiles (VPU-aligned: 8 sublanes x 128 lanes
-x 8).
+x 8). Inputs whose shape is not a tile multiple are zero-padded to the
+block grid internally and the output sliced back, so real model sizes
+(P any value, not just multiples of 8192) go through the kernel.
 """
 from __future__ import annotations
 
@@ -29,22 +31,42 @@ def _gossip_kernel(w_ref, x_ref, u_ref, o_ref, *, num_neighbors: int):
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
+def pad_to_blocks(r: int, c: int, block_rows: int = BLOCK_ROWS,
+                  block_cols: int = BLOCK_COLS) -> tuple[int, int, int, int]:
+    """Block shape + padded extent for an [R, C] operand: blocks never
+    exceed the array, and the array is padded up to a whole block grid.
+    Callers with their own tile constants pass them explicitly."""
+    br, bc = min(block_rows, r), min(block_cols, c)
+    rp = -(-r // br) * br
+    cp = -(-c // bc) * bc
+    return br, bc, rp, cp
+
+
 def gossip_mix_2d(x, u, w, *, interpret: bool = False):
-    """x: [R, C]; u: [K, R, C] neighbor buffers; w: [K] f32 weights."""
+    """x: [R, C]; u: [K, R, C] neighbor buffers; w: [K] f32 weights.
+
+    R and C need not be tile multiples: the padding shim zero-extends to
+    the block grid and slices the result back (padding rows mix to zero,
+    which is discarded)."""
     r, c = x.shape
     k = u.shape[0]
-    br, bc = min(BLOCK_ROWS, r), min(BLOCK_COLS, c)
-    assert r % br == 0 and c % bc == 0, (r, c, br, bc)
+    br, bc, rp, cp = pad_to_blocks(r, c)
+    if (rp, cp) != (r, c):
+        x = jnp.pad(x, ((0, rp - r), (0, cp - c)))
+        u = jnp.pad(u, ((0, 0), (0, rp - r), (0, cp - c)))
     kernel = functools.partial(_gossip_kernel, num_neighbors=k)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
-        grid=(r // br, c // bc),
+        grid=(rp // br, cp // bc),
         in_specs=[
             pl.BlockSpec((k, 1), lambda i, j: (0, 0)),     # weights: whole
             pl.BlockSpec((br, bc), lambda i, j: (i, j)),
             pl.BlockSpec((k, br, bc), lambda i, j: (0, i, j)),
         ],
         out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((r, c), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((rp, cp), x.dtype),
         interpret=interpret,
     )(w.reshape(k, 1).astype(jnp.float32), x, u)
+    if (rp, cp) != (r, c):
+        out = out[:r, :c]
+    return out

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.gossip_mix import pad_to_blocks
+
 BLOCK_ROWS = 8
 BLOCK_COLS = 1024
 QMAX = 127.0
@@ -28,24 +30,32 @@ def _quant_kernel(x_ref, q_ref, s_ref):
 
 
 def quantize_block_2d(x, *, interpret: bool = False):
-    """x: [R, C] -> (q int8 [R, C], scales f32 [R/BR, C/BC])."""
+    """x: [R, C] -> (q int8 [R, C], scales f32 [ceil(R/BR), ceil(C/BC)]).
+
+    Non-tile-multiple shapes are zero-padded to the block grid (zeros
+    never raise a tile's amax, so scales are unaffected) and q is sliced
+    back to the input shape."""
     r, c = x.shape
-    br, bc = min(BLOCK_ROWS, r), min(BLOCK_COLS, c)
-    assert r % br == 0 and c % bc == 0, (r, c, br, bc)
-    return pl.pallas_call(
+    br, bc, rp, cp = pad_to_blocks(r, c, BLOCK_ROWS, BLOCK_COLS)
+    if (rp, cp) != (r, c):
+        x = jnp.pad(x, ((0, rp - r), (0, cp - c)))
+    q, s = pl.pallas_call(
         _quant_kernel,
-        grid=(r // br, c // bc),
+        grid=(rp // br, cp // bc),
         in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
         out_specs=[
             pl.BlockSpec((br, bc), lambda i, j: (i, j)),
             pl.BlockSpec((1, 1), lambda i, j: (i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((r, c), jnp.int8),
-            jax.ShapeDtypeStruct((r // br, c // bc), jnp.float32),
+            jax.ShapeDtypeStruct((rp, cp), jnp.int8),
+            jax.ShapeDtypeStruct((rp // br, cp // bc), jnp.float32),
         ],
         interpret=interpret,
     )(x)
+    if (rp, cp) != (r, c):
+        q = q[:r, :c]
+    return q, s
 
 
 def _dequant_kernel(q_ref, s_ref, x_ref):
@@ -55,11 +65,15 @@ def _dequant_kernel(q_ref, s_ref, x_ref):
 
 def dequantize_block_2d(q, scales, dtype=jnp.float32, *,
                         interpret: bool = False):
-    """Inverse of ``quantize_block_2d``."""
+    """Inverse of ``quantize_block_2d`` (same padding shim: recomputes the
+    block shape ``quantize_block_2d`` used from q's shape)."""
     r, c = q.shape
     nr, nc = scales.shape
-    br, bc = r // nr, c // nc
-    return pl.pallas_call(
+    br, bc, rp, cp = pad_to_blocks(r, c, BLOCK_ROWS, BLOCK_COLS)
+    assert (nr, nc) == (rp // br, cp // bc), (q.shape, scales.shape)
+    if (rp, cp) != (r, c):
+        q = jnp.pad(q, ((0, rp - r), (0, cp - c)))
+    x = pl.pallas_call(
         _dequant_kernel,
         grid=(nr, nc),
         in_specs=[
@@ -67,6 +81,9 @@ def dequantize_block_2d(q, scales, dtype=jnp.float32, *,
             pl.BlockSpec((1, 1), lambda i, j: (i, j)),
         ],
         out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((r, c), dtype),
+        out_shape=jax.ShapeDtypeStruct((rp, cp), dtype),
         interpret=interpret,
     )(q, scales)
+    if (rp, cp) != (r, c):
+        x = x[:r, :c]
+    return x

@@ -5,5 +5,8 @@ import pytest
 
 
 def pytest_configure(config):
-    config.addinivalue_line("markers",
-                            "slow: long-running multi-device test")
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test (multi-device subprocess runs, multi-"
+        "round differential engine comparisons); excluded from the fast "
+        "CI lane via -m 'not slow'")

@@ -103,6 +103,42 @@ def test_repair_prefers_cheap_links():
     assert topo.is_connected(rep)
 
 
+def test_repair_triggers_when_survivors_lose_every_link():
+    """Regression: a departure that kills EVERY edge of the round topology
+    must still trigger repair_connectivity. The old engine guard
+    (``adj[alive][:, alive].sum() > 0``) skipped repair exactly in that
+    case, silently disabling gossip for the round."""
+    from repro.core.algorithms import Strategy, RoundPlan
+    from repro.core.experiment import setup_experiment
+    from repro.core import engine
+
+    n = 5
+
+    class StarOblivious(Strategy):
+        """Plans the hub-and-spoke topology but ignores churn entirely —
+        the engine's safety net is the only thing standing between a hub
+        crash and an edgeless round."""
+
+        def plan(self, h, alive=None):
+            self._membership(alive)
+            taus = np.full(self.n, self.cfg.tau_init, np.int64)
+            taus[~self.alive] = 0
+            return RoundPlan(self.base_adj.copy(), taus)
+
+    cfg = FedHPConfig(num_workers=n, rounds=6, tau_init=3, tau_max=10,
+                      lr=0.1, batch_size=16, seed=2)
+    sched = ChurnSchedule((ChurnEvent(2, "crash", 0),))  # kill the hub
+    train, tx, ty, shards, cluster = setup_experiment(
+        cfg, non_iid_p=0.2, churn=sched, rounds=6)
+    strat = StarOblivious(cfg, _star(n))
+    h = engine.run_dfl(train, tx, ty, shards, cluster, cfg, strat, rounds=6)
+    # from the crash round on, the spokes must have been reconnected:
+    # a spanning structure over the 4 survivors needs >= 3 links
+    for r in h.records[2:]:
+        assert r.num_links >= n - 2, (r.round, r.num_links)
+    assert np.isfinite([r.loss for r in h.records]).all()
+
+
 def test_strategies_return_connected_topology_under_departure():
     n = 8
     cfg = FedHPConfig(num_workers=n, tau_init=4, tau_max=20)

@@ -94,6 +94,62 @@ def test_matchings_to_perms_involutions():
         assert (row[row] == np.arange(8)).all()  # involution
 
 
+@given(st.integers(min_value=3, max_value=16), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_masked_mixing_matrices_respect_membership(n, seed):
+    """Mixing matrices built from a churn-masked adjacency (what both
+    engines feed mixfn) stay row-stochastic and symmetric, keep zero
+    off-diagonal mass on dead rows/cols (dead workers neither send nor
+    receive), and keep support inside the surviving edge set."""
+    rng = np.random.default_rng(seed)
+    adj = topo.erdos_topology(n, 0.5, rng)
+    alive = rng.random(n) > 0.3
+    if not alive.any():
+        alive[int(rng.integers(n))] = True
+    masked = adj.copy()
+    masked[~alive, :] = 0
+    masked[:, ~alive] = 0
+    for fn in (topo.mixing_matrix_uniform, topo.mixing_matrix_metropolis):
+        w = fn(masked)
+        assert np.allclose(w.sum(axis=0), 1.0)
+        assert np.allclose(w.sum(axis=1), 1.0)
+        assert np.allclose(w, w.T)
+        off = w - np.diag(np.diag(w))
+        dead = ~alive
+        assert np.allclose(off[dead, :], 0.0)
+        assert np.allclose(off[:, dead], 0.0)
+        # dead workers self-mix only: their models stay frozen under
+        # x <- Wx, which is exactly the engines' no-op row semantics
+        assert np.allclose(np.diag(w)[dead], 1.0)
+        assert ((off > 1e-12) <= (masked > 0)).all()
+
+
+@given(st.integers(min_value=3, max_value=14), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_repair_connectivity_connected_and_deterministic(n, seed):
+    """repair_connectivity on a random (adjacency, alive) pair yields a
+    connected survivor subgraph, and for a fixed cost matrix the greedy
+    reconnection is a pure function of its inputs."""
+    rng = np.random.default_rng(seed)
+    adj = (rng.random((n, n)) < 0.25).astype(np.int8)
+    adj = np.maximum(adj, adj.T)
+    np.fill_diagonal(adj, 0)
+    alive = rng.random(n) > 0.35
+    if alive.sum() < 2:
+        alive[:2] = True
+    cost = rng.uniform(0.1, 5.0, (n, n))
+    cost = (cost + cost.T) / 2
+    rep1 = topo.repair_connectivity(adj, alive, cost=cost)
+    rep2 = topo.repair_connectivity(adj.copy(), alive.copy(),
+                                    cost=cost.copy())
+    np.testing.assert_array_equal(rep1, rep2)
+    live = np.nonzero(alive)[0]
+    assert topo.is_connected(rep1[np.ix_(live, live)])
+    assert rep1[~alive].sum() == 0 and rep1[:, ~alive].sum() == 0
+    # repair only ever ADDS edges among survivors
+    assert (rep1[np.ix_(live, live)] >= adj[np.ix_(live, live)]).all()
+
+
 def test_validate_topology_rejects_bad():
     with pytest.raises(ValueError):
         topo.validate_topology(np.ones((3, 3), dtype=np.int8))  # self loops

@@ -178,3 +178,85 @@ def test_quantize_flat_roundtrip():
     assert y.shape == x.shape
     # max error = half an int8 step of the per-tile scale
     assert float(jnp.max(jnp.abs(y - x))) <= float(jnp.max(s)) * 0.51
+
+
+# ---------------------------------------------------------------------------
+# padding shim + dense-gossip parity (the fused engine's hot path)
+# ---------------------------------------------------------------------------
+
+def _mixing_rows(n_workers: int, k: int, seed: int) -> np.ndarray:
+    """Row-stochastic mixing matrix where each worker has ~k neighbors."""
+    rng = np.random.default_rng(seed)
+    w = np.zeros((n_workers, n_workers))
+    for i in range(n_workers):
+        nbrs = rng.choice([j for j in range(n_workers) if j != i],
+                          size=min(k, n_workers - 1), replace=False)
+        w[i, nbrs] = 1.0 / (n_workers + 1)
+    np.fill_diagonal(w, 1.0 - w.sum(1))
+    return w
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("k", [1, 2, 4])
+@pytest.mark.parametrize("p", [1024 * 8, 5000, 1000])  # aligned + ragged
+def test_gossip_kernel_matches_dense_gossip(dtype, k, p):
+    """Per-worker gossip_mix_2d over mixing-matrix rows == the reference
+    engine's dense ``_gossip`` (tensordot) on the stacked parameters.
+    Non-tile-multiple p exercises the kernel's padding shim."""
+    from repro.core.engine import _gossip
+    n_workers = 6
+    mix = _mixing_rows(n_workers, k, seed=p + k)
+    x = jax.random.normal(KEY, (n_workers, p), jnp.float32).astype(dtype)
+
+    want = _gossip({"w": x}, jnp.asarray(mix, jnp.float32))["w"]
+
+    cols = min(1024, p)
+    rows = -(-p // cols)
+    x2 = jnp.pad(x, ((0, 0), (0, rows * cols - p))).reshape(
+        n_workers, rows, cols)
+    y2 = jax.vmap(lambda xi, wi: gossip_mix_2d(
+        xi, x2, wi, interpret=True))(x2, jnp.asarray(mix, jnp.float32))
+    got = y2.reshape(n_workers, -1)[:, :p]
+
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("shape", [(12, 1000), (7, 1024), (5, 100),
+                                   (20, 2100)])
+def test_gossip_mix_2d_padding_shim(shape):
+    """Shapes off the (8, 1024) tile grid — the case the old
+    ``assert r % br == 0`` rejected — still match the jnp oracle."""
+    r, c = shape
+    k = 3
+    x = jax.random.normal(KEY, (r, c))
+    u = jax.random.normal(jax.random.fold_in(KEY, r), (k, r, c))
+    w = jnp.array([0.25, 0.1, 0.3])
+    out = gossip_mix_2d(x, u, w, interpret=True)
+    assert out.shape == (r, c)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.gossip_mix_ref(x, u, w)),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(r=st.integers(1, 30), c=st.sampled_from([100, 1000, 1024, 1100]),
+       scale=st.floats(1e-2, 1e2))
+def test_quantize_padding_shim_roundtrip(r, c, scale):
+    """quantize/dequantize round trip with the padding shim: arbitrary
+    [R, C] stays within half an int8 step of each tile's scale, and the
+    scale grid covers ceil-divided tiles."""
+    x = jax.random.normal(KEY, (r, c)) * scale
+    q, s = quantize_block_2d(x, interpret=True)
+    br, bc = min(BLOCK_ROWS, r), min(BLOCK_COLS, c)
+    assert q.shape == (r, c)
+    assert s.shape == (-(-r // br), -(-c // bc))
+    y = dequantize_block_2d(q, s, interpret=True)
+    assert y.shape == (r, c)
+    err = np.abs(np.asarray(y) - np.asarray(x))
+    # per-tile bound: expand each tile's scale back over its elements
+    s_np = np.asarray(s)
+    bound = np.repeat(np.repeat(s_np, br, 0), bc, 1)[:r, :c] * 0.5 + 1e-6
+    assert (err <= bound).all()
