@@ -8,6 +8,8 @@
   kernels  Pallas kernel micro-benches (interpret mode) vs jnp references
   collective  gossip-vs-allreduce wire bytes for the adapted topology
   fused    scan-based engine vs reference engine rounds/sec (D-PSGD shape)
+  compressed  int8+error-feedback gossip vs uncompressed: wire bytes,
+           accuracy parity, simulated-clock speedup (CI-gated via --smoke)
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6]
 Output: CSV lines  benchmark,metric,value  + a summary table.
@@ -228,6 +230,47 @@ def bench_fused(rows, full):
                         f"({speedup:.2f}x)")
 
 
+def bench_compressed(rows, full):
+    """Compressed gossip (int8 + error feedback, core/compression.py) vs
+    uncompressed on the same shape: wire bits per transfer, final-accuracy
+    parity, and the simulated-clock payoff of paying Eq. 10 comm time /
+    wire_ratio. Runs on the fused engine (the CI-gated hot path). In
+    --smoke mode a wire reduction < 2x or an accuracy drift > 1% vs the
+    uncompressed run fails the whole benchmark (exit 1)."""
+    from repro.core.compression import FP32_BITS, wire_bits, wire_ratio
+    from repro.core.experiment import MODEL_BITS_DEFAULT, run_algorithm
+
+    cfg = base_cfg(full)
+    rounds = 30 if SMOKE else (60 if not full else 150)
+    if SMOKE:
+        cfg = replace(cfg, num_workers=8)
+    params = int(MODEL_BITS_DEFAULT // FP32_BITS)
+    ratio = wire_ratio(params)
+    emit(rows, "compressed", "wire_bits[f32]", wire_bits(params, "none"))
+    emit(rows, "compressed", "wire_bits[int8]", wire_bits(params, "int8"))
+    emit(rows, "compressed", "wire_reduction", round(ratio, 2))
+
+    hs = {}
+    for mode, ef in (("none", True), ("int8", True), ("int8_noef", False)):
+        c = replace(cfg, compress=mode.split("_")[0], error_feedback=ef)
+        hs[mode] = run_algorithm("dpsgd", c, non_iid_p=0.4, rounds=rounds,
+                                 spread=SPREAD, fused=True)
+        emit(rows, "compressed", f"final_acc[{mode}]",
+             round(hs[mode].final_accuracy, 4))
+        emit(rows, "compressed", f"sim_time[{mode}]",
+             round(hs[mode].records[-1].cumulative_time, 1))
+    drift = abs(hs["int8"].final_accuracy - hs["none"].final_accuracy)
+    emit(rows, "compressed", "acc_drift_vs_uncompressed", round(drift, 4))
+    emit(rows, "compressed", "sim_time_speedup",
+         round(hs["none"].records[-1].cumulative_time /
+               hs["int8"].records[-1].cumulative_time, 2))
+    if SMOKE:
+        if ratio < 2.0:
+            FAILURES.append(f"compressed wire reduction {ratio:.2f}x < 2x")
+        if drift > 0.01:
+            FAILURES.append(f"compressed accuracy drift {drift:.4f} > 1%")
+
+
 def bench_collective(rows, full):
     """Adapted-topology gossip vs all-reduce wire bytes (the roofline knob
     the paper's technique controls; DESIGN.md §3)."""
@@ -252,6 +295,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "collective": bench_collective,
     "fused": bench_fused,
+    "compressed": bench_compressed,
 }
 
 SMOKE = False              # set by --smoke; bench_fused reads it

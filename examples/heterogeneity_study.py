@@ -19,6 +19,13 @@ per replan segment instead of ~10 per round (AD-PSGD is event-driven
 and always runs on its reference engine):
 
     PYTHONPATH=src python examples/heterogeneity_study.py --fused
+
+``--compressed`` runs the compressed-gossip comparison instead: FedHP
+and D-PSGD with int8 + error-feedback gossip (core/compression.py,
+~3.6x fewer wire bytes, Eq. 10 comm time / wire_ratio) against their
+uncompressed selves, racing to a target accuracy on equal wall time:
+
+    PYTHONPATH=src python examples/heterogeneity_study.py --compressed
 """
 import argparse
 from dataclasses import replace
@@ -73,15 +80,40 @@ def churn_study(fused: bool = False):
                   f"{h.records[-1].cumulative_time:9.1f} {kinds:>7s}")
 
 
+def compressed_study(fused: bool = False):
+    """Accuracy vs completion time: int8+EF compressed gossip against
+    uncompressed FedHP / D-PSGD on the same simulated-time budget."""
+    from repro.core.compression import FP32_BITS, wire_ratio
+    from repro.core.experiment import MODEL_BITS_DEFAULT
+    ratio = wire_ratio(int(MODEL_BITS_DEFAULT // FP32_BITS))
+    print(f"compressed gossip: int8 + error feedback, "
+          f"{ratio:.2f}x fewer wire bits, comm time / {ratio:.2f}")
+    print(f"{'algo':8s} {'wire':>6s} {'acc':>6s} "
+          f"{'t_to_{:.0%}'.format(TARGET_ACC):>9s} {'total(s)':>9s}")
+    for algo in ("fedhp", "dpsgd"):
+        for mode in ("none", "int8"):
+            cfg = replace(CFG, compress=mode)
+            h = run_algorithm(algo, cfg, non_iid_p=0.4, spread=3.0,
+                              time_budget=BUDGET, fused=fused)
+            t = h.completion_time(TARGET_ACC)
+            t_str = f"{t:9.1f}" if t is not None else f"{'never':>9s}"
+            print(f"{algo:8s} {mode:>6s} {h.final_accuracy:6.3f} {t_str} "
+                  f"{h.records[-1].cumulative_time:9.1f}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--churn", action="store_true",
                     help="run the dynamic-membership (churn) scenario")
+    ap.add_argument("--compressed", action="store_true",
+                    help="run the compressed-gossip (int8 + EF) scenario")
     ap.add_argument("--fused", action="store_true",
                     help="run synchronous algorithms on the fused engine")
     args = ap.parse_args()
     if args.churn:
         churn_study(fused=args.fused)
+    elif args.compressed:
+        compressed_study(fused=args.fused)
     else:
         heterogeneity_study(fused=args.fused)
 

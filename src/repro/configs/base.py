@@ -174,6 +174,14 @@ class FedHPConfig:
     # segments freeze (A^h, tau^h) between replans for throughput.
     # Static-plan strategies always fuse the whole horizon.
     replan_every: int = 1
+    # compressed gossip (core/compression.py): "none" sends raw f32 params,
+    # "int8" sends per-tile-scaled int8 round trips (ChocoSGD-style) and
+    # charges Eq. 10 comm time divided by the wire ratio (~3.5-4x).
+    compress: str = "none"           # "none" | "int8"
+    # error feedback: carry the per-worker quantization residual into the
+    # next round's payload (keeps compressed mixing unbiased); False ==
+    # naive quantized mixing (stalls at the int8 step floor — test only)
+    error_feedback: bool = True
     # LD-SGD alternation (baseline)
     ldsgd_i1: int = 4
     ldsgd_i2: int = 1

@@ -1,0 +1,174 @@
+"""Compressed gossip: int8 exchange with error feedback (ChocoSGD /
+DeepSqueeze-style, beyond-paper) — the single source of the compensated
+update every call site implements.
+
+Wire format (per worker, per round with communication):
+  - the flattened parameter vector [P] is laid out as a [rows, cols]
+    matrix (``flat_tile_shape``: cols = min(1024, P), rows = ceil(P/cols),
+    zero-padded to rows*cols) and quantized per (8, 1024) tile — int8
+    payload of rows*cols bytes plus one f32 scale per tile (the scale
+    side-channel is <0.05% of the payload at real model sizes);
+  - the compensated update (identical in ``engine.run_dfl``,
+    ``fused.run_dfl_fused`` and ``runtime/collectives.
+    gossip_compressed_fn``):
+
+        z_i  = x_i + e_i          (e_i: per-worker residual, 0 if EF off)
+        ŷ_i  = dequant(quant(z_i))   (what goes on the wire)
+        e_i' = z_i - ŷ_i          (error feedback; e_i unchanged if off)
+        x_i' = x_i + sum_j W_ij (ŷ_j - ŷ_i)
+
+    For a row-stochastic W the mixing term is (W @ ŷ)_i - ŷ_i, so a
+    round-trip through an identity mix is an exact no-op, and for a
+    doubly stochastic W the fleet average of x is preserved exactly —
+    error feedback then removes the per-worker quantization bias over
+    rounds (naive quantized mixing stalls at the int8 step floor; see
+    tests/test_compression.py).
+
+Eq. 10 accounting: a compressed link transfers ``wire_bits(P, "int8")``
+instead of 32 P bits, so comm time scales down by ``wire_ratio(P)``
+(~3.5-4x) — both engines charge beta / wire_ratio on compressed runs.
+
+The Pallas kernels (``kernels/quantize_block.py``) and the jnp oracles
+(``kernels/ref.py``) share this tiling; the fused engine quantizes through
+the kernels, the reference engine through the oracles, and the
+differential harness (tests/test_fused_equivalence.py) proves the two
+round trips interchangeable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.gossip_mix import pad_to_blocks
+from repro.kernels.quantize_block import (BLOCK_COLS, BLOCK_ROWS,
+                                          dequantize_block_2d,
+                                          quantize_block_2d)
+
+COMPRESS_MODES = ("none", "int8")
+
+FP32_BITS = 32
+INT8_BITS = 8
+SCALE_BITS = 32
+
+
+def validate_mode(mode: str) -> str:
+    if mode not in COMPRESS_MODES:
+        raise ValueError(f"compress must be one of {COMPRESS_MODES}, "
+                         f"got {mode!r}")
+    return mode
+
+
+# ---------------------------------------------------------------------------
+# wire accounting (Eq. 10 extension)
+# ---------------------------------------------------------------------------
+
+def flat_tile_shape(num_params: int) -> tuple[int, int]:
+    """[P] -> the [rows, cols] layout both engines quantize/mix through."""
+    cols = min(BLOCK_COLS, num_params)
+    rows = -(-num_params // cols)
+    return rows, cols
+
+
+def wire_bits(num_params: int, mode: str = "int8") -> int:
+    """Bits on the wire for one model transfer (padding included — the
+    int8 payload ships the whole [rows, cols] grid)."""
+    validate_mode(mode)
+    if mode == "none":
+        return FP32_BITS * num_params
+    rows, cols = flat_tile_shape(num_params)
+    br, bc, rp, cp = pad_to_blocks(rows, cols, BLOCK_ROWS, BLOCK_COLS)
+    n_tiles = (rp // br) * (cp // bc)
+    return INT8_BITS * rows * cols + SCALE_BITS * n_tiles
+
+
+def wire_ratio(num_params: int) -> float:
+    """Uncompressed / int8 wire bits — the comm-time divisor in Eq. 10."""
+    return wire_bits(num_params, "none") / wire_bits(num_params, "int8")
+
+
+# ---------------------------------------------------------------------------
+# quantize -> dequantize round trips on the shared layout
+# ---------------------------------------------------------------------------
+
+def quantize_2d_ref(z2):
+    """jnp-oracle twin of ``quantize_block_2d`` (same padding shim)."""
+    r, c = z2.shape
+    br, bc, rp, cp = pad_to_blocks(r, c, BLOCK_ROWS, BLOCK_COLS)
+    if (rp, cp) != (r, c):
+        z2 = jnp.pad(z2, ((0, rp - r), (0, cp - c)))
+    q, s = ref.quantize_block_ref(z2, br, bc)
+    return q[:r, :c], s
+
+
+def dequantize_2d_ref(q2, scales, dtype=jnp.float32):
+    """jnp-oracle twin of ``dequantize_block_2d``."""
+    r, c = q2.shape
+    br, bc, rp, cp = pad_to_blocks(r, c, BLOCK_ROWS, BLOCK_COLS)
+    if (rp, cp) != (r, c):
+        q2 = jnp.pad(q2, ((0, rp - r), (0, cp - c)))
+    x = ref.dequantize_block_ref(q2, scales, dtype)
+    return x[:r, :c]
+
+
+def quantize_flat(z_flat):
+    """[n] -> (q int8 [rows, cols], scales f32) in the shared wire layout.
+    Used by ``runtime/collectives`` so the sharded path quantizes exactly
+    like the core engines."""
+    n = z_flat.shape[-1]
+    rows, cols = flat_tile_shape(n)
+    z2 = jnp.pad(z_flat, (0, rows * cols - n)).reshape(rows, cols)
+    return quantize_2d_ref(z2)
+
+
+def dequantize_flat(q2, scales, n: int):
+    """Inverse of ``quantize_flat``: back to the [n] vector."""
+    return dequantize_2d_ref(q2, scales).reshape(-1)[:n]
+
+
+def qdq_rows(z, *, use_kernel: bool = False, interpret: bool = False):
+    """z: [W, P] -> ŷ: [W, P], one int8 round trip per worker row.
+
+    ``use_kernel=True`` routes through the Pallas kernels (the fused
+    engine's path); otherwise the jnp oracles. Both produce bit-identical
+    ŷ on the same input — the differential harness depends on it.
+    """
+    w, p = z.shape
+    rows, cols = flat_tile_shape(p)
+    z3 = jnp.pad(z, ((0, 0), (0, rows * cols - p))).reshape(w, rows, cols)
+    if use_kernel:
+        def qdq(zi):
+            q, s = quantize_block_2d(zi, interpret=interpret)
+            return dequantize_block_2d(q, s, interpret=interpret)
+    else:
+        def qdq(zi):
+            return dequantize_2d_ref(*quantize_2d_ref(zi))
+    y3 = jax.vmap(qdq)(z3)
+    return y3.reshape(w, -1)[:, :p]
+
+
+# ---------------------------------------------------------------------------
+# the compensated update (canonical form)
+# ---------------------------------------------------------------------------
+
+def compress_decompress(flat, err, *, error_feedback: bool = True,
+                        use_kernel: bool = False, interpret: bool = False):
+    """(x [W, P], e [W, P]) -> (ŷ, e'): the wire payload each worker
+    would send, plus the residual carried to the next round."""
+    z = flat + err if error_feedback else flat
+    yhat = qdq_rows(z, use_kernel=use_kernel, interpret=interpret)
+    new_err = z - yhat if error_feedback else err
+    return yhat, new_err
+
+
+def compressed_gossip_ref(flat, err, mix, *, error_feedback: bool = True):
+    """One compressed gossip round on the flattened [W, P] params — the
+    jnp reference the engines and tests share. The mixing term is the
+    same tensordot as ``engine._gossip``, applied to ŷ:
+
+        x' = x + (W @ ŷ - ŷ)
+    """
+    yhat, new_err = compress_decompress(flat, err,
+                                        error_feedback=error_feedback)
+    mixed = flat + (jnp.tensordot(mix, yhat, axes=1) - yhat)
+    return mixed, new_err

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedHPConfig
+from repro.core import compression
 from repro.core import topology as topo
 from repro.core.algorithms import Strategy
 from repro.core.consensus import pairwise_distances
@@ -141,6 +142,33 @@ def _flatten_workers(stacked):
         axis=1)
 
 
+def _unflatten(flat, stacked):
+    """Inverse of ``_flatten_workers`` against the template pytree."""
+    leaves = jax.tree.leaves(stacked)
+    out, off = [], 0
+    for l in leaves:
+        sz = int(np.prod(l.shape[1:])) if l.ndim > 1 else 1
+        out.append(flat[:, off:off + sz].reshape(l.shape).astype(l.dtype))
+        off += sz
+    return jax.tree.unflatten(jax.tree.structure(stacked), out)
+
+
+def _param_count(stacked) -> int:
+    """P of the flattened [W, P] parameter matrix."""
+    return sum(int(np.prod(l.shape[1:])) for l in jax.tree.leaves(stacked))
+
+
+@partial(jax.jit, static_argnames=("error_feedback",))
+def _gossip_compressed(flat, err, mix, *, error_feedback: bool):
+    """Compressed Eq. 5 on the flattened [W, P] matrix: each worker sends
+    the int8 round trip ŷ of z = x + e instead of x, mixes ŷ with the
+    same tensordot as ``_gossip``, and carries the residual e' = z - ŷ.
+    The update itself lives in ``core/compression.py`` — the fused engine
+    and ``runtime/collectives`` implement the same formula."""
+    return compression.compressed_gossip_ref(
+        flat, err, mix, error_feedback=error_feedback)
+
+
 def _measure_worker(p, q, eval_x, eval_y, probe_x, probe_y):
     """One worker's Alg. 1 measurements. NOTE the eval/probe tensors are
     the FULL [W, 256] stacks for every worker (historical semantics both
@@ -236,6 +264,16 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
     px, py = ex[:, :32], ey[:, :32]
     ex, ey, px, py = map(jnp.asarray, (ex, ey, px, py))
 
+    compress = compression.validate_mode(cfg.compress) != "none"
+    # compressed links pay Eq. 10 comm time / wire ratio (int8 + scales
+    # instead of raw f32); the residual matrix is the per-worker error-
+    # feedback state (zeros when EF is off — the naive quantized mode)
+    comm_ratio = (compression.wire_ratio(
+        int(cluster.model_bits // compression.FP32_BITS))
+        if compress else 1.0)
+    err = (jnp.zeros((n, _param_count(stacked)), jnp.float32)
+           if compress else None)
+
     hist = History()
     clock = 0.0
     needs_cross = strategy.name == "pens"
@@ -247,6 +285,10 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
             if donors.any():
                 stacked = _reinit_joined(stacked, jnp.asarray(joined),
                                          jnp.asarray(donors))
+                if compress:
+                    # the blended model owes nothing from the departed
+                    # model's last transmission
+                    err = jnp.where(jnp.asarray(joined)[:, None], 0.0, err)
         mu = cluster.sample_mu()
         beta = cluster.sample_beta()
 
@@ -276,6 +318,8 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
         # --- clock (Eq. 10-11) ---
         comm = np.where(adj.sum(1) > 0,
                         np.where(adj > 0, beta, 0.0).max(1), 0.0)
+        if compress:
+            comm = comm / comm_ratio
         t_i = taus * mu + comm
         if plan.extra_time is not None:
             t_i = t_i + plan.extra_time * alive
@@ -287,12 +331,18 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
         waiting = float((t_round - t_i[alive]).mean()) if alive.any() else 0.0
         clock += t_round
 
-        # --- gossip aggregation (Eq. 5-6) ---
+        # --- gossip aggregation (Eq. 5-6), optionally int8-compressed ---
         if adj.sum() > 0:
             mixfn = (topo.mixing_matrix_metropolis if mixing == "metropolis"
                      else topo.mixing_matrix_uniform)
-            mix = mixfn(adj)
-            stacked = _gossip(stacked, jnp.asarray(mix, jnp.float32))
+            mix = jnp.asarray(mixfn(adj), jnp.float32)
+            if compress:
+                flat = _flatten_workers(stacked)
+                mixed, err = _gossip_compressed(
+                    flat, err, mix, error_feedback=cfg.error_feedback)
+                stacked = _unflatten(mixed, stacked)
+            else:
+                stacked = _gossip(stacked, mix)
 
         # --- measurements (Alg. 1 lines 4-5, 9-10) ---
         losses, accs, ls, sigs, upds = _measure(stacked, prev, ex, ey, px, py)
@@ -336,6 +386,11 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
 
     One "round" = N worker-finish events (≈ one synchronous round of work),
     at which point metrics are sampled — comparable x-axes with run_dfl."""
+    if compression.validate_mode(cfg.compress) != "none":
+        raise ValueError(
+            "compressed gossip is implemented for the synchronous engines "
+            "(run_dfl / run_dfl_fused); AD-PSGD's event-driven pairwise "
+            "exchange is uncompressed")
     rounds = rounds or cfg.rounds
     n = cfg.num_workers
     rng = np.random.default_rng(cfg.seed)

@@ -24,6 +24,12 @@
   batch-sampling seeds: S experiments amortize one scan (sweep workloads
   like benchmarks/hillclimb.py). Static-plan strategies only — an
   adaptive plan is feedback from one seed's trajectory.
+- ``cfg.compress == "int8"`` swaps the gossip for the compressed update
+  (core/compression.py): per-worker error-feedback residuals ride in the
+  scan carry, the int8 round trip runs through the Pallas
+  ``quantize_block_2d``/``dequantize_block_2d`` kernels on the [W, P]
+  layout, and Eq. 10 charges comm time / wire_ratio — composing with
+  churn masks and the vmapped ``seeds`` axis.
 
 Interchangeability with ``run_dfl`` is proven by the differential harness
 in ``tests/test_fused_equivalence.py``.
@@ -38,12 +44,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedHPConfig
+from repro.core import compression
 from repro.core import topology as topo
 from repro.core.algorithms import Strategy
 from repro.core.engine import (History, RoundRecord, _blend_joined,
                                _cross_loss_matrix, _draw_batches,
                                _flatten_workers, _measure_worker,
-                               _sgd_worker)
+                               _param_count, _sgd_worker, _unflatten)
 from repro.data.synthetic import Dataset
 from repro.kernels.gossip_mix import gossip_mix_2d
 from repro.simulation.cluster import SimCluster
@@ -60,43 +67,41 @@ MAX_FUSE_ROUNDS = 64
 # device code: one scan over the rounds of a segment
 # ---------------------------------------------------------------------------
 
-def _unflatten(flat, stacked):
-    """Inverse of ``engine._flatten_workers`` against the template pytree."""
-    leaves = jax.tree.leaves(stacked)
-    out, off = [], 0
-    for l in leaves:
-        sz = int(np.prod(l.shape[1:])) if l.ndim > 1 else 1
-        out.append(flat[:, off:off + sz].reshape(l.shape).astype(l.dtype))
-        off += sz
-    return jax.tree.unflatten(jax.tree.structure(stacked), out)
-
-
 @partial(jax.jit, static_argnames=("tau_cap", "measure", "needs_cross",
-                                   "interpret"))
-def _scan_segment(stacked, bx, by, ex, ey, px, py, taus, lrs, mixes, ew, cw,
-                  keep, rw, tx, ty, *, tau_cap: int, measure: bool,
-                  needs_cross: bool, interpret: bool):
+                                   "interpret", "compress", "ef"))
+def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
+                  comms, ew, cw, keep, rw, tx, ty, *, tau_cap: int,
+                  measure: bool, needs_cross: bool, interpret: bool,
+                  compress: bool, ef: bool):
     """Run K rounds on device. Batched over a leading seed axis S on
-    (stacked, bx, by, ex, ey, px, py); control inputs (taus .. rw, [K]-
-    leading) and the test set are shared across seeds.
+    (stacked, err, bx, by, ex, ey, px, py); control inputs (taus .. rw,
+    [K]-leading) and the test set are shared across seeds.
 
-    Returns (stacked', outs) where outs is a dict of [S, K, ...] metric
-    trajectories.
+    ``err`` is the [S, W, P] error-feedback residual carried as scan
+    state on compressed runs (untouched otherwise).
+
+    Returns ((stacked', err'), outs) where outs is a dict of [S, K, ...]
+    metric trajectories.
     """
     leaves = jax.tree.leaves(stacked)
     p_total = sum(int(np.prod(l.shape[2:])) for l in leaves)
-    cols = min(1024, p_total)
-    rows = -(-p_total // cols)
+    rows, cols = compression.flat_tile_shape(p_total)
 
-    def one_seed(stacked, bx, by, ex, ey, px, py):
+    def one_seed(stacked, err, bx, by, ex, ey, px, py):
 
         def body(carry, xs):
-            bxh, byh, tau_h, lr_h, mix_h, ew_h, cw_h, keep_h, rw_h = xs
+            carry, err_c = carry
+            (bxh, byh, tau_h, lr_h, mix_h, comm_h, ew_h, cw_h, keep_h,
+             rw_h) = xs
 
             # --- join re-init: the reference's _reinit_joined with
             # (keep, donor weights) precomputed host-side; an all-False
             # keep_h makes the blend an exact no-op ---
             carry = _blend_joined(carry, keep_h, rw_h)
+            if compress and ef:
+                # joined rows adopt a blended model; their stale residual
+                # is dropped (same reset as the reference engine)
+                err_c = jnp.where(keep_h[:, None], 0.0, err_c)
             prev = carry
 
             # --- local updating (Eq. 3), masked to tau_i — the SAME
@@ -106,18 +111,35 @@ def _scan_segment(stacked, bx, by, ex, ey, px, py, taus, lrs, mixes, ew, cw,
                                                      lr_h, tau_cap))(
                 carry, bxh, byh, tau_h)
 
-            # --- gossip (Eq. 5-6) through the Pallas kernel on [W, R, C].
-            # Row i of the mixing matrix becomes the kernel's neighbor
-            # weights: y_i = x_i + sum_j w_ij (x_j - x_i) = sum_j w_ij x_j
-            # for a row-stochastic mix; rounds without communication carry
-            # an identity mix, which the kernel maps to an exact no-op ---
             flat = _flatten_workers(carry)
-            x2 = jnp.pad(flat, ((0, 0), (0, rows * cols - p_total)))
-            x2 = x2.reshape(-1, rows, cols)
-            y2 = jax.vmap(
-                lambda xi, wi: gossip_mix_2d(xi, x2, wi,
-                                             interpret=interpret))(x2, mix_h)
-            y_flat = y2.reshape(y2.shape[0], -1)[:, :p_total]
+            if compress:
+                # --- compressed gossip: int8 round trip of z = x + e per
+                # worker through the Pallas quantize/dequantize kernels on
+                # the [W, rows, cols] layout, then the same tensordot
+                # mixing of ŷ as the reference's _gossip_compressed.
+                # comm_h gates no-communication rounds to an exact no-op
+                # (nothing is sent, so neither params nor residual move) ---
+                z = flat + err_c if ef else flat
+                yhat = compression.qdq_rows(z, use_kernel=True,
+                                            interpret=interpret)
+                if ef:
+                    err_c = jnp.where(comm_h > 0, z - yhat, err_c)
+                y_flat = flat + comm_h * (
+                    jnp.tensordot(mix_h, yhat, axes=1) - yhat)
+            else:
+                # --- gossip (Eq. 5-6) through the Pallas kernel on
+                # [W, R, C]. Row i of the mixing matrix becomes the
+                # kernel's neighbor weights: y_i = x_i + sum_j w_ij
+                # (x_j - x_i) = sum_j w_ij x_j for a row-stochastic mix;
+                # rounds without communication carry an identity mix,
+                # which the kernel maps to an exact no-op ---
+                x2 = jnp.pad(flat, ((0, 0), (0, rows * cols - p_total)))
+                x2 = x2.reshape(-1, rows, cols)
+                y2 = jax.vmap(
+                    lambda xi, wi: gossip_mix_2d(xi, x2, wi,
+                                                 interpret=interpret))(
+                    x2, mix_h)
+                y_flat = y2.reshape(y2.shape[0], -1)[:, :p_total]
             carry = _unflatten(y_flat, carry)
 
             # --- per-round metrics: fleet accuracy/loss over alive
@@ -152,14 +174,15 @@ def _scan_segment(stacked, bx, by, ex, ey, px, py, taus, lrs, mixes, ew, cw,
                 if needs_cross:
                     outs["cross"] = _cross_loss_matrix(
                         carry, ex[:, :64], ey[:, :64])
-            return carry, outs
+            return (carry, err_c), outs
 
-        return jax.lax.scan(body, stacked,
-                            (bx, by, taus, lrs, mixes, ew, cw, keep, rw))
+        return jax.lax.scan(body, (stacked, err),
+                            (bx, by, taus, lrs, mixes, comms, ew, cw,
+                             keep, rw))
 
     return jax.vmap(one_seed,
-                    in_axes=(0, 0, 0, 0, 0, 0, 0))(stacked, bx, by,
-                                                    ex, ey, px, py)
+                    in_axes=(0, 0, 0, 0, 0, 0, 0, 0))(stacked, err, bx, by,
+                                                      ex, ey, px, py)
 
 
 # ---------------------------------------------------------------------------
@@ -174,6 +197,7 @@ class _Segment:
     taus: np.ndarray          # [K, W] i32
     lrs: np.ndarray           # [K] f32
     mixes: np.ndarray         # [K, W, W] f32
+    comms: np.ndarray         # [K] f32  1.0 on rounds with communication
     ew: np.ndarray            # [K, W] f32  eval (accuracy/loss) weights
     cw: np.ndarray            # [K, W] f32  consensus weights
     keep: np.ndarray          # [K, W] bool join re-init mask
@@ -196,7 +220,8 @@ class _Segment:
 def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
                         strategy: Strategy, cfg: FedHPConfig, rngs, data,
                         shards, mixfn, clock: float,
-                        time_budget: float | None, adaptive: bool):
+                        time_budget: float | None, adaptive: bool,
+                        compress: bool, comm_ratio: float):
     """Advance cluster/strategy/batch RNG streams for rounds h0..h0+K-1 in
     the exact order ``run_dfl`` would, and pack the device inputs.
 
@@ -233,6 +258,8 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
         # --- clock (Eq. 10-11), formulas identical to run_dfl ---
         comm = np.where(adj.sum(1) > 0,
                         np.where(adj > 0, beta, 0.0).max(1), 0.0)
+        if compress:
+            comm = comm / comm_ratio
         t_i = taus * mu + comm
         if plan.extra_time is not None:
             t_i = t_i + plan.extra_time * alive
@@ -256,6 +283,7 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
 
         per.append(dict(alive=alive, adj=adj, mu=mu, beta=beta, taus=taus,
                         tau_cap=tau_cap, batches=batches, mix=mix,
+                        comm=1.0 if adj.sum() > 0 else 0.0,
                         keep=keep, rw=rw, ew=ew, cw=cw,
                         lr=cfg.lr * (cfg.lr_decay ** h),
                         t_round=t_round, waiting=waiting,
@@ -286,6 +314,7 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
         taus=np.stack([p["taus"] for p in per]).astype(np.int32),
         lrs=np.array([p["lr"] for p in per], np.float32),
         mixes=np.stack([p["mix"] for p in per]).astype(np.float32),
+        comms=np.array([p["comm"] for p in per], np.float32),
         ew=np.stack([p["ew"] for p in per]).astype(np.float32),
         cw=np.stack([p["cw"] for p in per]).astype(np.float32),
         keep=np.stack([p["keep"] for p in per]),
@@ -348,6 +377,16 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
         eys.append(np.stack([data.y[sh[rng.integers(0, len(sh), 256)]]
                              for sh in shards]))
     stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *stacked0)
+    compress = compression.validate_mode(cfg.compress) != "none"
+    comm_ratio = (compression.wire_ratio(
+        int(cluster.model_bits // compression.FP32_BITS))
+        if compress else 1.0)
+    # per-seed error-feedback residual, carried across segments; a [S, W, 1]
+    # dummy keeps the carry structure static when compression is off
+    # without hauling a dead fleet-sized buffer through the scan
+    err = jnp.zeros((len(seed_list), n,
+                     _param_count(stacked0[0]) if compress else 1),
+                    jnp.float32)
     ex = jnp.asarray(np.stack(exs))
     ey = jnp.asarray(np.stack(eys))
     px, py = ex[:, :, :32], ey[:, :, :32]
@@ -368,14 +407,16 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
                    else min(rounds - h, MAX_FUSE_ROUNDS))
         seg, clock, stop = _precompute_segment(
             h, seg_len, cluster, strategy, cfg, rngs, data, shards, mixfn,
-            clock, time_budget, adaptive)
-        stacked, outs = _scan_segment(
-            stacked, jnp.asarray(seg.bx), jnp.asarray(seg.by), ex, ey, px,
-            py, jnp.asarray(seg.taus), jnp.asarray(seg.lrs),
-            jnp.asarray(seg.mixes), jnp.asarray(seg.ew),
-            jnp.asarray(seg.cw), jnp.asarray(seg.keep), jnp.asarray(seg.rw),
+            clock, time_budget, adaptive, compress, comm_ratio)
+        (stacked, err), outs = _scan_segment(
+            stacked, err, jnp.asarray(seg.bx), jnp.asarray(seg.by), ex, ey,
+            px, py, jnp.asarray(seg.taus), jnp.asarray(seg.lrs),
+            jnp.asarray(seg.mixes), jnp.asarray(seg.comms),
+            jnp.asarray(seg.ew), jnp.asarray(seg.cw),
+            jnp.asarray(seg.keep), jnp.asarray(seg.rw),
             tx, ty, tau_cap=seg.tau_cap, measure=adaptive,
-            needs_cross=needs_cross, interpret=interp)
+            needs_cross=needs_cross, interpret=interp, compress=compress,
+            ef=cfg.error_feedback)
         outs = {k: np.asarray(v) for k, v in outs.items()}
 
         for t in range(len(seg)):

@@ -1,11 +1,15 @@
 """Per-block int8 quantize/dequantize kernel with f32 scales.
 
-Used by ``runtime/compression.py`` for gossip-delta compression (beyond-
-paper optimization, ChocoSGD/DeepSqueeze-style): the model delta sent to
-each neighbor shrinks 4x (f32) / 2x (bf16) on the wire, with error
-feedback keeping the bias compensated. Scales are per (8, 1024) tile —
-fine enough to track gossip-delta dynamic range, coarse enough that the
-scale side-channel is 0.01% of payload.
+Used by the compressed-gossip path (beyond-paper optimization, ChocoSGD/
+DeepSqueeze-style): ``core/compression.py`` defines the wire format and
+the error-feedback compensated update, ``core/fused.py`` runs these
+kernels on the flattened [W, P] parameter matrix inside its round scan
+(``cfg.compress == "int8"``), and ``runtime/collectives.
+gossip_compressed_fn`` ships the same format over ``lax.ppermute``. The
+payload each neighbor receives shrinks ~4x (f32) on the wire, with error
+feedback keeping the mixing bias compensated. Scales are per (8, 1024)
+tile — fine enough to track gossip dynamic range, coarse enough that the
+scale side-channel is ~0.05% of payload.
 """
 from __future__ import annotations
 

@@ -22,6 +22,7 @@ import numpy as np
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compression
 from repro.core import topology as topo
 
 if hasattr(jax, "shard_map"):                           # jax >= 0.6
@@ -106,11 +107,14 @@ def gossip_compressed_fn(mesh: Mesh, worker_axes: tuple[str, ...],
                          weight_table: np.ndarray, param_specs):
     """int8-compressed gossip with error feedback (beyond-paper).
 
-    Each worker sends q8(x + e) instead of x; the residual
-    e <- (x + e) - dequant(q8(x + e)) carries to the next round, keeping
-    the mixing unbiased in expectation (error-feedback compression). Wire
-    bytes per matching drop 2x (bf16) / 4x (f32), plus a f32 scale per
-    (8x1024) tile.
+    The compensated update is the one ``core/compression.py`` defines
+    (and the core engines implement): each worker sends the int8 round
+    trip of z = x + e instead of x, the residual e <- z - dequant(quant(z))
+    carries to the next round (keeping the mixing unbiased over rounds),
+    and quantization uses the shared wire format — the flattened leaf
+    shard laid out per ``flat_tile_shape`` with one f32 scale per
+    (8, 1024) tile, exactly what ``kernels/quantize_block.py`` produces.
+    Wire bytes per matching drop ~4x (f32), plus the scale side-channel.
 
     Returns gossip(params, err) -> (mixed, new_err).
     """
@@ -121,15 +125,9 @@ def gossip_compressed_fn(mesh: Mesh, worker_axes: tuple[str, ...],
 
         def q8(leaf, e):
             z = leaf.astype(jnp.float32) + e
-            r = z.reshape(-1)
-            n = r.shape[0]
-            pad = (-n) % 1024
-            r2 = jnp.pad(r, (0, pad)).reshape(-1, 1024)
-            scale = jnp.maximum(jnp.max(jnp.abs(r2), 1, keepdims=True),
-                                1e-30) / 127.0
-            q = jnp.clip(jnp.round(r2 / scale), -127, 127).astype(jnp.int8)
-            deq = (q.astype(jnp.float32) * scale).reshape(-1)[:n] \
-                .reshape(leaf.shape)
+            n = int(np.prod(z.shape))
+            q, scale = compression.quantize_flat(z.reshape(-1))
+            deq = compression.dequantize_flat(q, scale, n).reshape(leaf.shape)
             return q, scale, z - deq, deq
 
         packed = jax.tree.map(q8, x, err,
@@ -153,8 +151,8 @@ def gossip_compressed_fn(mesh: Mesh, worker_axes: tuple[str, ...],
             w_m = wt[m, me]
 
             def mix(a, qn, sn, ds):
-                yn = (qn.astype(jnp.float32) * sn).reshape(-1)[
-                    :int(np.prod(a.shape))].reshape(a.shape)
+                yn = compression.dequantize_flat(
+                    qn, sn, int(np.prod(a.shape))).reshape(a.shape)
                 return a + (w_m * (yn - ds)).astype(a.dtype)
 
             acc = jax.tree.map(mix, acc, pq, ps, deq_self)

@@ -79,6 +79,21 @@ def main():
         np.linalg.norm(np.asarray(want))
     check(f"int8 gossip close (rel={rel:.4f})", rel < 0.02)
     check("error feedback nonzero", float(jnp.abs(err).max()) > 0)
+    # residual parity with the canonical compensated update: e' = z - Q(z)
+    # computed per device shard ([1, 6, 16] blocks of the model axis)
+    # through the shared core/compression wire format
+    from repro.core import compression
+    z_np = np.asarray(x, np.float32)                  # err0 == 0 -> z == x
+    want_err = np.zeros_like(z_np)
+    for ww in range(w):
+        for m in range(2):
+            blk = z_np[ww, :, 16 * m:16 * (m + 1)].reshape(-1)
+            q2, s2 = compression.quantize_flat(jnp.asarray(blk))
+            deq = np.asarray(compression.dequantize_flat(q2, s2, blk.size))
+            want_err[ww, :, 16 * m:16 * (m + 1)] = \
+                (blk - deq).reshape(6, 16)
+    check("compressed residual == z - Q(z) (core parity)",
+          np.allclose(np.asarray(err), want_err, atol=1e-7))
 
     # ---- full train step on a RING (sparse) topology ----------------------
     # (a full graph with uniform weights is exact averaging — replicas
