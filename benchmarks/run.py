@@ -10,6 +10,8 @@
   fused    scan-based engine vs reference engine rounds/sec (D-PSGD shape)
   compressed  int8+error-feedback gossip vs uncompressed: wire bytes,
            accuracy parity, simulated-clock speedup (CI-gated via --smoke)
+  adpsgd   fused event-driven AD-PSGD vs the reference event loop:
+           events/sec + accuracy parity (CI-gated via --smoke: >= 5x)
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6]
 Output: CSV lines  benchmark,metric,value  + a summary table.
@@ -271,6 +273,63 @@ def bench_compressed(rows, full):
             FAILURES.append(f"compressed accuracy drift {drift:.4f} > 1%")
 
 
+def bench_adpsgd(rows, full):
+    """Fused event-driven AD-PSGD (core/fused.run_adpsgd_fused) vs the
+    reference event loop on the smoke shape: identical event schedule
+    (engine.adpsgd_schedule), events/sec compared, min-of-3 timings per
+    engine (the loop is host-dispatch bound, so wall-clock noise hits the
+    reference hardest). In --smoke mode a speedup < 5x or any final-
+    accuracy drift marks the whole benchmark run failed."""
+    from repro.core import engine
+    from repro.core.experiment import setup_experiment
+    from repro.core.fused import run_adpsgd_fused
+    from repro.simulation.cluster import SimCluster
+
+    cfg = base_cfg(full)
+    rounds = 20 if SMOKE else (40 if not full else 80)
+    if SMOKE:
+        # tiny cluster AND a small tau: the smoke gate measures the
+        # dispatch-overhead elimination (the sequential tau-step grad
+        # chain is identical device work in both engines and only
+        # dilutes the ratio); the non-smoke leg keeps the compute-heavy
+        # shape
+        cfg = replace(cfg, num_workers=8, tau_init=2)
+    cfg = replace(cfg, algorithm="adpsgd")
+    train, tx, ty, shards, cluster0 = setup_experiment(
+        cfg, non_iid_p=0.4, spread=SPREAD, rounds=rounds)
+    n_events = rounds * cfg.num_workers
+
+    def timed(fused):
+        cluster = SimCluster(cfg.num_workers, model_bits=cluster0.model_bits,
+                             seed=cfg.seed)
+        fn = run_adpsgd_fused if fused else engine.run_adpsgd
+        t0 = time.perf_counter()
+        h = fn(train, tx, ty, shards, cluster, cfg, rounds=rounds)
+        return time.perf_counter() - t0, h
+
+    for fused in (False, True):               # warm the jit caches
+        timed(fused)
+    t_ref, h_ref = min((timed(False) for _ in range(3)),
+                       key=lambda th: th[0])
+    t_fus, h_fus = min((timed(True) for _ in range(3)),
+                       key=lambda th: th[0])
+    assert len(h_ref.records) == len(h_fus.records)
+    emit(rows, "adpsgd", "ref_events_per_s", round(n_events / t_ref, 1))
+    emit(rows, "adpsgd", "fused_events_per_s", round(n_events / t_fus, 1))
+    speedup = t_ref / t_fus
+    emit(rows, "adpsgd", "speedup", round(speedup, 2))
+    drift = abs(h_ref.final_accuracy - h_fus.final_accuracy)
+    emit(rows, "adpsgd", "final_acc_drift", round(drift, 6))
+    emit(rows, "adpsgd", "mean_staleness",
+         round(float(np.mean([r.staleness for r in h_fus.records])), 3))
+    if SMOKE and speedup < 5.0:
+        FAILURES.append(f"fused AD-PSGD below the 5x events/sec gate "
+                        f"({speedup:.2f}x)")
+    if SMOKE and drift > 1e-5:
+        FAILURES.append(f"fused AD-PSGD accuracy drifted {drift:.2e} "
+                        f"from the reference event loop")
+
+
 def bench_collective(rows, full):
     """Adapted-topology gossip vs all-reduce wire bytes (the roofline knob
     the paper's technique controls; DESIGN.md §3)."""
@@ -296,6 +355,7 @@ BENCHES = {
     "collective": bench_collective,
     "fused": bench_fused,
     "compressed": bench_compressed,
+    "adpsgd": bench_adpsgd,
 }
 
 SMOKE = False              # set by --smoke; bench_fused reads it

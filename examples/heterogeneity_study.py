@@ -13,12 +13,18 @@ FedHP's adaptive topology + tau re-equalization vs the static baselines.
 
     PYTHONPATH=src python examples/heterogeneity_study.py --churn
 
-``--fused`` routes the synchronous algorithms through the scan-based
-fused engine (core/fused.py) — same trajectories, one device dispatch
-per replan segment instead of ~10 per round (AD-PSGD is event-driven
-and always runs on its reference engine):
+``--fused`` routes every algorithm through the scan-based fused engines
+(core/fused.py: run_dfl_fused for the synchronous strategies,
+run_adpsgd_fused for AD-PSGD) — same trajectories, one device dispatch
+per segment instead of ~10 per round / ~3 per event:
 
     PYTHONPATH=src python examples/heterogeneity_study.py --fused
+
+``--adpsgd`` runs the asynchronous study instead: AD-PSGD on the
+reference event loop vs the fused event scan, uncompressed vs int8
+compensated pairwise exchange, with per-round staleness reported:
+
+    PYTHONPATH=src python examples/heterogeneity_study.py --adpsgd
 
 ``--compressed`` runs the compressed-gossip comparison instead: FedHP
 and D-PSGD with int8 + error-feedback gossip (core/compression.py,
@@ -45,8 +51,7 @@ def heterogeneity_study(fused: bool = False):
     for p in (0.1, 0.8):
         for algo in ("fedhp", "dpsgd", "ldsgd", "pens", "adpsgd"):
             h = run_algorithm(algo, CFG, non_iid_p=p, spread=3.0,
-                              time_budget=BUDGET,
-                              fused=fused and algo != "adpsgd")
+                              time_budget=BUDGET, fused=fused)
             print(f"{algo:8s} {p:4.1f} {h.final_accuracy:6.3f} "
                   f"{h.records[-1].cumulative_time:8.1f} "
                   f"{h.avg_waiting:6.2f}")
@@ -73,7 +78,7 @@ def churn_study(fused: bool = False):
         for algo in CHURN_ALGOS:
             h = run_algorithm(algo, cfg, non_iid_p=0.4, spread=3.0,
                               churn=sched, time_budget=BUDGET,
-                              fused=fused and algo != "adpsgd")
+                              fused=fused)
             t = h.completion_time(TARGET_ACC)
             t_str = f"{t:9.1f}" if t is not None else f"{'never':>9s}"
             print(f"{algo:8s} {rate:6.0%} {h.final_accuracy:6.3f} {t_str} "
@@ -101,19 +106,42 @@ def compressed_study(fused: bool = False):
                   f"{h.records[-1].cumulative_time:9.1f}")
 
 
+def adpsgd_study():
+    """Asynchronous engines head to head: reference event loop vs fused
+    event scan, uncompressed vs int8 compensated pairwise exchange."""
+    print("AD-PSGD: event-driven engines, staleness + compression")
+    print(f"{'engine':10s} {'wire':>6s} {'acc':>6s} {'total(s)':>9s} "
+          f"{'stale':>6s}")
+    for mode in ("none", "int8"):
+        cfg = replace(CFG, compress=mode)
+        for fused in (False, True):
+            h = run_algorithm("adpsgd", cfg, non_iid_p=0.4, spread=3.0,
+                              time_budget=BUDGET, fused=fused)
+            stale = sum(r.staleness for r in h.records) / len(h.records)
+            print(f"{'fused' if fused else 'reference':10s} {mode:>6s} "
+                  f"{h.final_accuracy:6.3f} "
+                  f"{h.records[-1].cumulative_time:9.1f} {stale:6.2f}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--churn", action="store_true",
                     help="run the dynamic-membership (churn) scenario")
     ap.add_argument("--compressed", action="store_true",
                     help="run the compressed-gossip (int8 + EF) scenario")
+    ap.add_argument("--adpsgd", action="store_true",
+                    help="run the asynchronous (AD-PSGD) engine study "
+                         "(always compares reference AND fused engines; "
+                         "--fused has no extra effect here)")
     ap.add_argument("--fused", action="store_true",
-                    help="run synchronous algorithms on the fused engine")
+                    help="run the algorithms on the fused scan engines")
     args = ap.parse_args()
     if args.churn:
         churn_study(fused=args.fused)
     elif args.compressed:
         compressed_study(fused=args.fused)
+    elif args.adpsgd:
+        adpsgd_study()
     else:
         heterogeneity_study(fused=args.fused)
 

@@ -53,6 +53,7 @@ SCALE_BITS = 32
 
 
 def validate_mode(mode: str) -> str:
+    """Check a ``cfg.compress`` value against the supported wire modes."""
     if mode not in COMPRESS_MODES:
         raise ValueError(f"compress must be one of {COMPRESS_MODES}, "
                          f"got {mode!r}")
@@ -172,3 +173,30 @@ def compressed_gossip_ref(flat, err, mix, *, error_feedback: bool = True):
                                         error_feedback=error_feedback)
     mixed = flat + (jnp.tensordot(mix, yhat, axes=1) - yhat)
     return mixed, new_err
+
+
+def compressed_pair_ref(xi, xj, ei, ej, *, error_feedback: bool = True,
+                        use_kernel: bool = False, interpret: bool = False):
+    """One compressed AD-PSGD pairwise exchange — the compensated update
+    restricted to a single edge with the doubly stochastic 2x2 mix
+    W = [[.5, .5], [.5, .5]]:
+
+        x_i' = x_i + ½ (ŷ_j - ŷ_i),   x_j' = x_j + ½ (ŷ_i - ŷ_j)
+
+    where ŷ = dequant(quant(x + e)) per endpoint (same wire format as the
+    synchronous engines). The endpoints do NOT become equal — unlike the
+    exact average — but their SUM is preserved exactly, and error
+    feedback removes the per-worker quantization bias over events
+    (ChocoSGD extended to pairwise exchange). Takes and returns [P] rows
+    plus the two residuals. ``use_kernel=True`` routes the int8 round
+    trip through the Pallas kernels (the fused engine's path); both paths
+    produce bit-identical ŷ."""
+    z = jnp.stack([xi + ei, xj + ej]) if error_feedback \
+        else jnp.stack([xi, xj])
+    yhat = qdq_rows(z, use_kernel=use_kernel, interpret=interpret)
+    half = 0.5 * (yhat[1] - yhat[0])
+    xi2 = xi + half
+    xj2 = xj - half
+    if error_feedback:
+        ei, ej = z[0] - yhat[0], z[1] - yhat[1]
+    return xi2, xj2, ei, ej

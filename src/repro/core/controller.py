@@ -25,6 +25,12 @@ from repro.core.consensus import ConsensusTracker
 
 @dataclass
 class ControlDecision:
+    """One coordinator decision (Alg. 3 output): the round topology A^h,
+    per-worker taus (Eq. 40 equalization around the pace-setter's
+    theory-optimal tau*, Remark 2), the predicted round/waiting times
+    (Eq. 10-11) and the Eq. 36 consensus bound the topology was accepted
+    under."""
+
     adj: np.ndarray
     taus: np.ndarray                  # (N,) int per-worker local frequencies
     round_time: float                 # max_i t_i (predicted)
@@ -36,6 +42,7 @@ class ControlDecision:
 
     @property
     def num_links(self) -> int:
+        """Undirected edge count of the decided topology."""
         return int(self.adj.sum() // 2)
 
 
@@ -97,6 +104,9 @@ def link_times(adj: np.ndarray, beta: np.ndarray) -> np.ndarray:
 def evaluate_topology(adj: np.ndarray, mu: np.ndarray, beta: np.ndarray,
                       tau_star: int, tau_max: int,
                       alive: np.ndarray | None = None) -> ControlDecision:
+    """Score one candidate topology: equalize taus (Eq. 40), then predict
+    its round time max_i t_i and average waiting time (Eq. 10-11) — the
+    objective Alg. 3's greedy link removal minimizes."""
     n = adj.shape[0]
     alive = np.ones(n, bool) if alive is None else np.asarray(alive, bool)
     taus, pace = equalized_taus(adj, mu, beta, tau_star, tau_max, alive)

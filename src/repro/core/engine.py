@@ -12,10 +12,16 @@ strategy.
 ``run_adpsgd`` — event-driven asynchronous engine (AD-PSGD [23]): workers
 run independently; on finishing tau local steps a worker averages models
 pairwise with a random neighbor; the event clock captures staleness and
-the near-zero waiting time the paper reports (Fig. 7).
+the near-zero waiting time the paper reports (Fig. 7). The event loop's
+control plane (heap of finish times, partner selection, churn at round
+boundaries, staleness counters) is factored into the pure host function
+``adpsgd_schedule`` so the fused engine (``core/fused.run_adpsgd_fused``)
+can lower the same event sequence into one ``jax.lax.scan`` — the
+differential harness proves the two interchangeable.
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 from dataclasses import dataclass, field
 from functools import partial
@@ -36,6 +42,13 @@ from repro.simulation.model import accuracy, classifier_loss, init_classifier
 
 @dataclass
 class RoundRecord:
+    """One round of ``History``: the host-side record both engines must
+    reproduce bit-identically (times, taus, links, staleness) next to the
+    device metrics (accuracy, loss, consensus) that match to float
+    tolerance. ``staleness`` is AD-PSGD's per-round mean staleness (how
+    many pairwise averages hit a worker's live row while its delta was in
+    flight); synchronous engines record 0.0."""
+
     round: int
     round_time: float
     waiting_time: float
@@ -45,10 +58,16 @@ class RoundRecord:
     num_links: int
     consensus: float
     cumulative_time: float
+    staleness: float = 0.0
 
 
 @dataclass
 class History:
+    """Per-round trajectory of one run — the common result type of all
+    three engines (reference, fused, AD-PSGD), so paper metrics
+    (completion time to target accuracy, Fig. 3; average waiting time,
+    Fig. 7) compare across engines and algorithms."""
+
     records: list[RoundRecord] = field(default_factory=list)
 
     def completion_time(self, target_acc: float) -> float | None:
@@ -61,16 +80,18 @@ class History:
 
     @property
     def final_accuracy(self) -> float:
+        """Fleet-average test accuracy at the last recorded round."""
         return self.records[-1].accuracy if self.records else 0.0
 
     @property
     def avg_waiting(self) -> float:
+        """Mean per-round waiting time (Eq. 11; the Fig. 7 metric)."""
         return float(np.mean([r.waiting_time for r in self.records])) \
             if self.records else 0.0
 
     def as_arrays(self) -> dict[str, np.ndarray]:
-        keys = ("round", "round_time", "waiting_time", "accuracy", "loss",
-                "mean_tau", "num_links", "consensus", "cumulative_time")
+        """Column-major view of the records, one array per field."""
+        keys = tuple(f.name for f in dataclasses.fields(RoundRecord))
         return {k: np.array([getattr(r, k) for r in self.records])
                 for k in keys}
 
@@ -156,6 +177,23 @@ def _unflatten(flat, stacked):
 def _param_count(stacked) -> int:
     """P of the flattened [W, P] parameter matrix."""
     return sum(int(np.prod(l.shape[1:])) for l in jax.tree.leaves(stacked))
+
+
+def _flatten_row(params):
+    """ONE worker's pytree -> [P] f32 vector (row of the [W, P] layout)."""
+    return jnp.concatenate(
+        [l.reshape(-1).astype(jnp.float32) for l in jax.tree.leaves(params)])
+
+
+def _unflatten_row(vec, template):
+    """Inverse of ``_flatten_row`` against a single-worker template pytree."""
+    leaves = jax.tree.leaves(template)
+    out, off = [], 0
+    for l in leaves:
+        sz = int(np.prod(l.shape))
+        out.append(vec[off:off + sz].reshape(l.shape).astype(l.dtype))
+        off += sz
+    return jax.tree.unflatten(jax.tree.structure(template), out)
 
 
 @partial(jax.jit, static_argnames=("error_feedback",))
@@ -375,117 +413,288 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
 
 
 # ---------------------------------------------------------------------------
-# Asynchronous engine (AD-PSGD baseline)
+# Asynchronous engine (AD-PSGD baseline): event schedule + event loop
 # ---------------------------------------------------------------------------
 
-def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
-               cfg: FedHPConfig, *, rounds: int | None = None,
-               hidden: int = 64, eval_subset: int = 512,
-               time_budget: float | None = None) -> History:
-    """Event-driven AD-PSGD: random pairwise averaging on completion.
+# partner selection / event ordering draws come from a stream derived from
+# (seed, _ADPSGD_STREAM) so it is independent of the batch-sampling stream:
+# the fused engine can then batch per-seed batch streams over a SHARED
+# event schedule (vmapped ``seeds``) without the schedules diverging
+_ADPSGD_STREAM = 0xAD
 
-    One "round" = N worker-finish events (≈ one synchronous round of work),
-    at which point metrics are sampled — comparable x-axes with run_dfl."""
-    if compression.validate_mode(cfg.compress) != "none":
-        raise ValueError(
-            "compressed gossip is implemented for the synchronous engines "
-            "(run_dfl / run_dfl_fused); AD-PSGD's event-driven pairwise "
-            "exchange is uncompressed")
+
+@dataclass(frozen=True)
+class AdpsgdEvent:
+    """One processed AD-PSGD completion event (AD-PSGD [23], Alg. 1).
+
+    ``worker`` finished tau local steps computed from its snapshot and
+    atomically pairwise-averages with ``partner`` at simulated ``time``.
+    ``staleness`` counts how many pairwise averages hit the worker's live
+    row since its snapshot was taken — the quantity AD-PSGD's convergence
+    bound is stated in; ``inflight_bound`` is the number of other
+    workers' events processed in that window (staleness can never exceed
+    it: each event stales at most one other row)."""
+
+    worker: int
+    partner: int
+    time: float
+    staleness: int
+    inflight_bound: int
+
+
+@dataclass(frozen=True)
+class AdpsgdRound:
+    """N consecutive events plus the host state their record needs.
+
+    ``keep``/``donor_w`` describe the join re-initialization applied
+    BEFORE this round's events (all-False/zero when nobody joined);
+    ``alive`` is the membership in force DURING the events; ``clock`` is
+    the simulated time of the round's last event (the record's
+    ``cumulative_time``); ``lr`` the decayed learning rate in force."""
+
+    events: tuple[AdpsgdEvent, ...]
+    lr: float
+    alive: np.ndarray
+    clock: float
+    keep: np.ndarray
+    donor_w: np.ndarray
+
+    @property
+    def mean_staleness(self) -> float:
+        """Mean staleness over the round's events (the record field)."""
+        return float(np.mean([e.staleness for e in self.events]))
+
+
+@dataclass(frozen=True)
+class AdpsgdSchedule:
+    """The complete host-side control plane of one AD-PSGD run: what the
+    event loop would do, minus the device math. Both engines consume it —
+    ``run_adpsgd`` event by event, ``run_adpsgd_fused`` as scan inputs —
+    which is what makes their host-side records bit-identical."""
+
+    rounds: tuple[AdpsgdRound, ...]
+    tau: int
+    num_links: int
+    num_workers: int
+
+    @property
+    def events(self) -> list[AdpsgdEvent]:
+        """All processed events, flattened in completion order."""
+        return [e for r in self.rounds for e in r.events]
+
+
+def adpsgd_schedule(cluster: SimCluster, cfg: FedHPConfig, *,
+                    rounds: int | None = None,
+                    time_budget: float | None = None) -> AdpsgdSchedule:
+    """Precompute the AD-PSGD event schedule (pure host function).
+
+    Replays the event loop's control plane: a heap of per-worker finish
+    times ``t + tau mu_i + beta_ij`` (Eq. 10 per event; compressed runs
+    charge ``beta / wire_ratio``), random-neighbor partner selection over
+    the alive ring, churn applied at round boundaries (every N processed
+    events), and per-worker staleness counters. Events of departed
+    workers are dropped; joiners are re-admitted with a fresh event.
+    Consumes the cluster's RNG exactly once per event (mu, beta draws)
+    plus once per join — the same draws the legacy in-line loop made."""
     rounds = rounds or cfg.rounds
     n = cfg.num_workers
-    rng = np.random.default_rng(cfg.seed)
-    key = jax.random.PRNGKey(cfg.seed)
-    p0 = init_classifier(key, data.x.shape[-1], hidden, data.num_classes)
-    stacked = jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape), p0)
+    rng = np.random.default_rng((cfg.seed, _ADPSGD_STREAM))
     ring = topo.ring_topology(n)
     neighbors = [np.nonzero(ring[i])[0] for i in range(n)]
-
-    tx = jnp.asarray(test_x[:eval_subset])
-    ty = jnp.asarray(test_y[:eval_subset])
-
     tau = cfg.tau_init
-    # event queue: (finish_time, worker)
+    compress = compression.validate_mode(cfg.compress) != "none"
+    comm_ratio = (compression.wire_ratio(
+        int(cluster.model_bits // compression.FP32_BITS))
+        if compress else 1.0)
+
     mu0 = cluster.sample_mu()
     q = [(tau * mu0[i], i) for i in range(n)]
     heapq.heapify(q)
-    hist = History()
+    alive = cluster.advance_round(0)
+    lr = cfg.lr
+    stale = np.zeros(n, np.int64)     # averages absorbed since snapshot
+    last_ev = np.full(n, -1)          # processed-event index of last event
+    out: list[AdpsgdRound] = []
+    cur: list[AdpsgdEvent] = []
+    keep = np.zeros(n, bool)
+    donor_w = np.zeros(n)
     events = 0
     clock = 0.0
-    lr = cfg.lr
-
-    @partial(jax.jit, static_argnames=("tau",))
-    def train_delta(params, bx, by, lr, tau: int):
-        """Local updates computed from a SNAPSHOT; returns the delta.
-
-        AD-PSGD's defining staleness: while a worker computes, its live
-        model may be averaged by neighbors; the (stale) delta is applied
-        to whatever the live model has become [23]."""
-        def step(p, xs):
-            x, y = xs
-            g = jax.grad(classifier_loss)(p, {"x": x, "y": y})
-            return jax.tree.map(lambda w, gg: w - lr * gg, p, g), None
-        out, _ = jax.lax.scan(step, params, (bx, by))
-        return jax.tree.map(lambda a, b: a - b, out, params)
-
-    @jax.jit
-    def apply_and_average(stacked, delta, i, j):
-        pi = jax.tree.map(lambda l, d: l[i] + d, stacked, delta)
-        pj = jax.tree.map(lambda l: l[j], stacked)
-        avg = jax.tree.map(lambda a, b: 0.5 * (a + b), pi, pj)
-        return jax.tree.map(
-            lambda l, a: l.at[i].set(a).at[j].set(a), stacked, avg)
-
-    # per-worker snapshot taken when its computation started
-    snapshots = [jax.tree.map(lambda l: l[i], stacked) for i in range(n)]
-    alive = cluster.advance_round(0)
-    while hist.records.__len__() < rounds and q:
+    while len(out) < rounds and q:
         t_now, i = heapq.heappop(q)
         clock = t_now
         if not alive[i]:
             continue                  # churned out: event dies with it
-        shard = shards[i]
-        ix = rng.integers(0, len(shard), (tau, cfg.batch_size))
-        bx = jnp.asarray(data.x[shard[ix]])
-        by = jnp.asarray(data.y[shard[ix]])
-        # delta from the stale snapshot, applied to the live model, then
-        # atomic pairwise averaging with a random neighbor
-        delta = train_delta(snapshots[i], bx, by, jnp.float32(lr), tau)
         cand = [j for j in neighbors[i] if alive[j]]
         if not cand:                  # ring neighbors churned out: any peer
             cand = [j for j in np.nonzero(alive)[0] if j != i]
         j = int(rng.choice(cand)) if cand else int(i)
-        stacked = apply_and_average(stacked, delta, jnp.int32(i),
-                                    jnp.int32(j))
-        snapshots[i] = jax.tree.map(lambda l: l[i], stacked)
-
+        bound = int(events - last_ev[i] - 1) if last_ev[i] >= 0 else events
+        cur.append(AdpsgdEvent(int(i), j, float(clock), int(stale[i]),
+                               bound))
+        stale[i] = 0
+        if j != i:
+            stale[j] += 1             # j's in-flight delta is now staler
+        last_ev[i] = events
         mu = cluster.sample_mu()[i]
-        beta = cluster.sample_beta()[i, j]
+        beta = cluster.sample_beta()[i, j] / comm_ratio
         heapq.heappush(q, (t_now + tau * mu + beta, i))
         events += 1
         if events % n == 0:
+            out.append(AdpsgdRound(tuple(cur), lr, alive.copy(),
+                                   float(clock), keep, donor_w))
             lr *= cfg.lr_decay
-            mean_acc, mean_loss = _mean_accuracy(stacked, tx, ty, alive)
-            flat = np.asarray(_flatten_workers(stacked))
-            fa = flat[alive] if alive.any() else flat
-            d_bar = float(np.linalg.norm(fa - fa.mean(0), axis=1).mean())
-            hist.records.append(RoundRecord(
-                round=len(hist.records), round_time=0.0,
-                waiting_time=0.0,          # async: no synchronization barrier
-                accuracy=mean_acc, loss=mean_loss, mean_tau=float(tau),
-                num_links=int(ring.sum() // 2), consensus=d_bar,
-                cumulative_time=clock))
+            cur = []
+            keep = np.zeros(n, bool)
+            donor_w = np.zeros(n)
             if time_budget is not None and clock >= time_budget:
                 break
             # event clock -> round clock: churn for the NEXT round advances
             # after this round's record, matching run_dfl's round-start
             # semantics (a round-r event affects record r in both engines)
-            alive = cluster.advance_round(len(hist.records))
+            alive = cluster.advance_round(len(out))
             joined = cluster.last_joined
-            if joined.any() and (alive & ~joined).any():
-                stacked = _reinit_joined(stacked, jnp.asarray(joined),
-                                         jnp.asarray(alive & ~joined))
+            donors = alive & ~joined
+            if joined.any() and donors.any():
+                keep = joined.copy()
+                donor_w = donors / donors.sum()
+                # re-init == fresh snapshot: counters reset AND the
+                # in-flight window restarts at the join boundary (else a
+                # rejoiner's first bound would span its dead period)
+                stale[joined] = 0
+                last_ev[joined] = events - 1
                 mu_now = cluster.sample_mu()
                 for w in np.nonzero(joined)[0]:
-                    snapshots[w] = jax.tree.map(lambda l, w=w: l[w], stacked)
                     heapq.heappush(q, (clock + tau * mu_now[w], int(w)))
+    return AdpsgdSchedule(tuple(out), tau, int(ring.sum() // 2), n)
+
+
+@partial(jax.jit, static_argnames=("tau",))
+def _adpsgd_delta(params, bx, by, lr, tau: int):
+    """tau local SGD steps (Eq. 3) computed from a SNAPSHOT; returns the
+    delta. AD-PSGD's defining staleness [23]: while a worker computes,
+    its live model may be averaged by neighbors, and the (stale) delta is
+    applied to whatever the live row has become. Shared with the fused
+    engine — equivalence rests on both running this exact step."""
+    def step(p, xs):
+        x, y = xs
+        g = jax.grad(classifier_loss)(p, {"x": x, "y": y})
+        return jax.tree.map(lambda w, gg: w - lr * gg, p, g), None
+    out, _ = jax.lax.scan(step, params, (bx, by))
+    return jax.tree.map(lambda a, b: a - b, out, params)
+
+
+@jax.jit
+def _adpsgd_average(stacked, delta, i, j):
+    """Atomic AD-PSGD pairwise exchange: apply worker i's stale delta to
+    its live row, then set both endpoints to the average (the 2-row
+    doubly-stochastic mix W = [[.5, .5], [.5, .5]], Eq. 5 restricted to
+    one edge)."""
+    pi = jax.tree.map(lambda l, d: l[i] + d, stacked, delta)
+    pj = jax.tree.map(lambda l: l[j], stacked)
+    avg = jax.tree.map(lambda a, b: 0.5 * (a + b), pi, pj)
+    return jax.tree.map(
+        lambda l, a: l.at[i].set(a).at[j].set(a), stacked, avg)
+
+
+@partial(jax.jit, static_argnames=("error_feedback",))
+def _adpsgd_exchange_compressed(stacked, err, delta, i, j, *,
+                                error_feedback: bool):
+    """Compressed AD-PSGD pairwise exchange (ChocoSGD-style, the pairwise
+    case of ``compression.compressed_gossip_ref``): both endpoints put
+    the int8 round trip ŷ of z = x + e on the wire and apply the
+    compensated half-mix x' = x + ½(ŷ_peer - ŷ_self); residuals carry
+    per worker. Unlike the exact average the two rows do NOT become
+    equal — the quantization error stays in e, keeping the fleet sum
+    exact."""
+    pi = jax.tree.map(lambda l, d: l[i] + d, stacked, delta)
+    pj = jax.tree.map(lambda l: l[j], stacked)
+    xi, xj = _flatten_row(pi), _flatten_row(pj)
+    xi2, xj2, ei2, ej2 = compression.compressed_pair_ref(
+        xi, xj, err[i], err[j], error_feedback=error_feedback)
+    err = err.at[i].set(ei2).at[j].set(ej2)
+    new_i = _unflatten_row(xi2, pi)
+    new_j = _unflatten_row(xj2, pj)
+    stacked = jax.tree.map(lambda l, a, b: l.at[i].set(a).at[j].set(b),
+                           stacked, new_i, new_j)
+    return stacked, err
+
+
+def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
+               cfg: FedHPConfig, *, rounds: int | None = None,
+               hidden: int = 64, eval_subset: int = 512,
+               time_budget: float | None = None,
+               schedule: AdpsgdSchedule | None = None) -> History:
+    """Event-driven AD-PSGD [23]: random pairwise averaging on completion.
+
+    One "round" = N worker-finish events (≈ one synchronous round of
+    work), at which point metrics are sampled — comparable x-axes with
+    ``run_dfl``. The control plane comes from ``adpsgd_schedule`` (pass
+    an explicit ``schedule`` to replay a custom event sequence verbatim
+    — ``rounds``/``time_budget`` are generation-time knobs); this
+    loop runs the device math one jit dispatch per event — the semantic
+    ground truth ``fused.run_adpsgd_fused`` is differentially tested
+    against. ``cfg.compress == "int8"`` switches the pairwise exchange to
+    the compensated int8 update and charges Eq. 10 event comm time
+    divided by the wire ratio."""
+    rounds = rounds or cfg.rounds
+    n = cfg.num_workers
+    compress = compression.validate_mode(cfg.compress) != "none"
+    if schedule is None:
+        schedule = adpsgd_schedule(cluster, cfg, rounds=rounds,
+                                   time_budget=time_budget)
+    elif time_budget is not None:
+        raise ValueError(
+            "time_budget only applies while GENERATING a schedule; an "
+            "explicit schedule= replays verbatim (apply the budget in "
+            "adpsgd_schedule instead)")
+    rng = np.random.default_rng(cfg.seed)       # batch-sampling stream
+    key = jax.random.PRNGKey(cfg.seed)
+    p0 = init_classifier(key, data.x.shape[-1], hidden, data.num_classes)
+    stacked = jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape), p0)
+    tx = jnp.asarray(test_x[:eval_subset])
+    ty = jnp.asarray(test_y[:eval_subset])
+    tau = schedule.tau
+    err = (jnp.zeros((n, _param_count(stacked)), jnp.float32)
+           if compress else None)
+
+    # per-worker snapshot taken when its computation started
+    snapshots = [jax.tree.map(lambda l, i=i: l[i], stacked)
+                 for i in range(n)]
+    hist = History()
+    for rnd in schedule.rounds:
+        if rnd.keep.any():
+            stacked = _blend_joined(stacked, jnp.asarray(rnd.keep),
+                                    jnp.asarray(rnd.donor_w, jnp.float32))
+            if compress:
+                err = jnp.where(jnp.asarray(rnd.keep)[:, None], 0.0, err)
+            for w in np.nonzero(rnd.keep)[0]:
+                snapshots[w] = jax.tree.map(lambda l, w=w: l[w], stacked)
+        for ev in rnd.events:
+            i, j = ev.worker, ev.partner
+            shard = shards[i]
+            ix = rng.integers(0, len(shard), (tau, cfg.batch_size))
+            bx = jnp.asarray(data.x[shard[ix]])
+            by = jnp.asarray(data.y[shard[ix]])
+            delta = _adpsgd_delta(snapshots[i], bx, by,
+                                  jnp.float32(rnd.lr), tau)
+            if compress:
+                stacked, err = _adpsgd_exchange_compressed(
+                    stacked, err, delta, jnp.int32(i), jnp.int32(j),
+                    error_feedback=cfg.error_feedback)
+            else:
+                stacked = _adpsgd_average(stacked, delta, jnp.int32(i),
+                                          jnp.int32(j))
+            snapshots[i] = jax.tree.map(lambda l: l[i], stacked)
+        alive = rnd.alive
+        mean_acc, mean_loss = _mean_accuracy(stacked, tx, ty, alive)
+        flat = np.asarray(_flatten_workers(stacked))
+        fa = flat[alive] if alive.any() else flat
+        d_bar = float(np.linalg.norm(fa - fa.mean(0), axis=1).mean())
+        hist.records.append(RoundRecord(
+            round=len(hist.records), round_time=0.0,
+            waiting_time=0.0,          # async: no synchronization barrier
+            accuracy=mean_acc, loss=mean_loss, mean_tau=float(tau),
+            num_links=schedule.num_links, consensus=d_bar,
+            cumulative_time=rnd.clock, staleness=rnd.mean_staleness))
     return hist

@@ -65,11 +65,12 @@ def run_algorithm(algorithm: str, cfg: FedHPConfig, *, non_iid_p: float = 0.1,
                   fused: bool = False, seeds=None):
     """Run one (algorithm, non-IID level) cell and return its History.
 
-    ``fused=True`` routes synchronous algorithms through the scan-based
-    engine (``core.fused.run_dfl_fused``) — equivalent trajectories, far
-    fewer host round trips; ``seeds`` (fused only) batches S experiments
-    through one vmapped scan and returns ``list[History]``. AD-PSGD is
-    event-driven and always uses its reference engine.
+    ``fused=True`` routes the run through the scan-based engines
+    (``core.fused.run_dfl_fused`` for the synchronous strategies,
+    ``core.fused.run_adpsgd_fused`` for the event-driven AD-PSGD) —
+    equivalent trajectories, far fewer host round trips; ``seeds``
+    (fused only) batches S experiments through one vmapped scan and
+    returns ``list[History]``.
     """
     if seeds is not None and not fused:
         raise ValueError("seeds batching requires fused=True")
@@ -79,7 +80,10 @@ def run_algorithm(algorithm: str, cfg: FedHPConfig, *, non_iid_p: float = 0.1,
         churn=churn, rounds=rounds)
     if algorithm == "adpsgd":
         if fused:
-            raise ValueError("adpsgd is event-driven; no fused path")
+            from repro.core.fused import run_adpsgd_fused
+            return run_adpsgd_fused(train, tx, ty, shards, cluster, cfg,
+                                    rounds=rounds, time_budget=time_budget,
+                                    seeds=seeds)
         return engine.run_adpsgd(train, tx, ty, shards, cluster, cfg,
                                  rounds=rounds, time_budget=time_budget)
     base = make_base_topology(cfg.num_workers, cfg.base_topology, cfg.seed)

@@ -1,4 +1,5 @@
-"""Fused scan-based DFL round engine — the fast path next to ``run_dfl``.
+"""Fused scan-based DFL engines — the fast paths next to ``run_dfl``
+and ``run_adpsgd``.
 
 ``run_dfl_fused`` executes whole blocks of rounds on device inside one
 ``jax.lax.scan`` instead of the reference engine's one Python iteration
@@ -31,8 +32,15 @@
   layout, and Eq. 10 charges comm time / wire_ratio — composing with
   churn masks and the vmapped ``seeds`` axis.
 
-Interchangeability with ``run_dfl`` is proven by the differential harness
-in ``tests/test_fused_equivalence.py``.
+``run_adpsgd_fused`` does the same for the event-driven AD-PSGD
+baseline: the host precomputes the full event schedule
+(``engine.adpsgd_schedule`` — partners, event clocks, staleness) and the
+scan replays every event with snapshots, int8 residuals and staleness
+counters carried in the scan state, pairwise-averaging through the
+Pallas ``gossip_mix_2d`` kernel on a 2-row slice.
+
+Interchangeability with the reference engines is proven by the
+differential harness in ``tests/test_fused_equivalence.py``.
 """
 from __future__ import annotations
 
@@ -47,10 +55,12 @@ from repro.configs.base import FedHPConfig
 from repro.core import compression
 from repro.core import topology as topo
 from repro.core.algorithms import Strategy
-from repro.core.engine import (History, RoundRecord, _blend_joined,
+from repro.core.engine import (AdpsgdSchedule, History, RoundRecord,
+                               _adpsgd_delta, _blend_joined,
                                _cross_loss_matrix, _draw_batches,
-                               _flatten_workers, _measure_worker,
-                               _param_count, _sgd_worker, _unflatten)
+                               _flatten_row, _flatten_workers,
+                               _measure_worker, _param_count, _sgd_worker,
+                               _unflatten, _unflatten_row, adpsgd_schedule)
 from repro.data.synthetic import Dataset
 from repro.kernels.gossip_mix import gossip_mix_2d
 from repro.simulation.cluster import SimCluster
@@ -61,6 +71,10 @@ from repro.simulation.model import accuracy, classifier_loss, init_classifier
 # bounds that at ~64 rounds per dispatch with no semantic difference
 # (static plans are recomputed per round either way)
 MAX_FUSE_ROUNDS = 64
+
+# AD-PSGD stages one batch tensor PER EVENT ([S, K, N, tau, B, D] — an
+# extra N factor over the synchronous engine), so its segments are shorter
+ADPSGD_FUSE_ROUNDS = 32
 
 
 # ---------------------------------------------------------------------------
@@ -443,4 +457,254 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
                     if needs_cross else None,
                     alive=a)
         h += len(seg)
+    return hists if batched else hists[0]
+
+
+# ---------------------------------------------------------------------------
+# Fused event-driven AD-PSGD
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("tau", "interpret", "compress", "ef"))
+def _adpsgd_scan(stacked, snap, err, stale, bx, by, iidx, jidx, lrs, keep,
+                 rw, ew, cw, tx, ty, *, tau: int, interpret: bool,
+                 compress: bool, ef: bool):
+    """Run K AD-PSGD rounds (K*N events) on device in one nested scan.
+
+    The outer scan walks rounds, the inner scan the round's N events;
+    the carry is the full asynchronous state the reference event loop
+    keeps between dispatches: live parameter rows (``stacked``), the
+    per-worker snapshots deltas are computed from (``snap``), the
+    error-feedback residuals (``err``, [S, W, P] on compressed runs) and
+    the per-worker staleness counters (``stale``, [S, W] i32). Batched
+    over a leading seed axis S on (stacked, snap, err, stale, bx, by);
+    the event schedule (iidx/jidx [K, N]), learning rates, join masks
+    and metric weights are shared across seeds.
+
+    The pairwise average runs through the Pallas ``gossip_mix_2d`` kernel
+    on the 2-row slice (partner row as the single neighbor buffer,
+    weight ½); compressed runs instead route the int8 round trip of both
+    rows through the Pallas quantize/dequantize kernels and apply the
+    compensated half-mix (``compression.compressed_pair_ref``).
+
+    Returns ((stacked', snap', err', stale'), outs) where outs carries
+    [S, K] metric trajectories plus the [S, K, N] per-event staleness
+    actually observed by the scan (host schedule replay must agree)."""
+    leaves = jax.tree.leaves(stacked)
+    p_total = sum(int(np.prod(l.shape[2:])) for l in leaves)
+    rows, cols = compression.flat_tile_shape(p_total)
+
+    def one_seed(stacked, snap, err, stale, bx, by):
+        # the scan carries FLAT [W, P] matrices (params + snapshots): one
+        # row scatter per event instead of one per pytree leaf; the
+        # single-worker ``template`` pytree only supplies shapes for the
+        # per-event unflatten around the SGD steps
+        template = jax.tree.map(lambda l: l[0], stacked)
+        flat0 = _flatten_workers(stacked)
+        snap0 = _flatten_workers(snap)
+
+        def event_body(carry, xs):
+            flat, snapf, err, stale = carry
+            i, j, bxe, bye, lr_h = xs
+            p_snap = _unflatten_row(snapf[i], template)
+            delta = _adpsgd_delta(p_snap, bxe, bye, lr_h, tau)
+            xi = flat[i] + _flatten_row(delta)
+            xj = flat[j]
+            if compress:
+                xi2, xj2, ei2, ej2 = compression.compressed_pair_ref(
+                    xi, xj, err[i], err[j], error_feedback=ef,
+                    use_kernel=True, interpret=interpret)
+                err = err.at[i].set(ei2).at[j].set(ej2)
+                flat = flat.at[i].set(xi2).at[j].set(xj2)
+            else:
+                # 2-row slice through the gossip kernel: the partner row
+                # is the single neighbor buffer, weight 1/2, so
+                # y = x_i + ½ (x_j - x_i) — the atomic pairwise average
+                pad = rows * cols - p_total
+                xi2d = jnp.pad(xi, (0, pad)).reshape(rows, cols)
+                u = jnp.pad(xj, (0, pad)).reshape(1, rows, cols)
+                avg2d = gossip_mix_2d(xi2d, u, jnp.full((1,), 0.5,
+                                                        jnp.float32),
+                                      interpret=interpret)
+                avg = avg2d.reshape(-1)[:p_total]
+                flat = flat.at[i].set(avg).at[j].set(avg)
+            # fresh snapshot for i = its live row after the exchange
+            snapf = snapf.at[i].set(flat[i])
+            st_i = stale[i]
+            stale = stale.at[i].set(0)
+            stale = stale.at[j].add(jnp.where(j != i, 1, 0))
+            return (flat, snapf, err, stale), st_i
+
+        def round_body(carry, xs):
+            flat, snapf, err, stale = carry
+            bxh, byh, i_h, j_h, lr_h, keep_h, rw_h, ew_h, cw_h = xs
+            # --- join re-init before the round's events: joined rows
+            # adopt the donor average, get a fresh snapshot, and drop
+            # residual + staleness (exact no-op when keep_h is all-False)
+            mean = jnp.tensordot(rw_h, flat, axes=1)
+            flat = jnp.where(keep_h[:, None], mean[None], flat)
+            snapf = jnp.where(keep_h[:, None], flat, snapf)
+            if compress and ef:
+                err = jnp.where(keep_h[:, None], 0.0, err)
+            stale = jnp.where(keep_h, 0, stale)
+
+            lrs_ev = jnp.broadcast_to(lr_h, i_h.shape)
+            (flat, snapf, err, stale), st = jax.lax.scan(
+                event_body, (flat, snapf, err, stale),
+                (i_h, j_h, bxh, byh, lrs_ev))
+
+            carry_tree = _unflatten(flat, stacked)
+            accs = jax.vmap(lambda p: accuracy(p, tx, ty))(carry_tree)
+            tloss = jax.vmap(
+                lambda p: classifier_loss(p, {"x": tx, "y": ty}))(
+                carry_tree)
+            dmean = jnp.tensordot(cw_h, flat, axes=1)
+            dists = jnp.sqrt(jnp.sum((flat - dmean[None]) ** 2, axis=1))
+            outs = {"acc": jnp.dot(ew_h, accs),
+                    "loss": jnp.dot(ew_h, tloss),
+                    "consensus": jnp.dot(cw_h, dists),
+                    "event_staleness": st}
+            return (flat, snapf, err, stale), outs
+
+        (flat, snapf, err, stale), outs = jax.lax.scan(
+            round_body, (flat0, snap0, err, stale),
+            (bx, by, iidx, jidx, lrs, keep, rw, ew, cw))
+        return (_unflatten(flat, stacked), _unflatten(snapf, snap),
+                err, stale), outs
+
+    return jax.vmap(one_seed, in_axes=(0, 0, 0, 0, 0, 0))(
+        stacked, snap, err, stale, bx, by)
+
+
+def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
+                     cluster: SimCluster, cfg: FedHPConfig, *,
+                     rounds: int | None = None, hidden: int = 64,
+                     eval_subset: int = 512,
+                     time_budget: float | None = None, seeds=None,
+                     interpret: bool | None = None,
+                     schedule: AdpsgdSchedule | None = None):
+    """Drop-in fused replacement for ``engine.run_adpsgd``.
+
+    The event-driven loop lowers to one ``jax.lax.scan`` per segment of
+    ``ADPSGD_FUSE_ROUNDS`` rounds: the host precomputes the full event
+    schedule (``engine.adpsgd_schedule`` — per-event worker, pairwise
+    partner, event time, staleness; Eq. 10 event clock, compressed runs
+    charging beta / wire_ratio) and the per-event batch tensors, then the
+    device replays every event with the same per-event math as the
+    reference loop — snapshot deltas, atomic pairwise averaging through
+    the Pallas ``gossip_mix_2d`` kernel (or the compensated int8 exchange
+    through the quantize kernels when ``cfg.compress == "int8"``), and
+    staleness counters carried in the scan state.
+
+    With ``seeds=None`` this matches ``run_adpsgd`` record for record
+    (host fields, including ``staleness``, bit-identical; device
+    trajectories to float tolerance — tests/test_fused_equivalence.py).
+    With an array of ``seeds`` it returns ``list[History]``: all lanes
+    share the cfg.seed-derived event schedule and cluster draws while the
+    model init / batch streams come from each lane's seed (the lane whose
+    seed equals ``cfg.seed`` reproduces the unbatched run exactly). Pass
+    an explicit ``schedule`` to replay a custom event sequence verbatim
+    (``rounds``/``time_budget`` are generation-time knobs)."""
+    rounds = rounds or cfg.rounds
+    n = cfg.num_workers
+    batched = seeds is not None
+    seed_list = ([int(s) for s in np.asarray(seeds).reshape(-1)]
+                 if batched else [int(cfg.seed)])
+    interp = (jax.default_backend() == "cpu") if interpret is None \
+        else interpret
+    compress = compression.validate_mode(cfg.compress) != "none"
+    if schedule is None:
+        schedule = adpsgd_schedule(cluster, cfg, rounds=rounds,
+                                   time_budget=time_budget)
+    elif time_budget is not None:
+        raise ValueError(
+            "time_budget only applies while GENERATING a schedule; an "
+            "explicit schedule= replays verbatim (apply the budget in "
+            "adpsgd_schedule instead)")
+    tau = schedule.tau
+
+    rngs = [np.random.default_rng(s) for s in seed_list]
+    stacked0 = []
+    for s in seed_list:
+        key = jax.random.PRNGKey(s)
+        p0 = init_classifier(key, data.x.shape[-1], hidden, data.num_classes)
+        stacked0.append(jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (n,) + l.shape), p0))
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *stacked0)
+    snap = stacked                       # snapshots start at the init rows
+    p_total = _param_count(stacked0[0])
+    err = jnp.zeros((len(seed_list), n, p_total if compress else 1),
+                    jnp.float32)
+    stale = jnp.zeros((len(seed_list), n), jnp.int32)
+    tx = jnp.asarray(test_x[:eval_subset])
+    ty = jnp.asarray(test_y[:eval_subset])
+
+    counts = {len(r.events) for r in schedule.rounds}
+    if len(counts) > 1:
+        raise ValueError(
+            f"fused AD-PSGD scans a rectangular [rounds, events] grid; "
+            f"got rounds with differing event counts {sorted(counts)} "
+            f"(generated schedules always have N events per round)")
+    n_ev = counts.pop() if counts else 0
+
+    hists = [History() for _ in seed_list]
+    done = 0
+    while done < len(schedule.rounds):
+        seg = schedule.rounds[done:done + ADPSGD_FUSE_ROUNDS]
+        iidx = np.array([[e.worker for e in r.events] for r in seg],
+                        np.int32)
+        jidx = np.array([[e.partner for e in r.events] for r in seg],
+                        np.int32)
+        lrs = np.array([r.lr for r in seg], np.float32)
+        keep = np.stack([r.keep for r in seg])
+        rw = np.stack([r.donor_w for r in seg]).astype(np.float32)
+        ew, cw = [], []
+        for r in seg:
+            a = r.alive
+            ew.append(a / a.sum() if a.any() and not a.all()
+                      else np.full(n, 1.0 / n))
+            cw.append(a / a.sum() if a.any() else np.full(n, 1.0 / n))
+        # per-seed batch tensors in event order, replaying the reference
+        # loop's batch-stream consumption draw for draw
+        bx = np.zeros((len(seed_list), len(seg), n_ev, tau, cfg.batch_size,
+                       data.x.shape[-1]), np.float32)
+        by = np.zeros((len(seed_list), len(seg), n_ev, tau,
+                       cfg.batch_size), np.int32)
+        for si, rng in enumerate(rngs):
+            for t, r in enumerate(seg):
+                for k, e in enumerate(r.events):
+                    shard = shards[e.worker]
+                    ix = rng.integers(0, len(shard), (tau, cfg.batch_size))
+                    bx[si, t, k] = data.x[shard[ix]]
+                    by[si, t, k] = data.y[shard[ix]]
+
+        (stacked, snap, err, stale), outs = _adpsgd_scan(
+            stacked, snap, err, stale, jnp.asarray(bx), jnp.asarray(by),
+            jnp.asarray(iidx), jnp.asarray(jidx), jnp.asarray(lrs),
+            jnp.asarray(keep), jnp.asarray(rw),
+            jnp.asarray(np.stack(ew), dtype=jnp.float32),
+            jnp.asarray(np.stack(cw), dtype=jnp.float32),
+            tx, ty, tau=tau, interpret=interp, compress=compress,
+            ef=cfg.error_feedback)
+        outs = {k: np.asarray(v) for k, v in outs.items()}
+        # the scan carries its own staleness counters; they must agree
+        # with the host schedule replay event for event (the documented
+        # invariant — a drifted join-reset or partner-increment rule in
+        # either implementation fails every fused run immediately)
+        sched_st = np.array([[e.staleness for e in r.events] for r in seg])
+        if not np.array_equal(outs["event_staleness"][0], sched_st):
+            raise AssertionError(
+                "fused AD-PSGD scan staleness counters diverged from the "
+                "host schedule replay (engine.adpsgd_schedule)")
+
+        for t, r in enumerate(seg):
+            for si, hist in enumerate(hists):
+                hist.records.append(RoundRecord(
+                    round=done + t, round_time=0.0, waiting_time=0.0,
+                    accuracy=float(outs["acc"][si, t]),
+                    loss=float(outs["loss"][si, t]),
+                    mean_tau=float(tau), num_links=schedule.num_links,
+                    consensus=float(outs["consensus"][si, t]),
+                    cumulative_time=r.clock,
+                    staleness=r.mean_staleness))
+        done += len(seg)
     return hists if batched else hists[0]

@@ -14,11 +14,14 @@ import numpy as np
 # ---------------------------------------------------------------------------
 
 def full_topology(n: int) -> np.ndarray:
+    """Complete graph K_n — FedHP's default base topology A^0 (the
+    controller prunes links from it, Alg. 3)."""
     a = np.ones((n, n), dtype=np.int8) - np.eye(n, dtype=np.int8)
     return a
 
 
 def ring_topology(n: int) -> np.ndarray:
+    """Ring — the D-PSGD [12] / AD-PSGD [23] baseline topology."""
     a = np.zeros((n, n), dtype=np.int8)
     if n == 1:
         return a
@@ -60,6 +63,7 @@ def make_base_topology(n: int, spec: str, seed: int = 0) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 def laplacian(adj: np.ndarray) -> np.ndarray:
+    """Graph Laplacian L = D - A (Eq. 1; spectral connectivity input)."""
     adj = np.asarray(adj, dtype=np.float64)
     return np.diag(adj.sum(axis=1)) - adj
 
@@ -243,6 +247,8 @@ def matchings_to_perms(matchings: list[list[tuple[int, int]]],
 
 
 def validate_topology(adj: np.ndarray) -> None:
+    """Reject adjacency matrices that break the Sec. II-A graph model:
+    must be square, symmetric (undirected), 0/1 and self-loop-free."""
     adj = np.asarray(adj)
     if adj.ndim != 2 or adj.shape[0] != adj.shape[1]:
         raise ValueError(f"adjacency must be square, got {adj.shape}")

@@ -1,0 +1,246 @@
+"""AD-PSGD event-schedule and staleness semantics (engine.adpsgd_schedule
++ the fused event scan).
+
+The schedule is a pure host function, so its staleness accounting can be
+tested against the invariants AD-PSGD's convergence analysis needs
+(bounded staleness), and hand-built schedules can drive the engines into
+degenerate regimes — simultaneous events collapse to synchronous
+pairwise gossip — without touching the cluster model. The compressed
+pairwise exchange mirrors tests/test_compression.py's error-feedback
+property tests for the 2-worker mix.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedHPConfig
+from repro.core import compression
+from repro.core.engine import (AdpsgdEvent, AdpsgdRound, AdpsgdSchedule,
+                               adpsgd_schedule, run_adpsgd)
+from repro.core.experiment import setup_experiment
+from repro.core.fused import run_adpsgd_fused
+from repro.simulation.cluster import ChurnEvent, ChurnSchedule
+
+CFG = FedHPConfig(num_workers=8, rounds=12, tau_init=4, tau_max=20,
+                  lr=0.1, batch_size=16, seed=5)
+SCHED = ChurnSchedule((
+    ChurnEvent(2, "leave", 1),
+    ChurnEvent(3, "crash", 6),
+    ChurnEvent(6, "join", 1),
+))
+
+
+def _experiment(cfg, churn=None, rounds=None):
+    return setup_experiment(cfg, non_iid_p=0.3, churn=churn, rounds=rounds)
+
+
+# ---------------------------------------------------------------------------
+# schedule invariants
+# ---------------------------------------------------------------------------
+
+def test_staleness_bounded_by_inflight_events():
+    """A worker's staleness counts pairwise averages absorbed by its live
+    row since its snapshot; each intervening event stales at most one
+    row, so staleness can never exceed the events processed since the
+    worker's previous event (the schedule's max in-flight bound)."""
+    for churn in (None, SCHED):
+        _, _, _, _, cluster = _experiment(CFG, churn=churn)
+        sched = adpsgd_schedule(cluster, CFG, rounds=12)
+        events = sched.events
+        assert len(events) == 12 * CFG.num_workers
+        for e in events:
+            assert 0 <= e.staleness <= e.inflight_bound, e
+        # heterogeneous compute speeds: staleness actually occurs
+        assert max(e.staleness for e in events) > 0
+
+
+def test_schedule_event_times_monotone_and_round_aligned():
+    _, _, _, _, cluster = _experiment(CFG)
+    sched = adpsgd_schedule(cluster, CFG, rounds=8)
+    times = [e.time for e in sched.events]
+    assert all(a <= b for a, b in zip(times, times[1:]))
+    for r in sched.rounds:
+        assert r.clock == r.events[-1].time
+        assert len(r.events) == CFG.num_workers
+
+
+def test_schedule_compressed_charges_wire_ratio():
+    """Compressed events finish earlier: each event's comm term is
+    beta / wire_ratio (Eq. 10 on the event clock)."""
+    _, _, _, _, c1 = _experiment(CFG)
+    _, _, _, _, c2 = _experiment(replace(CFG, compress="int8"))
+    s1 = adpsgd_schedule(c1, CFG, rounds=8)
+    s2 = adpsgd_schedule(c2, replace(CFG, compress="int8"), rounds=8)
+    # every event's comm charge shrinks, so the same amount of work
+    # finishes earlier on the event clock (the heap ORDER may differ —
+    # faster links change which worker finishes next)
+    assert s2.rounds[-1].clock < s1.rounds[-1].clock
+
+
+def test_reference_records_schedule_staleness():
+    """run_adpsgd surfaces the schedule's per-round mean staleness."""
+    data, tx, ty, shards, cluster = _experiment(CFG, rounds=6)
+    h = run_adpsgd(data, tx, ty, shards, cluster, CFG, rounds=6)
+    _, _, _, _, cluster2 = _experiment(CFG, rounds=6)
+    sched = adpsgd_schedule(cluster2, CFG, rounds=6)
+    np.testing.assert_array_equal(
+        h.as_arrays()["staleness"],
+        [r.mean_staleness for r in sched.rounds])
+
+
+# ---------------------------------------------------------------------------
+# degenerate regime: simultaneous events == synchronous pairwise gossip
+# ---------------------------------------------------------------------------
+
+def _handmade_schedule(n, pairs_per_round, rounds, lr):
+    """All events at time 0 (zero compute + link time): one round is a
+    sequence of pairwise averages — synchronous pairwise gossip. The
+    staleness annotations replay the engines' counter semantics (the
+    fused scan cross-checks its carried counters against them)."""
+    alive = np.ones(n, bool)
+    stale = np.zeros(n, np.int64)
+    events_done = 0
+    last_ev = np.full(n, -1)
+    rnds = []
+    for _ in range(rounds):
+        evs = []
+        for (i, j) in pairs_per_round:
+            bound = (int(events_done - last_ev[i] - 1)
+                     if last_ev[i] >= 0 else events_done)
+            evs.append(AdpsgdEvent(i, j, 0.0, int(stale[i]), bound))
+            stale[i] = 0
+            if j != i:
+                stale[j] += 1
+            last_ev[i] = events_done
+            events_done += 1
+        rnds.append(AdpsgdRound(tuple(evs), lr, alive.copy(), 0.0,
+                                np.zeros(n, bool), np.zeros(n)))
+    return AdpsgdSchedule(tuple(rnds), CFG.tau_init, n, n)
+
+
+def test_zero_time_schedule_degenerates_to_synchronous_pairwise():
+    """With lr=0 (pure mixing, no local drift) a zero-compute-time
+    schedule whose rounds pair (0,1)(2,3)... then (1,2)(3,4)... must
+    reproduce, through the fused scan's Pallas kernel path, exactly the
+    synchronous sequential pairwise averaging of the initial rows."""
+    cfg = replace(CFG, lr=0.0, rounds=4)
+    data, tx, ty, shards, cluster = _experiment(cfg, rounds=4)
+    n = cfg.num_workers
+    pairs = [(i, i + 1) for i in range(0, n - 1, 2)] + \
+            [(i, i + 1) for i in range(1, n - 1, 2)]
+    sched = _handmade_schedule(n, pairs, rounds=4, lr=0.0)
+
+    h_ref = run_adpsgd(data, tx, ty, shards, cluster, cfg, schedule=sched)
+    _, _, _, _, cluster2 = _experiment(cfg, rounds=4)
+    h_fus = run_adpsgd_fused(data, tx, ty, shards, cluster2, cfg,
+                             schedule=sched)
+    a, b = h_ref.as_arrays(), h_fus.as_arrays()
+    np.testing.assert_allclose(a["consensus"], b["consensus"],
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(a["cumulative_time"],
+                                  np.zeros(4))        # zero-time events
+    # staleness follows the event ORDER even at a single timestamp
+    # (simultaneous events are applied sequentially), and both engines
+    # agree on it exactly
+    np.testing.assert_array_equal(a["staleness"], b["staleness"])
+    # with lr=0 all rows start identical -> every pairwise average is a
+    # no-op and consensus stays at the float mean-subtraction noise
+    # floor (~1e-7: summing identical f32 rows reassociates)
+    assert (a["consensus"] < 1e-5).all()
+    assert (np.diff(a["consensus"]) == 0).all()
+
+
+def test_zero_time_pairwise_contracts_like_pair_matrices():
+    """One real training round to spread the rows, then zero-time lr=0
+    rounds: the remaining schedule is synchronous pairwise gossip — the
+    fused scan must multiply the [W, P] matrix by the same sequence of
+    2-row averaging matrices the reference loop applies (consensus
+    trajectories agree) and pure averaging contracts the spread
+    monotonically."""
+    cfg = replace(CFG, rounds=4, seed=9)
+    data, tx, ty, shards, cluster = _experiment(cfg, rounds=4)
+    n = cfg.num_workers
+    rnds = list(_handmade_schedule(
+        n, [(i, (i + 1) % n) for i in range(n)], rounds=4, lr=0.0).rounds)
+    # round 0 trains (lr > 0) so the rows become distinct
+    rnds[0] = AdpsgdRound(rnds[0].events, 0.1, rnds[0].alive, 0.0,
+                          rnds[0].keep, rnds[0].donor_w)
+    sched = AdpsgdSchedule(tuple(rnds), cfg.tau_init, n, n)
+    h_ref = run_adpsgd(data, tx, ty, shards, cluster, cfg, schedule=sched)
+    h_fus = run_adpsgd_fused(data, tx, ty, shards,
+                             _experiment(cfg, rounds=4)[4], cfg,
+                             schedule=sched)
+    a, b = h_ref.as_arrays(), h_fus.as_arrays()
+    np.testing.assert_allclose(a["consensus"], b["consensus"],
+                               rtol=1e-5, atol=1e-5)
+    assert a["consensus"][0] > 0                      # rows spread out
+    # rounds 1.. are pure pairwise averaging: contraction only
+    assert (np.diff(a["consensus"]) <= 1e-7).all()
+    assert a["consensus"][-1] < a["consensus"][0]
+
+
+# ---------------------------------------------------------------------------
+# compressed pairwise exchange: error-feedback property (ChocoSGD)
+# ---------------------------------------------------------------------------
+
+def _pairwise_time_average(x0, error_feedback, steps=1500, burn=500):
+    """Random-peer pairwise exchanges; time-averaged iterates."""
+    rng = np.random.default_rng(0)
+    w = x0.shape[0]
+    x = x0
+    err = jnp.zeros_like(x0)
+    acc = np.zeros(x0.shape)
+    step = jax.jit(partial(compression.compressed_pair_ref,
+                           error_feedback=error_feedback))
+    for t in range(steps):
+        i = int(rng.integers(0, w))
+        j = int((i + rng.integers(1, w)) % w)        # any other peer
+        xi, xj, ei, ej = step(x[i], x[j], err[i], err[j])
+        x = x.at[i].set(xi).at[j].set(xj)
+        err = err.at[i].set(ei).at[j].set(ej)
+        if t >= burn:
+            acc += np.asarray(x)
+    return acc / (steps - burn)
+
+
+@pytest.mark.slow
+def test_compressed_pairwise_ef_converges_naive_biases():
+    """Pairwise mirror of test_compression's property test: with error
+    feedback the time-averaged iterates converge to the network mean;
+    naive int8 pairwise averaging stalls at a biased grid point."""
+    w, p = 6, 256
+    rng = np.random.default_rng(1)
+    x0 = jnp.asarray(rng.normal(size=(w, p)), jnp.float32)
+    target = np.asarray(x0).mean(0)
+    ef = _pairwise_time_average(x0, True)
+    naive = _pairwise_time_average(x0, False)
+    # per-worker deviation from the network mean (the fleet mean itself
+    # is preserved exactly by BOTH modes — each exchange keeps x_i + x_j)
+    dev_ef = np.abs(ef - target[None]).max()
+    dev_naive = np.abs(naive - target[None]).max()
+    assert dev_ef < 5e-3, dev_ef
+    assert dev_naive > 3 * dev_ef, (dev_naive, dev_ef)
+
+
+def test_compressed_pair_preserves_sum_exactly():
+    """One compressed exchange preserves x_i + x_j bit-for-bit minus
+    float addition error (the invariant behind mean preservation)."""
+    key = jax.random.PRNGKey(2)
+    xi = jax.random.normal(key, (512,))
+    xj = jax.random.normal(jax.random.fold_in(key, 1), (512,))
+    ei = jax.random.normal(jax.random.fold_in(key, 2), (512,)) * 0.01
+    ej = jax.random.normal(jax.random.fold_in(key, 3), (512,)) * 0.01
+    xi2, xj2, *_ = compression.compressed_pair_ref(xi, xj, ei, ej)
+    np.testing.assert_allclose(np.asarray(xi2 + xj2),
+                               np.asarray(xi + xj), atol=1e-6)
+    # the kernel path produces the identical update
+    ki, kj, *_ = compression.compressed_pair_ref(
+        xi, xj, ei, ej, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(ki), np.asarray(xi2), atol=2e-7)
+    np.testing.assert_allclose(np.asarray(kj), np.asarray(xj2), atol=2e-7)

@@ -1,7 +1,9 @@
-"""Differential harness: the fused scan engine vs the reference engine.
+"""Differential harness: the fused scan engines vs the reference engines.
 
-``run_dfl_fused`` is only allowed on the hot path because these tests
-prove it interchangeable with ``run_dfl``: identical host-side streams
+``run_dfl_fused`` (and, below, the event-driven ``run_adpsgd_fused``) is
+only allowed on the hot path because these tests prove it
+interchangeable with ``run_dfl`` (resp. ``run_adpsgd``): identical
+host-side streams
 (cluster RNG, churn schedule, batch draws, strategy plans) and device
 trajectories (accuracy / consensus / cumulative_time) within float
 tolerance, across strategies, with and without churn, and with the
@@ -175,6 +177,101 @@ def test_compressed_vmapped_seeds_match_independent_runs():
         for k, tol in COMPRESSED_TOL.items():
             np.testing.assert_allclose(a[k], b[k], rtol=tol, atol=tol,
                                        err_msg=f"{s}:{k}")
+
+
+# ---------------------------------------------------------------------------
+# AD-PSGD: fused event-driven scan vs the reference event loop
+# ---------------------------------------------------------------------------
+
+# AD-PSGD host fields include the per-round mean staleness (computed from
+# the shared event schedule) — exact like the other host-replayed fields
+ADPSGD_EXACT = EXACT + ("staleness",)
+
+
+def _assert_adpsgd_equivalent(h_ref, h_fus, device_tol=DEVICE_TOL):
+    assert len(h_ref.records) == len(h_fus.records)
+    a, b = h_ref.as_arrays(), h_fus.as_arrays()
+    for k in ADPSGD_EXACT:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    for k, tol in device_tol.items():
+        np.testing.assert_allclose(a[k], b[k], rtol=tol, atol=tol,
+                                   err_msg=k)
+
+
+def test_adpsgd_fused_matches_reference_smoke():
+    """Fast gate: 6 rounds, no churn, uncompressed — runs in the default
+    CI lane; the seed x churn x compression matrix is in the slow set."""
+    _assert_adpsgd_equivalent(*_pair("adpsgd", None, rounds=6))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("churn", [None, SCHED], ids=["nochurn", "churn"])
+@pytest.mark.parametrize("seed", [3, 11, 29])
+def test_adpsgd_fused_matches_reference(seed, churn):
+    """The fused event scan replays the reference loop's schedule, batch
+    stream and pairwise math across seeds ± churn."""
+    cfg = replace(CFG, seed=seed)
+    _assert_adpsgd_equivalent(*_pair("adpsgd", churn, cfg=cfg))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("churn", [None, SCHED], ids=["nochurn", "churn"])
+@pytest.mark.parametrize("seed", [3, 11])
+def test_adpsgd_compressed_fused_matches_reference(seed, churn):
+    """Compressed pairwise exchange: Pallas quantize kernels + residual
+    scan state vs the jnp oracle path of the reference loop."""
+    cfg = replace(CCFG, seed=seed)
+    _assert_adpsgd_equivalent(*_pair("adpsgd", churn, cfg=cfg),
+                              device_tol=COMPRESSED_TOL)
+
+
+@pytest.mark.slow
+def test_adpsgd_compressed_no_error_feedback_matches_too():
+    cfg = replace(CCFG, error_feedback=False)
+    _assert_adpsgd_equivalent(*_pair("adpsgd", SCHED, cfg=cfg),
+                              device_tol=COMPRESSED_TOL)
+
+
+@pytest.mark.slow
+def test_adpsgd_time_budget_cuts_identically():
+    h_ref, h_fus = _pair("adpsgd", None, time_budget=3.0)
+    assert h_ref.records[-1].cumulative_time >= 3.0
+    _assert_adpsgd_equivalent(h_ref, h_fus)
+
+
+def test_adpsgd_compressed_charges_less_event_time():
+    """Compressed events pay beta / wire_ratio (Eq. 10), so the event
+    clock runs strictly faster; the trajectory itself changes too."""
+    h_u = run_algorithm("adpsgd", CFG, non_iid_p=0.4, rounds=6)
+    h_c = run_algorithm("adpsgd", CCFG, non_iid_p=0.4, rounds=6)
+    a, b = h_u.as_arrays(), h_c.as_arrays()
+    assert b["cumulative_time"][-1] < a["cumulative_time"][-1]
+    assert not np.array_equal(a["consensus"], b["consensus"])
+
+
+@pytest.mark.slow
+def test_adpsgd_vmapped_seeds_match_independent_runs():
+    """Batched lanes share the cfg.seed event schedule; each lane's model
+    init + batch stream must match its own single-lane run, and the
+    cfg.seed lane reproduces the unbatched run exactly."""
+    import jax.numpy as jnp
+    seeds = (3, 11)                     # 3 == CFG.seed
+    batched = run_algorithm("adpsgd", CFG, non_iid_p=0.4, rounds=6,
+                            fused=True, seeds=jnp.asarray(seeds))
+    assert len(batched) == len(seeds)
+    for s, hv in zip(seeds, batched):
+        (hi,) = run_algorithm("adpsgd", CFG, non_iid_p=0.4, rounds=6,
+                              fused=True, seeds=jnp.asarray([s]))
+        a, b = hv.as_arrays(), hi.as_arrays()
+        for k in ADPSGD_EXACT:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=f"{s}:{k}")
+        for k in ("accuracy", "loss", "consensus"):
+            np.testing.assert_array_equal(a[k], b[k], err_msg=f"{s}:{k}")
+    unbatched = run_algorithm("adpsgd", CFG, non_iid_p=0.4, rounds=6,
+                              fused=True)
+    a, b = batched[0].as_arrays(), unbatched.as_arrays()
+    for k in ADPSGD_EXACT + ("accuracy", "loss", "consensus"):
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
 
 
 # ---------------------------------------------------------------------------

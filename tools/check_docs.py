@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Docs CI lane (stdlib only — runs before any pip install).
+
+Two gates:
+
+1. Intra-repo links: every relative markdown link in README.md and
+   docs/*.md must resolve to a file (anchors are stripped; external
+   http(s)/mailto links are skipped).
+2. Docstring audit: every public module / class / function / public
+   method in the audited ``src/repro/core`` modules must carry a
+   docstring (the audit set is the public engine surface documented in
+   docs/ARCHITECTURE.md).
+
+Run:  python tools/check_docs.py        (exit 1 on any failure)
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+
+AUDITED_MODULES = [
+    "src/repro/core/engine.py",
+    "src/repro/core/fused.py",
+    "src/repro/core/compression.py",
+    "src/repro/core/topology.py",
+    "src/repro/core/controller.py",
+]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_links() -> list[str]:
+    problems = []
+    for md in DOC_FILES:
+        if not md.exists():
+            problems.append(f"{md.relative_to(REPO)}: file missing")
+            continue
+        for lineno, line in enumerate(md.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:",
+                                      "#")):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:
+                    continue
+                resolved = (md.parent / path).resolve()
+                if not resolved.exists():
+                    problems.append(
+                        f"{md.relative_to(REPO)}:{lineno}: broken link "
+                        f"-> {target}")
+    return problems
+
+
+def _missing_docstrings(tree: ast.Module, rel: str) -> list[str]:
+    problems = []
+    if not ast.get_docstring(tree):
+        problems.append(f"{rel}: missing module docstring")
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node.name.startswith("_"):
+                continue
+            if not ast.get_docstring(node):
+                problems.append(f"{rel}:{node.lineno}: public function "
+                                f"{node.name!r} lacks a docstring")
+        elif isinstance(node, ast.ClassDef):
+            if node.name.startswith("_"):
+                continue
+            if not ast.get_docstring(node):
+                problems.append(f"{rel}:{node.lineno}: public class "
+                                f"{node.name!r} lacks a docstring")
+            for item in node.body:
+                if isinstance(item, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)) and \
+                        not item.name.startswith("_") and \
+                        not ast.get_docstring(item):
+                    problems.append(
+                        f"{rel}:{item.lineno}: public method "
+                        f"{node.name}.{item.name!r} lacks a docstring")
+    return problems
+
+
+def check_docstrings() -> list[str]:
+    problems = []
+    for rel in AUDITED_MODULES:
+        path = REPO / rel
+        if not path.exists():
+            problems.append(f"{rel}: audited module missing")
+            continue
+        problems.extend(
+            _missing_docstrings(ast.parse(path.read_text()), rel))
+    return problems
+
+
+def main() -> int:
+    problems = check_links() + check_docstrings()
+    for p in problems:
+        print(f"FAIL: {p}")
+    if problems:
+        print(f"\n{len(problems)} docs problem(s)")
+        return 1
+    n_links = sum(
+        len(LINK_RE.findall(md.read_text())) for md in DOC_FILES
+        if md.exists())
+    print(f"docs OK: {len(DOC_FILES)} markdown files ({n_links} links), "
+          f"{len(AUDITED_MODULES)} audited modules")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
