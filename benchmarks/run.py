@@ -10,6 +10,9 @@
   fused    scan-based engine vs reference engine rounds/sec (D-PSGD shape)
   compressed  int8+error-feedback gossip vs uncompressed: wire bytes,
            accuracy parity, simulated-clock speedup (CI-gated via --smoke)
+  sparse   top-k / rand-k sparsified gossip vs uncompressed: wire bytes,
+           accuracy parity (CI-gated via --smoke: top-k >= 4x wire at
+           <= 1% accuracy drift)
   adpsgd   fused event-driven AD-PSGD vs the reference event loop:
            events/sec + accuracy parity (CI-gated via --smoke: >= 5x)
 
@@ -273,6 +276,51 @@ def bench_compressed(rows, full):
             FAILURES.append(f"compressed accuracy drift {drift:.4f} > 1%")
 
 
+def bench_sparse(rows, full):
+    """Sparsified gossip (top-k with x̂ tracking, shared-mask rand-k —
+    core/compression.py) vs uncompressed on the fused engine: wire bits
+    per transfer and final-accuracy parity at a 10% keep fraction. The
+    planner/engines charge Eq. 10 comm / wire_ratio (5x top-k, ~10x
+    rand-k — rand-k ships no indices). In --smoke mode the run fails
+    (exit 1) if top-k saves < 4x wire bits or drifts > 1% final accuracy
+    from the uncompressed run."""
+    from repro.core.compression import wire_bits, wire_ratio
+    from repro.core.experiment import MODEL_BITS_DEFAULT, run_algorithm
+
+    cfg = base_cfg(full)
+    rounds = 30 if SMOKE else (60 if not full else 150)
+    if SMOKE:
+        cfg = replace(cfg, num_workers=8)
+    params = int(MODEL_BITS_DEFAULT // 32)
+    modes = ("none", "topk:0.1", "randk:0.1")
+    for mode in modes[1:]:
+        emit(rows, "sparse", f"wire_bits[{mode}]", wire_bits(params, mode))
+        emit(rows, "sparse", f"wire_reduction[{mode}]",
+             round(wire_ratio(params, mode), 2))
+
+    hs = {}
+    for mode in modes:
+        c = replace(cfg, compress=mode)
+        hs[mode] = run_algorithm("dpsgd", c, non_iid_p=0.4, rounds=rounds,
+                                 spread=SPREAD, fused=True)
+        emit(rows, "sparse", f"final_acc[{mode}]",
+             round(hs[mode].final_accuracy, 4))
+        emit(rows, "sparse", f"sim_time[{mode}]",
+             round(hs[mode].records[-1].cumulative_time, 1))
+    for mode in modes[1:]:
+        emit(rows, "sparse", f"acc_drift[{mode}]",
+             round(abs(hs[mode].final_accuracy
+                       - hs["none"].final_accuracy), 4))
+    if SMOKE:
+        ratio = wire_ratio(params, "topk:0.1")
+        drift = abs(hs["topk:0.1"].final_accuracy
+                    - hs["none"].final_accuracy)
+        if ratio < 4.0:
+            FAILURES.append(f"top-k wire reduction {ratio:.2f}x < 4x")
+        if drift > 0.01:
+            FAILURES.append(f"top-k accuracy drift {drift:.4f} > 1%")
+
+
 def bench_adpsgd(rows, full):
     """Fused event-driven AD-PSGD (core/fused.run_adpsgd_fused) vs the
     reference event loop on the smoke shape: identical event schedule
@@ -355,6 +403,7 @@ BENCHES = {
     "collective": bench_collective,
     "fused": bench_fused,
     "compressed": bench_compressed,
+    "sparse": bench_sparse,
     "adpsgd": bench_adpsgd,
 }
 

@@ -175,13 +175,33 @@ class FedHPConfig:
     # Static-plan strategies always fuse the whole horizon.
     replan_every: int = 1
     # compressed gossip (core/compression.py): "none" sends raw f32 params,
-    # "int8" sends per-tile-scaled int8 round trips (ChocoSGD-style) and
-    # charges Eq. 10 comm time divided by the wire ratio (~3.5-4x).
-    compress: str = "none"           # "none" | "int8"
-    # error feedback: carry the per-worker quantization residual into the
+    # "int8" sends per-tile-scaled int8 round trips (ChocoSGD-style,
+    # ~3.5-4x fewer wire bits), "topk:<k>" / "randk:<k>" send k-coordinate
+    # sparsified payloads (k a fraction of P when < 1, an absolute count
+    # otherwise; top-k ships value+index pairs, rand-k values + a shared
+    # mask seed). Eq. 10 charges comm time / the codec's wire ratio.
+    compress: str = "none"    # "none" | "int8" | "topk:<k>" | "randk:<k>"
+    # error feedback: carry the per-worker compression residual into the
     # next round's payload (keeps compressed mixing unbiased); False ==
-    # naive quantized mixing (stalls at the int8 step floor — test only)
+    # naive compressed mixing (stalls at the int8 step floor / freezes
+    # never-shipped top-k coordinates — test only)
     error_feedback: bool = True
+    # compression-aware planner (FedHP): solve tau* / topology (Alg. 3)
+    # against the learned effective link times beta / wire_ratio instead
+    # of the raw beta — the planner then trades the cheaper wire against
+    # the consensus budget like the engines actually pay it (docs/
+    # PLANNER.md). False reproduces the compression-blind PR 3/4 planner.
+    planner_wire_aware: bool = True
+    # replan-cadence sparsity feedback (FedHP + sparse codecs only):
+    # halve the codec's k whenever the tracked consensus distance has
+    # halved since the last tightening (controller.SparsityScheduler),
+    # never below sparse_k_floor * the initial k
+    tighten_k: bool = False
+    sparse_k_floor: float = 0.125
+    # consensus step size for x̂-tracked top-k gossip (ChocoSGD gamma):
+    # innovations mix damped, x' = x + gamma (W x̂ - x̂) — stable well
+    # below ~0.3 for keep fractions >= 0.05 (rand-k / int8 ignore it)
+    sparse_gamma: float = 0.25
     # LD-SGD alternation (baseline)
     ldsgd_i1: int = 4
     ldsgd_i2: int = 1

@@ -13,16 +13,25 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.configs.base import FedHPConfig
-from repro.core import topology as topo
+from repro.core import compression, topology as topo
+from repro.core.compression import Codec
 from repro.core.consensus import ConsensusTracker
-from repro.core.controller import AdaptiveController
+from repro.core.controller import AdaptiveController, SparsityScheduler
 
 
 @dataclass
 class RoundPlan:
+    """One round's coordinator output: topology, per-worker taus, any
+    per-worker overhead, and (adaptive compression only) the wire codec
+    the round must gossip and be billed under — ``None`` means the
+    engine uses ``cfg.compress`` unchanged. The codec may only refine
+    the configured codec's k (same kind); both engines read it through
+    the same plan replay, which keeps their wire charges bit-identical."""
+
     adj: np.ndarray
     taus: np.ndarray
     extra_time: np.ndarray | None = None    # per-worker overhead (e.g. PENS)
+    codec: Codec | None = None              # tightened wire codec (FedHP)
 
 
 class Strategy:
@@ -55,13 +64,19 @@ class Strategy:
         return topo.repair_connectivity(adj, self.alive)
 
     def plan(self, h: int, alive: np.ndarray | None = None) -> RoundPlan:
+        """Fixed plan: the base topology (churn-restricted) at tau_init."""
         self._membership(alive)
         taus = np.full(self.n, self.cfg.tau_init, np.int64)
         taus[~self.alive] = 0
         return RoundPlan(self._restrict(self.base_adj.copy()), taus)
 
     def observe(self, h: int, *, adj, mu, beta, edge_dist, update_norms,
-                smooth_l, sigma, loss, cross_loss=None, alive=None) -> None:
+                smooth_l, sigma, loss, cross_loss=None, alive=None,
+                wire_ratio: float = 1.0) -> None:
+        """Ingest the round's measurements. ``wire_ratio`` is the
+        uncompressed/compressed wire-bits ratio the engine actually
+        charged this round (1.0 uncompressed) — the feedback the
+        compression-aware planner learns the effective link times from."""
         if alive is not None:
             self.alive = np.asarray(alive, bool)
 
@@ -76,6 +91,7 @@ class DPSGDStrategy(Strategy):
         self.ring = topo.ring_topology(self.n)
 
     def plan(self, h: int, alive: np.ndarray | None = None) -> RoundPlan:
+        """Fixed ring at tau_init every round (churn-restricted)."""
         self._membership(alive)
         taus = np.full(self.n, self.cfg.tau_init, np.int64)
         taus[~self.alive] = 0
@@ -89,6 +105,7 @@ class LDSGDStrategy(Strategy):
     name = "ldsgd"
 
     def plan(self, h: int, alive: np.ndarray | None = None) -> RoundPlan:
+        """I1 communication-free local rounds, then I2 ring-gossip rounds."""
         self._membership(alive)
         i1, i2 = self.cfg.ldsgd_i1, self.cfg.ldsgd_i2
         period = max(i1 + i2, 1)
@@ -117,6 +134,8 @@ class PENSStrategy(Strategy):
         self._beta = np.full((self.n, self.n), 1.0)
 
     def plan(self, h: int, alive: np.ndarray | None = None) -> RoundPlan:
+        """Sample pens_sample peers, keep the pens_top_m lowest-loss ones
+        (round 0: random), charging the selection overhead as extra_time."""
         live = self._membership(alive)
         taus = np.full(self.n, self.cfg.tau_init, np.int64)
         taus[~live] = 0
@@ -149,10 +168,14 @@ class PENSStrategy(Strategy):
         return RoundPlan(adj, taus, extra_time=extra)
 
     def observe(self, h, *, adj, mu, beta, edge_dist, update_norms,
-                smooth_l, sigma, loss, cross_loss=None, alive=None):
+                smooth_l, sigma, loss, cross_loss=None, alive=None,
+                wire_ratio: float = 1.0):
+        """PENS feedback: the cross-loss matrix for neighbor selection
+        plus the mu/beta estimates its selection overhead is priced by."""
         super().observe(h, adj=adj, mu=mu, beta=beta, edge_dist=edge_dist,
                         update_norms=update_norms, smooth_l=smooth_l,
-                        sigma=sigma, loss=loss, alive=alive)
+                        sigma=sigma, loss=loss, alive=alive,
+                        wire_ratio=wire_ratio)
         if cross_loss is not None:
             self._cross = cross_loss
         self._mu, self._beta = mu, beta
@@ -176,29 +199,61 @@ class FedHPStrategy(Strategy):
         self._L = 1.0
         self._sigma = 1.0
         self.last_decision = None
+        # compression awareness: the codec the run gossips under, the
+        # replan-cadence k-tightening scheduler (sparse codecs only), and
+        # the wire ratio learned from the engine's observe() feedback —
+        # the Eq. 10 comm divisor the next decide() solves against
+        codec = compression.parse_mode(cfg.compress)
+        self.codec = codec if codec.kind != "none" else None
+        self.k_scheduler = (SparsityScheduler(codec, cfg.sparse_k_floor)
+                            if codec.is_sparse and cfg.tighten_k else None)
+        self._wire_ratio = 1.0
+
+    def _plan_codec(self, h: int) -> Codec | None:
+        """The codec round h gossips and is billed under: the configured
+        one, tightened at ``replan_every`` cadence when the feedback path
+        is on (both engines replay plan() at those rounds, so the codec
+        sequence — and with it the wire charge — stays bit-identical)."""
+        if self.k_scheduler is None:
+            return self.codec
+        if h % max(self.cfg.replan_every, 1) == 0:
+            return self.k_scheduler.step(self.tracker.mean_distance())
+        return self.k_scheduler.codec
 
     def plan(self, h: int, alive: np.ndarray | None = None) -> RoundPlan:
+        """One Alg. 3 decision (joint tau + topology) against the learned
+        wire ratio, carrying the (possibly tightened) codec in the plan."""
         live = self._membership(alive)
         # membership can change between observe() and plan() (churn is
         # applied at round start): reconcile the tracker before deciding
         self.tracker.sync_membership(live)
+        codec = self._plan_codec(h)
         if self._mu is None:                    # round 0: no measurements yet
             taus = np.full(self.n, self.cfg.tau_init, np.int64)
             taus[~live] = 0
-            return RoundPlan(self._restrict(self.base_adj.copy()), taus)
+            return RoundPlan(self._restrict(self.base_adj.copy()), taus,
+                             codec=codec)
+        wire = self._wire_ratio if self.cfg.planner_wire_aware else 1.0
         d = self.controller.decide(
             self._mu, self._beta, self.tracker, f1=self._f1,
             smooth_l=self._L, sigma=self._sigma, eta=self.cfg.lr,
-            rounds=self.cfg.rounds, alive=live)
+            rounds=self.cfg.rounds, alive=live, wire_ratio=wire)
         self.last_decision = d
-        return RoundPlan(d.adj, d.taus)
+        return RoundPlan(d.adj, d.taus, codec=codec)
 
     def observe(self, h, *, adj, mu, beta, edge_dist, update_norms,
-                smooth_l, sigma, loss, cross_loss=None, alive=None):
+                smooth_l, sigma, loss, cross_loss=None, alive=None,
+                wire_ratio: float = 1.0):
+        """Alg. 1 feedback plus the engine's actual wire ratio — the
+        planner learns the comm divisor it solves the next round with
+        rather than assuming one (one-round lag, identical in both
+        engines)."""
         super().observe(h, adj=adj, mu=mu, beta=beta, edge_dist=edge_dist,
                         update_norms=update_norms, smooth_l=smooth_l,
-                        sigma=sigma, loss=loss, alive=alive)
+                        sigma=sigma, loss=loss, alive=alive,
+                        wire_ratio=wire_ratio)
         self._mu, self._beta = np.asarray(mu), np.asarray(beta)
+        self._wire_ratio = float(wire_ratio)
         if self._f1 is None:
             self._f1 = float(loss)
         self._L = max(float(smooth_l), 1e-6)
@@ -215,6 +270,7 @@ STRATEGIES = {
 
 
 def make_strategy(cfg: FedHPConfig, base_adj: np.ndarray) -> Strategy:
+    """Instantiate the strategy ``cfg.algorithm`` names over ``base_adj``."""
     if cfg.algorithm == "adpsgd":
         raise ValueError("AD-PSGD is asynchronous; use engine.run_adpsgd")
     return STRATEGIES[cfg.algorithm](cfg, base_adj)

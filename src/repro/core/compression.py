@@ -1,40 +1,67 @@
-"""Compressed gossip: int8 exchange with error feedback (ChocoSGD /
-DeepSqueeze-style, beyond-paper) — the single source of the compensated
-update every call site implements.
+"""Compressed gossip codecs: int8 quantization and top-k / rand-k
+sparsification with error feedback (ChocoSGD / DeepSqueeze-style,
+beyond-paper) — the single source of the compensated update every call
+site implements.
 
-Wire format (per worker, per round with communication):
-  - the flattened parameter vector [P] is laid out as a [rows, cols]
-    matrix (``flat_tile_shape``: cols = min(1024, P), rows = ceil(P/cols),
-    zero-padded to rows*cols) and quantized per (8, 1024) tile — int8
-    payload of rows*cols bytes plus one f32 scale per tile (the scale
-    side-channel is <0.05% of the payload at real model sizes);
-  - the compensated update (identical in ``engine.run_dfl``,
-    ``fused.run_dfl_fused`` and ``runtime/collectives.
-    gossip_compressed_fn``):
+``cfg.compress`` selects the codec (``parse_mode`` -> ``Codec``):
 
-        z_i  = x_i + e_i          (e_i: per-worker residual, 0 if EF off)
-        ŷ_i  = dequant(quant(z_i))   (what goes on the wire)
-        e_i' = z_i - ŷ_i          (error feedback; e_i unchanged if off)
-        x_i' = x_i + sum_j W_ij (ŷ_j - ŷ_i)
+  - ``"int8"`` — the flattened parameter vector [P] is laid out as a
+    [rows, cols] matrix (``flat_tile_shape``: cols = min(1024, P),
+    rows = ceil(P/cols), zero-padded to rows*cols) and quantized per
+    (8, 1024) tile: int8 payload of rows*cols bytes plus one f32 scale
+    per tile (the scale side-channel is <0.05% of the payload at real
+    model sizes).
+  - ``"topk:<k>"`` — each worker keeps the k largest-magnitude
+    coordinates of its payload and ships (value, index) pairs; the rest
+    are zero on the wire. k is a fraction of P when < 1, an absolute
+    count otherwise.
+  - ``"randk:<k>"`` — k coordinates drawn from a seeded stream shared by
+    sender and receiver (``sparsify_base_key``), so only the k values
+    plus the mask seed go on the wire — ~2x fewer bits than top-k at
+    equal k, at the price of ignoring coordinate magnitudes.
 
-    For a row-stochastic W the mixing term is (W @ ŷ)_i - ŷ_i, so a
-    round-trip through an identity mix is an exact no-op, and for a
-    doubly stochastic W the fleet average of x is preserved exactly —
-    error feedback then removes the per-worker quantization bias over
-    rounds (naive quantized mixing stalls at the int8 step floor; see
-    tests/test_compression.py).
+All codecs share one state shape — a per-worker [W, P] buffer next to
+the params — but its meaning is per codec (``carries_state`` /
+``state_init``):
 
-Eq. 10 accounting: a compressed link transfers ``wire_bits(P, "int8")``
-instead of 32 P bits, so comm time scales down by ``wire_ratio(P)``
-(~3.5-4x) — both engines charge beta / wire_ratio on compressed runs.
+  - int8: the error-feedback residual,
+        z = x + e,  ŷ = C(z),  e' = z - ŷ,
+        x' = x + sum_j W_ij (ŷ_j - ŷ_i)
+    (identical in ``engine.run_dfl``, ``fused.run_dfl_fused`` and
+    ``runtime/collectives.gossip_compressed_fn``);
+  - top-k (EF on): the tracked public copy x̂ (ChocoSGD form — raw
+    parameters with a plain residual are unstable under gossip),
+        q = topk(x - x̂),  x̂' = x̂ + q,
+        x' = x + gamma (W @ x̂' - x̂')   (gamma = cfg.sparse_gamma);
+  - rand-k: no state — the shared mask ships the drawn coordinates
+    exactly and the rest await a later draw (intermittent exact gossip).
 
-The Pallas kernels (``kernels/quantize_block.py``) and the jnp oracles
-(``kernels/ref.py``) share this tiling; the fused engine quantizes through
-the kernels, the reference engine through the oracles, and the
-differential harness (tests/test_fused_equivalence.py) proves the two
-round trips interchangeable.
+For a row-stochastic W every form is an exact no-op through an identity
+mix, and for a doubly stochastic W the fleet average of x is preserved
+exactly; the stateful codecs then remove the per-worker compression
+bias over rounds, while naive compressed mixing (EF off) stalls — at
+the int8 step floor, or with the never-shipped small coordinates frozen
+for naive top-k (tests/test_compression.py).
+
+Eq. 10 accounting: a compressed link transfers ``codec.wire_bits(P)``
+instead of 32 P bits, so comm time scales down by ``codec.wire_ratio(P)``
+(~3.5-4x int8, 1/(2f) top-k, ~1/f rand-k at keep-fraction f) — both
+engines charge beta / wire_ratio on compressed runs, and the adaptive
+planner solves tau*/topology against the same ratio
+(``controller.AdaptiveController.decide(wire_ratio=...)``; see
+docs/PLANNER.md).
+
+The Pallas kernels (``kernels/quantize_block.py``,
+``kernels/sparsify_block.py``) and the jnp oracles (``kernels/ref.py``)
+share this tiling; the fused engines encode through the kernels, the
+reference engines through the oracles, and the differential harness
+(tests/test_fused_equivalence.py) proves the round trips
+interchangeable — bit-identical payloads for the pure-select sparse
+codecs, 1-ulp for the int8 dequantize multiply.
 """
 from __future__ import annotations
+
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -44,19 +71,107 @@ from repro.kernels.gossip_mix import pad_to_blocks
 from repro.kernels.quantize_block import (BLOCK_COLS, BLOCK_ROWS,
                                           dequantize_block_2d,
                                           quantize_block_2d)
+from repro.kernels.sparsify_block import sparsify_block_2d
 
-COMPRESS_MODES = ("none", "int8")
+COMPRESS_MODES = ("none", "int8", "topk:<k>", "randk:<k>")
+SPARSE_KINDS = ("topk", "randk")
 
 FP32_BITS = 32
 INT8_BITS = 8
 SCALE_BITS = 32
+INDEX_BITS = 32     # top-k ships one explicit coordinate index per value
+SEED_BITS = 32      # rand-k ships only the shared mask seed
+
+# rand-k mask stream constant: folds cfg.seed into a stream independent
+# of the batch-sampling / model-init / AD-PSGD partner streams
+_SPARSE_STREAM = 0x5A
+
+
+@dataclass(frozen=True)
+class Codec:
+    """One parsed ``cfg.compress`` wire codec.
+
+    ``kind`` is one of none | int8 | topk | randk; ``k`` is the sparse
+    keep spec — a fraction of P when in (0, 1), an absolute coordinate
+    count when >= 1, and 0 for the non-sparse kinds. A ``Codec`` is the
+    currency of the compression-aware planner: ``RoundPlan.codec``
+    carries the (possibly tightened) codec from the strategy into both
+    engines, which resolve k against the actual parameter count and
+    charge Eq. 10 comm time / ``wire_ratio``.
+    """
+
+    kind: str
+    k: float = 0.0
+
+    @property
+    def is_sparse(self) -> bool:
+        """True for the top-k / rand-k sparsification kinds."""
+        return self.kind in SPARSE_KINDS
+
+    @property
+    def mode(self) -> str:
+        """The ``cfg.compress`` string this codec round-trips to."""
+        return f"{self.kind}:{self.k:g}" if self.is_sparse else self.kind
+
+    def with_k(self, k: float) -> "Codec":
+        """Same kind, new keep spec (the planner's k-tightening step)."""
+        return Codec(self.kind, float(k))
+
+    def resolve_k(self, num_params: int) -> int:
+        """The absolute per-row coordinate count for a P-sized payload."""
+        if not self.is_sparse:
+            return 0
+        k = self.k * num_params if self.k < 1.0 else self.k
+        return int(min(max(round(k), 1), num_params))
+
+    def wire_bits(self, num_params: int) -> int:
+        """Bits on the wire for one model transfer under this codec."""
+        if self.kind == "none":
+            return FP32_BITS * num_params
+        if self.kind == "int8":
+            rows, cols = flat_tile_shape(num_params)
+            br, bc, rp, cp = pad_to_blocks(rows, cols, BLOCK_ROWS,
+                                           BLOCK_COLS)
+            n_tiles = (rp // br) * (cp // bc)
+            return INT8_BITS * rows * cols + SCALE_BITS * n_tiles
+        k = self.resolve_k(num_params)
+        if self.kind == "topk":
+            return k * (FP32_BITS + INDEX_BITS)
+        return k * FP32_BITS + SEED_BITS                    # randk
+
+    def wire_ratio(self, num_params: int) -> float:
+        """Uncompressed / compressed wire bits — the Eq. 10 comm divisor
+        and the ratio the adaptive planner solves tau*/topology against."""
+        return FP32_BITS * num_params / self.wire_bits(num_params)
+
+
+def parse_mode(mode) -> Codec:
+    """Parse a ``cfg.compress`` value (or pass a ``Codec`` through).
+
+    Accepts ``"none"``, ``"int8"``, ``"topk:<k>"`` and ``"randk:<k>"``
+    with k a positive fraction (< 1, of P) or absolute count (>= 1).
+    """
+    if isinstance(mode, Codec):
+        return mode
+    if mode in ("none", "int8"):
+        return Codec(str(mode))
+    kind, sep, arg = str(mode).partition(":")
+    if kind in SPARSE_KINDS and sep:
+        try:
+            k = float(arg)
+        except ValueError:
+            k = 0.0
+        if k > 0.0:
+            return Codec(kind, k)
+    raise ValueError(f"compress must be one of {COMPRESS_MODES} "
+                     f"(k a positive fraction of P or an absolute "
+                     f"count), got {mode!r}")
 
 
 def validate_mode(mode: str) -> str:
-    """Check a ``cfg.compress`` value against the supported wire modes."""
-    if mode not in COMPRESS_MODES:
-        raise ValueError(f"compress must be one of {COMPRESS_MODES}, "
-                         f"got {mode!r}")
+    """Check a ``cfg.compress`` value against the supported wire modes
+    (raises ValueError) and return it unchanged."""
+    parse_mode(mode)
     return mode
 
 
@@ -72,20 +187,15 @@ def flat_tile_shape(num_params: int) -> tuple[int, int]:
 
 
 def wire_bits(num_params: int, mode: str = "int8") -> int:
-    """Bits on the wire for one model transfer (padding included — the
-    int8 payload ships the whole [rows, cols] grid)."""
-    validate_mode(mode)
-    if mode == "none":
-        return FP32_BITS * num_params
-    rows, cols = flat_tile_shape(num_params)
-    br, bc, rp, cp = pad_to_blocks(rows, cols, BLOCK_ROWS, BLOCK_COLS)
-    n_tiles = (rp // br) * (cp // bc)
-    return INT8_BITS * rows * cols + SCALE_BITS * n_tiles
+    """Bits on the wire for one model transfer under ``mode`` (for int8,
+    padding included — the payload ships the whole [rows, cols] grid)."""
+    return parse_mode(mode).wire_bits(num_params)
 
 
-def wire_ratio(num_params: int) -> float:
-    """Uncompressed / int8 wire bits — the comm-time divisor in Eq. 10."""
-    return wire_bits(num_params, "none") / wire_bits(num_params, "int8")
+def wire_ratio(num_params: int, mode: str = "int8") -> float:
+    """Uncompressed / compressed wire bits — the comm-time divisor in
+    Eq. 10 (1.0 for ``mode="none"``)."""
+    return parse_mode(mode).wire_ratio(num_params)
 
 
 # ---------------------------------------------------------------------------
@@ -149,33 +259,183 @@ def qdq_rows(z, *, use_kernel: bool = False, interpret: bool = False):
 
 
 # ---------------------------------------------------------------------------
+# top-k / rand-k sparsification on the shared layout
+# ---------------------------------------------------------------------------
+
+def sparsify_base_key(seed: int):
+    """The rand-k mask stream for one run: derived from ``cfg.seed`` on a
+    dedicated fold so it is independent of the batch-sampling, model-init
+    and AD-PSGD partner streams, and SHARED by both engines (and all
+    vmapped seed lanes) — sender and receiver agree on the mask, which is
+    why rand-k ships no indices."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), _SPARSE_STREAM)
+
+
+def randk_scores(key, step, num_params: int):
+    """[P] uniform keep scores, deterministic in (key, step) — ``step``
+    is the round index for the synchronous engines and the global event
+    index for AD-PSGD, so the mask changes every exchange but replays
+    identically in the reference and fused engines.
+
+    The mask is SHARED by every worker in the exchange (one draw per
+    step, not per worker): with per-worker masks a coordinate one
+    endpoint ships and the other doesn't would mix a raw parameter value
+    against zero, and under error feedback the unsent coordinates
+    inflate until that mismatch is catastrophic. A shared mask makes
+    rand-k exact intermittent gossip — the drawn coordinates mix fully,
+    the rest wait for a later draw — which is also what lets the wire
+    format ship no indices (both ends derive the mask from the seed)."""
+    return jax.random.uniform(jax.random.fold_in(key, step), (num_params,))
+
+
+def sparsify_rows(z, kind: str, k: int, *, key=None, step=None,
+                  use_kernel: bool = False, interpret: bool = False):
+    """z: [W, P] -> ŷ: [W, P], keeping k coordinates per row (top-k: the
+    largest |z| per worker; rand-k: one seeded uniform draw shared by all
+    rows) and zeroing the rest.
+
+    The keep threshold (k-th largest gate value per row) is computed with
+    ``lax.top_k`` in both paths; ``use_kernel=True`` applies it through
+    the Pallas mask-and-pack kernel (``kernels/sparsify_block.py``, the
+    fused engines' path) on the [rows, cols] wire layout, otherwise via
+    the jnp oracle select. Both are pure selects of the same mask, so
+    the outputs are bit-identical."""
+    w, p = z.shape
+    if kind == "topk":
+        gate = jnp.abs(z).astype(jnp.float32)
+    elif kind == "randk":
+        gate = jnp.broadcast_to(randk_scores(key, step, p), (w, p))
+    else:
+        raise ValueError(f"not a sparse codec kind: {kind!r}")
+    kth = jax.lax.top_k(gate, k)[0][:, -1]
+    if not use_kernel:
+        return jnp.where(gate >= kth[:, None], z,
+                         jnp.zeros_like(z)).astype(z.dtype)
+    rows, cols = flat_tile_shape(p)
+    pad = rows * cols - p
+    z3 = jnp.pad(z, ((0, 0), (0, pad))).reshape(w, rows, cols)
+    g3 = jnp.pad(gate, ((0, 0), (0, pad)),
+                 constant_values=-1.0).reshape(w, rows, cols)
+    y3 = jax.vmap(lambda zi, gi, t: sparsify_block_2d(
+        zi, gi, t, interpret=interpret)[0])(z3, g3, kth)
+    return y3.reshape(w, -1)[:, :p]
+
+
+def encode_rows(z, kind: str = "int8", k: int = 0, *, key=None, step=None,
+                use_kernel: bool = False, interpret: bool = False):
+    """The codec round trip ŷ = C(z) for a batch of worker rows [W, P] —
+    the single dispatch every compressed call site goes through."""
+    if kind == "int8":
+        return qdq_rows(z, use_kernel=use_kernel, interpret=interpret)
+    return sparsify_rows(z, kind, k, key=key, step=step,
+                         use_kernel=use_kernel, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
 # the compensated update (canonical form)
 # ---------------------------------------------------------------------------
 
+def carries_state(kind: str, error_feedback: bool) -> bool:
+    """Whether the codec evolves the per-worker [W, P] state buffer.
+
+    int8 carries the EF residual e; top-k (EF on) carries the tracked
+    public copy x̂ (ChocoSGD-style — see ``compressed_gossip_ref``);
+    rand-k carries nothing: its shared mask ships the drawn coordinates
+    exactly and the rest are not an unsent *increment* but raw state
+    awaiting a later draw — feeding them back as error would
+    double-count parameters."""
+    if kind == "randk":
+        return False
+    return error_feedback
+
+
+def state_init(flat, kind: str, error_feedback: bool):
+    """The codec-state buffer at round 0 for initial params ``flat``
+    [..., W, P]: zeros for the int8 residual, the (globally known)
+    initial params for top-k's public copy x̂."""
+    if kind == "topk" and error_feedback:
+        return flat
+    return jnp.zeros_like(flat)
+
+
+def state_after_join(err, keep_col, flat, kind: str, error_feedback: bool):
+    """Reset joined workers' codec state after the donor-average re-init:
+    the residual owes nothing (zeros); the top-k public copy x̂ becomes
+    the blended row itself — the blend weights are deterministic, so
+    every peer can reconstruct it (shared knowledge stays shared).
+    ``keep_col``: [W, 1] join mask; ``flat``: the post-blend [W, P]."""
+    if kind == "topk" and error_feedback:
+        return jnp.where(keep_col, flat, err)
+    return jnp.where(keep_col, 0.0, err)
+
+
 def compress_decompress(flat, err, *, error_feedback: bool = True,
-                        use_kernel: bool = False, interpret: bool = False):
+                        kind: str = "int8", k: int = 0, key=None,
+                        step=None, use_kernel: bool = False,
+                        interpret: bool = False):
     """(x [W, P], e [W, P]) -> (ŷ, e'): the wire payload each worker
-    would send, plus the residual carried to the next round."""
-    z = flat + err if error_feedback else flat
-    yhat = qdq_rows(z, use_kernel=use_kernel, interpret=interpret)
-    new_err = z - yhat if error_feedback else err
+    would send under the int8 / rand-k / naive-top-k codecs, plus the
+    residual carried to the next round (rand-k carries none — see
+    ``carries_state``). Top-k with error feedback does NOT go through
+    this roundtrip form — its state is the tracked public copy x̂, see
+    ``compressed_gossip_ref``."""
+    ef = carries_state(kind, error_feedback) and kind != "topk"
+    z = flat + err if ef else flat
+    yhat = encode_rows(z, kind, k, key=key, step=step,
+                       use_kernel=use_kernel, interpret=interpret)
+    new_err = z - yhat if ef else err
     return yhat, new_err
 
 
-def compressed_gossip_ref(flat, err, mix, *, error_feedback: bool = True):
+def compressed_gossip_ref(flat, err, mix, *, error_feedback: bool = True,
+                          kind: str = "int8", k: int = 0, key=None,
+                          step=None, gamma: float = 1.0,
+                          use_kernel: bool = False,
+                          interpret: bool = False):
     """One compressed gossip round on the flattened [W, P] params — the
-    jnp reference the engines and tests share. The mixing term is the
-    same tensordot as ``engine._gossip``, applied to ŷ:
+    jnp reference the engines and tests share, for any codec.
 
-        x' = x + (W @ ŷ - ŷ)
+    int8 / rand-k / naive top-k mix the wire round trip ŷ with the same
+    tensordot as ``engine._gossip``:
+
+        x' = x + (W @ ŷ - ŷ),        e' = z - ŷ  (int8 EF only)
+
+    Top-k with error feedback is the ChocoSGD form — compressing raw
+    parameters with a plain residual is unstable under gossip (workers
+    ship an inflated coordinate at different times, and the compensated
+    mix then subtracts multiples of live values), so the state buffer
+    tracks the public copy x̂ every peer can reconstruct from past
+    payloads, the wire carries the top-k innovation, and the consensus
+    step is damped by ``gamma``:
+
+        q  = topk_k(x - x̂)           (the payload: k values + indices)
+        x̂' = x̂ + q
+        x' = x + gamma (W @ x̂' - x̂')
+
+    Innovations shrink as x̂ tracks x, so the feedback loop is stable for
+    gamma below a sparsity-dependent bound (cfg.sparse_gamma; see
+    tests/test_compression.py for the convergent-vs-naive property).
+    Both forms preserve the fleet average exactly for doubly stochastic
+    W and are exact no-ops through an identity mix.
     """
+    if kind == "topk" and error_feedback:
+        q = sparsify_rows(flat - err, "topk", k, use_kernel=use_kernel,
+                          interpret=interpret)
+        xhat = err + q
+        mixed = flat + gamma * (jnp.tensordot(mix, xhat, axes=1) - xhat)
+        return mixed, xhat
     yhat, new_err = compress_decompress(flat, err,
-                                        error_feedback=error_feedback)
+                                        error_feedback=error_feedback,
+                                        kind=kind, k=k, key=key, step=step,
+                                        use_kernel=use_kernel,
+                                        interpret=interpret)
     mixed = flat + (jnp.tensordot(mix, yhat, axes=1) - yhat)
     return mixed, new_err
 
 
 def compressed_pair_ref(xi, xj, ei, ej, *, error_feedback: bool = True,
+                        kind: str = "int8", k: int = 0, key=None,
+                        step=None, gamma: float = 1.0,
                         use_kernel: bool = False, interpret: bool = False):
     """One compressed AD-PSGD pairwise exchange — the compensated update
     restricted to a single edge with the doubly stochastic 2x2 mix
@@ -183,20 +443,33 @@ def compressed_pair_ref(xi, xj, ei, ej, *, error_feedback: bool = True,
 
         x_i' = x_i + ½ (ŷ_j - ŷ_i),   x_j' = x_j + ½ (ŷ_i - ŷ_j)
 
-    where ŷ = dequant(quant(x + e)) per endpoint (same wire format as the
-    synchronous engines). The endpoints do NOT become equal — unlike the
-    exact average — but their SUM is preserved exactly, and error
-    feedback removes the per-worker quantization bias over events
-    (ChocoSGD extended to pairwise exchange). Takes and returns [P] rows
-    plus the two residuals. ``use_kernel=True`` routes the int8 round
-    trip through the Pallas kernels (the fused engine's path); both paths
-    produce bit-identical ŷ."""
-    z = jnp.stack([xi + ei, xj + ej]) if error_feedback \
-        else jnp.stack([xi, xj])
-    yhat = qdq_rows(z, use_kernel=use_kernel, interpret=interpret)
+    with ŷ = C(x + e) per endpoint for int8 (residuals carry per
+    worker), ŷ = C(x) for rand-k (both endpoints share the event's mask
+    draw — ``step`` is the global event index) and naive top-k, and the
+    x̂-tracked form for top-k with error feedback (the pairwise case of
+    ``compressed_gossip_ref``):
+
+        q = topk_k(x - x̂) per endpoint,  x̂' = x̂ + q,
+        x_i' = x_i + ½ gamma (x̂_j' - x̂_i')  (x_j' symmetric)
+
+    The endpoints do NOT become equal — unlike the exact average — but
+    their SUM is preserved exactly. Takes and returns [P] rows plus the
+    two state rows. ``use_kernel=True`` routes the round trip through
+    the Pallas kernels (the fused engine's path); both paths produce
+    bit-identical payloads for the sparse codecs and 1-ulp ŷ for int8."""
+    if kind == "topk" and error_feedback:
+        q = sparsify_rows(jnp.stack([xi - ei, xj - ej]), "topk", k,
+                          use_kernel=use_kernel, interpret=interpret)
+        xhat_i, xhat_j = ei + q[0], ej + q[1]
+        half = 0.5 * gamma * (xhat_j - xhat_i)
+        return xi + half, xj - half, xhat_i, xhat_j
+    ef = carries_state(kind, error_feedback)
+    z = jnp.stack([xi + ei, xj + ej]) if ef else jnp.stack([xi, xj])
+    yhat = encode_rows(z, kind, k, key=key, step=step,
+                       use_kernel=use_kernel, interpret=interpret)
     half = 0.5 * (yhat[1] - yhat[0])
     xi2 = xi + half
     xj2 = xj - half
-    if error_feedback:
+    if ef:
         ei, ej = z[0] - yhat[0], z[1] - yhat[1]
     return xi2, xj2, ei, ej

@@ -111,6 +111,15 @@ class ConsensusTracker:
         self._rounds += 1
         return self.dist
 
+    def mean_distance(self) -> float:
+        """Mean estimated pairwise distance over present off-diagonal
+        pairs — the scalar consensus signal the compression feedback path
+        (``controller.SparsityScheduler``) tightens k against."""
+        mask = np.outer(self.present, self.present)
+        np.fill_diagonal(mask, False)
+        m = int(mask.sum())
+        return float((self.dist * mask).sum() / m) if m else 0.0
+
     def average_consensus_bound(self, adj: np.ndarray) -> float:
         """Eq. (36): E D^{h+1} <= (1/N^2) sum_ij (1 - a_ij) D_ij, summed and
         normalized over the present worker set only."""

@@ -20,6 +20,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core import topology as topo
+from repro.core.compression import Codec
 from repro.core.consensus import ConsensusTracker
 
 
@@ -28,8 +29,9 @@ class ControlDecision:
     """One coordinator decision (Alg. 3 output): the round topology A^h,
     per-worker taus (Eq. 40 equalization around the pace-setter's
     theory-optimal tau*, Remark 2), the predicted round/waiting times
-    (Eq. 10-11) and the Eq. 36 consensus bound the topology was accepted
-    under."""
+    (Eq. 10-11), the Eq. 36 consensus bound the topology was accepted
+    under, and the wire ratio the Eq. 10 comm term was scaled by (1.0
+    for a compression-blind solve)."""
 
     adj: np.ndarray
     taus: np.ndarray                  # (N,) int per-worker local frequencies
@@ -38,6 +40,7 @@ class ControlDecision:
     tau_pace: int                     # tau of the pace-setting worker
     pace_worker: int
     consensus_bound: float            # Eq. (36) value for this topology
+    wire_ratio: float = 1.0           # comm divisor the solve used
     matchings: list = field(default_factory=list)
 
     @property
@@ -136,15 +139,26 @@ class AdaptiveController:
     def decide(self, mu: np.ndarray, beta: np.ndarray,
                tracker: ConsensusTracker, *, f1: float, smooth_l: float,
                sigma: float, eta: float, rounds: int,
-               alive: np.ndarray | None = None) -> ControlDecision:
+               alive: np.ndarray | None = None,
+               wire_ratio: float = 1.0) -> ControlDecision:
         """One coordinator decision (Alg. 3).
 
         mu: (N,) per-iteration computing times. beta: (N,N) link times.
         alive: optional bool mask; dead workers' links are stripped first
         (fault tolerance: vertex removal + topology repair).
+        wire_ratio: the active codec's uncompressed/compressed wire-bits
+        ratio — every Eq. 10 comm term in the solve (the comm floor under
+        tau*, the Eq. 40 equalization and the greedy link-removal
+        objective) uses the effective link times beta / wire_ratio, so
+        the planned (tau, topology) trades the wire the engines actually
+        pay: a cheaper wire lowers the comm floor (tau* stops being
+        forced up to amortize links) and makes slow links cheaper to keep
+        under the Eq. 42 consensus budget.
         """
         mu = np.asarray(mu, dtype=np.float64)
         beta = np.asarray(beta, dtype=np.float64)
+        if wire_ratio != 1.0:
+            beta = beta / max(float(wire_ratio), 1e-12)
         adj = np.array(self.base_adj, copy=True)
         mask = np.ones(self.n, bool) if alive is None \
             else np.asarray(alive, dtype=bool)
@@ -203,6 +217,7 @@ class AdaptiveController:
                 flag = False
 
         best.matchings = topo.matching_decomposition(best.adj)
+        best.wire_ratio = float(wire_ratio)
         return best
 
     def _removal_candidates(self, adj: np.ndarray, beta: np.ndarray,
@@ -224,6 +239,54 @@ class AdaptiveController:
                 out.append((i, j))
             trial[i, j] = trial[j, i] = 1
         return out
+
+
+class SparsityScheduler:
+    """The replan-cadence compression feedback path (beyond-paper,
+    ChocoSGD x DySTop-flavored): as the fleet's consensus distance
+    shrinks, each gossip payload carries less information per coordinate,
+    so the sparse codec's keep count k is tightened — halved whenever the
+    tracked consensus distance has halved since the last tightening,
+    never below ``floor_frac`` of the initial spec. Tightening on a
+    halving ladder (instead of scaling k continuously) bounds the jit
+    specializations a changing k costs the engines at
+    ~log2(1/floor_frac), and the factor-2 hysteresis keeps the decision
+    robust to the ~1e-5 cross-engine float drift in the measured
+    distances — both engines must replay identical codec sequences for
+    the differential harness to hold.
+
+    Driven by ``algorithms.FedHPStrategy`` at ``cfg.replan_every``
+    cadence (``cfg.tighten_k``); the tightened codec rides to the engines
+    in ``RoundPlan.codec``.
+    """
+
+    def __init__(self, codec: Codec, floor_frac: float = 0.125):
+        if not codec.is_sparse:
+            raise ValueError(f"k-tightening needs a sparse codec, "
+                             f"got {codec.mode!r}")
+        self.codec = codec
+        self.floor_frac = float(floor_frac)
+        self._k0 = codec.k
+        self._d_ref: float | None = None
+
+    def step(self, d_now: float) -> Codec:
+        """Feed the current tracked consensus distance; returns the codec
+        to plan and gossip with (possibly one halving tighter)."""
+        if not (math.isfinite(d_now) and d_now > 0.0):
+            return self.codec
+        if self._d_ref is None:
+            self._d_ref = float(d_now)
+            return self.codec
+        k_floor = self._k0 * self.floor_frac
+        if self._k0 >= 1.0:
+            # an absolute keep count must stay absolute: halving across
+            # 1.0 would silently reinterpret k as a fraction of P and
+            # EXPAND the payload instead of tightening it
+            k_floor = max(k_floor, 1.0)
+        if d_now < 0.5 * self._d_ref and self.codec.k > k_floor:
+            self.codec = self.codec.with_k(max(self.codec.k / 2.0, k_floor))
+            self._d_ref = float(d_now)
+        return self.codec
 
 
 def prune_dead(adj: np.ndarray, alive: np.ndarray,

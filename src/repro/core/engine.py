@@ -196,15 +196,21 @@ def _unflatten_row(vec, template):
     return jax.tree.unflatten(jax.tree.structure(template), out)
 
 
-@partial(jax.jit, static_argnames=("error_feedback",))
-def _gossip_compressed(flat, err, mix, *, error_feedback: bool):
-    """Compressed Eq. 5 on the flattened [W, P] matrix: each worker sends
-    the int8 round trip ŷ of z = x + e instead of x, mixes ŷ with the
-    same tensordot as ``_gossip``, and carries the residual e' = z - ŷ.
-    The update itself lives in ``core/compression.py`` — the fused engine
-    and ``runtime/collectives`` implement the same formula."""
+@partial(jax.jit, static_argnames=("kind", "k", "error_feedback"))
+def _gossip_compressed(flat, err, mix, key, step, gamma, *, kind: str,
+                       k: int, error_feedback: bool):
+    """Compressed Eq. 5 on the flattened [W, P] matrix: each worker puts
+    the codec's payload on the wire (int8 round trip of z = x + e, the
+    top-k innovation against the tracked public copy x̂, or the shared
+    rand-k mask draw — ``kind``/``k`` from the round's codec,
+    ``key``/``step`` seeding the rand-k mask, ``gamma`` damping the
+    top-k consensus step), mixes with the same tensordot as ``_gossip``
+    and carries the codec state (residual / x̂) forward. The update
+    itself lives in ``core/compression.py`` — the fused engine and
+    ``runtime/collectives`` implement the same formulas."""
     return compression.compressed_gossip_ref(
-        flat, err, mix, error_feedback=error_feedback)
+        flat, err, mix, error_feedback=error_feedback, kind=kind, k=k,
+        key=key, step=step, gamma=gamma)
 
 
 def _measure_worker(p, q, eval_x, eval_y, probe_x, probe_y):
@@ -302,14 +308,20 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
     px, py = ex[:, :32], ey[:, :32]
     ex, ey, px, py = map(jnp.asarray, (ex, ey, px, py))
 
-    compress = compression.validate_mode(cfg.compress) != "none"
-    # compressed links pay Eq. 10 comm time / wire ratio (int8 + scales
-    # instead of raw f32); the residual matrix is the per-worker error-
-    # feedback state (zeros when EF is off — the naive quantized mode)
-    comm_ratio = (compression.wire_ratio(
-        int(cluster.model_bits // compression.FP32_BITS))
-        if compress else 1.0)
-    err = (jnp.zeros((n, _param_count(stacked)), jnp.float32)
+    codec0 = compression.parse_mode(cfg.compress)
+    compress = codec0.kind != "none"
+    # compressed links pay Eq. 10 comm time / the codec's wire ratio
+    # (int8+scales or k sparse values instead of raw f32); the adaptive
+    # strategy may tighten a sparse codec's k per round via plan.codec.
+    # The residual matrix is the per-worker error-feedback state (zeros
+    # when EF is off — the naive compressed mode)
+    p_wire = int(cluster.model_bits // compression.FP32_BITS)
+    p_model = _param_count(stacked)
+    skey = compression.sparsify_base_key(cfg.seed)  # rand-k mask stream
+    # codec state: int8 residual (zeros) or top-k public copy x̂ (the
+    # globally known initial params)
+    err = (compression.state_init(_flatten_workers(stacked), codec0.kind,
+                                  cfg.error_feedback)
            if compress else None)
 
     hist = History()
@@ -325,12 +337,19 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
                                          jnp.asarray(donors))
                 if compress:
                     # the blended model owes nothing from the departed
-                    # model's last transmission
-                    err = jnp.where(jnp.asarray(joined)[:, None], 0.0, err)
+                    # model's last transmission: residual resets to zero,
+                    # the top-k public copy to the (deterministic, hence
+                    # shared-knowledge) blended row
+                    err = compression.state_after_join(
+                        err, jnp.asarray(joined)[:, None],
+                        _flatten_workers(stacked), codec0.kind,
+                        cfg.error_feedback)
         mu = cluster.sample_mu()
         beta = cluster.sample_beta()
 
         plan = strategy.plan(h, alive=alive)
+        rcodec = plan.codec if plan.codec is not None else codec0
+        comm_ratio = rcodec.wire_ratio(p_wire) if compress else 1.0
         adj = plan.adj.copy()
         adj[~alive, :] = 0
         adj[:, ~alive] = 0
@@ -369,7 +388,7 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
         waiting = float((t_round - t_i[alive]).mean()) if alive.any() else 0.0
         clock += t_round
 
-        # --- gossip aggregation (Eq. 5-6), optionally int8-compressed ---
+        # --- gossip aggregation (Eq. 5-6), optionally compressed ---
         if adj.sum() > 0:
             mixfn = (topo.mixing_matrix_metropolis if mixing == "metropolis"
                      else topo.mixing_matrix_uniform)
@@ -377,7 +396,10 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
             if compress:
                 flat = _flatten_workers(stacked)
                 mixed, err = _gossip_compressed(
-                    flat, err, mix, error_feedback=cfg.error_feedback)
+                    flat, err, mix, skey, jnp.int32(h),
+                    jnp.float32(cfg.sparse_gamma),
+                    kind=rcodec.kind, k=rcodec.resolve_k(p_model),
+                    error_feedback=cfg.error_feedback)
                 stacked = _unflatten(mixed, stacked)
             else:
                 stacked = _gossip(stacked, mix)
@@ -396,7 +418,7 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
             smooth_l=float(np.median(np.asarray(ls)[alive])),
             sigma=float(np.median(np.asarray(sigs)[alive])),
             loss=float(np.mean(np.asarray(losses)[alive])),
-            cross_loss=cross, alive=alive)
+            cross_loss=cross, alive=alive, wire_ratio=comm_ratio)
 
         mean_acc, mean_loss = _mean_accuracy(stacked, tx, ty, alive)
         fa = flat[alive] if alive.any() else flat
@@ -502,10 +524,9 @@ def adpsgd_schedule(cluster: SimCluster, cfg: FedHPConfig, *,
     ring = topo.ring_topology(n)
     neighbors = [np.nonzero(ring[i])[0] for i in range(n)]
     tau = cfg.tau_init
-    compress = compression.validate_mode(cfg.compress) != "none"
-    comm_ratio = (compression.wire_ratio(
+    codec = compression.parse_mode(cfg.compress)
+    comm_ratio = codec.wire_ratio(
         int(cluster.model_bits // compression.FP32_BITS))
-        if compress else 1.0)
 
     mu0 = cluster.sample_mu()
     q = [(tau * mu0[i], i) for i in range(n)]
@@ -597,21 +618,25 @@ def _adpsgd_average(stacked, delta, i, j):
         lambda l, a: l.at[i].set(a).at[j].set(a), stacked, avg)
 
 
-@partial(jax.jit, static_argnames=("error_feedback",))
-def _adpsgd_exchange_compressed(stacked, err, delta, i, j, *,
+@partial(jax.jit, static_argnames=("kind", "k", "error_feedback"))
+def _adpsgd_exchange_compressed(stacked, err, delta, i, j, key, step,
+                                gamma, *, kind: str, k: int,
                                 error_feedback: bool):
     """Compressed AD-PSGD pairwise exchange (ChocoSGD-style, the pairwise
     case of ``compression.compressed_gossip_ref``): both endpoints put
-    the int8 round trip ŷ of z = x + e on the wire and apply the
-    compensated half-mix x' = x + ½(ŷ_peer - ŷ_self); residuals carry
-    per worker. Unlike the exact average the two rows do NOT become
-    equal — the quantization error stays in e, keeping the fleet sum
+    the codec's payload on the wire (int8 round trip of z = x + e, the
+    top-k innovation against the tracked x̂, or the event's shared rand-k
+    draw — ``key``/``step`` seed the mask, ``gamma`` damps the top-k
+    half-mix) and apply the compensated half-mix; codec state carries per
+    worker. Unlike the exact average the two rows do NOT become equal —
+    the compression error stays in the state, keeping the fleet sum
     exact."""
     pi = jax.tree.map(lambda l, d: l[i] + d, stacked, delta)
     pj = jax.tree.map(lambda l: l[j], stacked)
     xi, xj = _flatten_row(pi), _flatten_row(pj)
     xi2, xj2, ei2, ej2 = compression.compressed_pair_ref(
-        xi, xj, err[i], err[j], error_feedback=error_feedback)
+        xi, xj, err[i], err[j], error_feedback=error_feedback,
+        kind=kind, k=k, key=key, step=step, gamma=gamma)
     err = err.at[i].set(ei2).at[j].set(ej2)
     new_i = _unflatten_row(xi2, pi)
     new_j = _unflatten_row(xj2, pj)
@@ -634,12 +659,13 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
     — ``rounds``/``time_budget`` are generation-time knobs); this
     loop runs the device math one jit dispatch per event — the semantic
     ground truth ``fused.run_adpsgd_fused`` is differentially tested
-    against. ``cfg.compress == "int8"`` switches the pairwise exchange to
-    the compensated int8 update and charges Eq. 10 event comm time
-    divided by the wire ratio."""
+    against. ``cfg.compress`` ("int8" / "topk:<k>" / "randk:<k>")
+    switches the pairwise exchange to the codec's compensated update and
+    charges Eq. 10 event comm time divided by the codec's wire ratio."""
     rounds = rounds or cfg.rounds
     n = cfg.num_workers
-    compress = compression.validate_mode(cfg.compress) != "none"
+    codec = compression.parse_mode(cfg.compress)
+    compress = codec.kind != "none"
     if schedule is None:
         schedule = adpsgd_schedule(cluster, cfg, rounds=rounds,
                                    time_budget=time_budget)
@@ -655,8 +681,12 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
     tx = jnp.asarray(test_x[:eval_subset])
     ty = jnp.asarray(test_y[:eval_subset])
     tau = schedule.tau
-    err = (jnp.zeros((n, _param_count(stacked)), jnp.float32)
+    err = (compression.state_init(_flatten_workers(stacked), codec.kind,
+                                  cfg.error_feedback)
            if compress else None)
+    k_abs = codec.resolve_k(_param_count(stacked))
+    skey = compression.sparsify_base_key(cfg.seed)  # rand-k mask stream
+    ev_idx = 0          # global event counter: the rand-k mask step
 
     # per-worker snapshot taken when its computation started
     snapshots = [jax.tree.map(lambda l, i=i: l[i], stacked)
@@ -667,7 +697,10 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
             stacked = _blend_joined(stacked, jnp.asarray(rnd.keep),
                                     jnp.asarray(rnd.donor_w, jnp.float32))
             if compress:
-                err = jnp.where(jnp.asarray(rnd.keep)[:, None], 0.0, err)
+                err = compression.state_after_join(
+                    err, jnp.asarray(rnd.keep)[:, None],
+                    _flatten_workers(stacked), codec.kind,
+                    cfg.error_feedback)
             for w in np.nonzero(rnd.keep)[0]:
                 snapshots[w] = jax.tree.map(lambda l, w=w: l[w], stacked)
         for ev in rnd.events:
@@ -681,10 +714,13 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
             if compress:
                 stacked, err = _adpsgd_exchange_compressed(
                     stacked, err, delta, jnp.int32(i), jnp.int32(j),
-                    error_feedback=cfg.error_feedback)
+                    skey, jnp.int32(ev_idx),
+                    jnp.float32(cfg.sparse_gamma), kind=codec.kind,
+                    k=k_abs, error_feedback=cfg.error_feedback)
             else:
                 stacked = _adpsgd_average(stacked, delta, jnp.int32(i),
                                           jnp.int32(j))
+            ev_idx += 1
             snapshots[i] = jax.tree.map(lambda l: l[i], stacked)
         alive = rnd.alive
         mean_acc, mean_loss = _mean_accuracy(stacked, tx, ty, alive)

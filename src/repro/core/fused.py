@@ -25,12 +25,15 @@ and ``run_adpsgd``.
   batch-sampling seeds: S experiments amortize one scan (sweep workloads
   like benchmarks/hillclimb.py). Static-plan strategies only — an
   adaptive plan is feedback from one seed's trajectory.
-- ``cfg.compress == "int8"`` swaps the gossip for the compressed update
-  (core/compression.py): per-worker error-feedback residuals ride in the
-  scan carry, the int8 round trip runs through the Pallas
-  ``quantize_block_2d``/``dequantize_block_2d`` kernels on the [W, P]
-  layout, and Eq. 10 charges comm time / wire_ratio — composing with
-  churn masks and the vmapped ``seeds`` axis.
+- ``cfg.compress`` ("int8" / "topk:<k>" / "randk:<k>") swaps the gossip
+  for the codec's compensated update (core/compression.py): per-worker
+  error-feedback residuals ride in the scan carry, the wire round trip
+  runs through the Pallas kernels on the [W, P] layout
+  (``quantize_block_2d``/``dequantize_block_2d`` for int8,
+  ``sparsify_block_2d`` mask-and-pack for top-k / rand-k), and Eq. 10
+  charges comm time / the codec's wire_ratio — composing with churn
+  masks, the vmapped ``seeds`` axis, and FedHP's per-plan codec
+  tightening (``RoundPlan.codec``, frozen per segment).
 
 ``run_adpsgd_fused`` does the same for the event-driven AD-PSGD
 baseline: the host precomputes the full event schedule
@@ -82,21 +85,29 @@ ADPSGD_FUSE_ROUNDS = 32
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("tau_cap", "measure", "needs_cross",
-                                   "interpret", "compress", "ef"))
+                                   "interpret", "kind", "k", "ef"))
 def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
-                  comms, ew, cw, keep, rw, tx, ty, *, tau_cap: int,
-                  measure: bool, needs_cross: bool, interpret: bool,
-                  compress: bool, ef: bool):
+                  comms, ew, cw, keep, rw, hs, skey, gamma, tx, ty, *,
+                  tau_cap: int, measure: bool, needs_cross: bool,
+                  interpret: bool, kind: str, k: int, ef: bool):
     """Run K rounds on device. Batched over a leading seed axis S on
-    (stacked, err, bx, by, ex, ey, px, py); control inputs (taus .. rw,
-    [K]-leading) and the test set are shared across seeds.
+    (stacked, err, bx, by, ex, ey, px, py); control inputs (taus .. rw
+    plus the round indices ``hs``, all [K]-leading), the rand-k mask key
+    ``skey`` and the test set are shared across seeds.
 
     ``err`` is the [S, W, P] error-feedback residual carried as scan
-    state on compressed runs (untouched otherwise).
+    state on compressed runs (untouched otherwise); ``kind``/``k`` name
+    the segment's wire codec ("none" uncompressed — a frozen adaptive
+    plan fixes the codec for the whole segment).
 
     Returns ((stacked', err'), outs) where outs is a dict of [S, K, ...]
     metric trajectories.
     """
+    compress = kind != "none"
+    # which codecs evolve the state buffer (int8 residual / top-k x̂) —
+    # rand-k carries nothing; mirrors compression.carries_state so the
+    # scan state matches the reference engine bit for bit
+    stateful = compress and compression.carries_state(kind, ef)
     leaves = jax.tree.leaves(stacked)
     p_total = sum(int(np.prod(l.shape[2:])) for l in leaves)
     rows, cols = compression.flat_tile_shape(p_total)
@@ -106,16 +117,19 @@ def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
         def body(carry, xs):
             carry, err_c = carry
             (bxh, byh, tau_h, lr_h, mix_h, comm_h, ew_h, cw_h, keep_h,
-             rw_h) = xs
+             rw_h, h_h) = xs
 
             # --- join re-init: the reference's _reinit_joined with
             # (keep, donor weights) precomputed host-side; an all-False
             # keep_h makes the blend an exact no-op ---
             carry = _blend_joined(carry, keep_h, rw_h)
-            if compress and ef:
-                # joined rows adopt a blended model; their stale residual
-                # is dropped (same reset as the reference engine)
-                err_c = jnp.where(keep_h[:, None], 0.0, err_c)
+            if stateful:
+                # joined rows adopt a blended model; their codec state
+                # resets the same way as in the reference engine (zeroed
+                # residual / x̂ re-anchored at the blended row)
+                err_c = compression.state_after_join(
+                    err_c, keep_h[:, None], _flatten_workers(carry),
+                    kind, ef)
             prev = carry
 
             # --- local updating (Eq. 3), masked to tau_i — the SAME
@@ -126,17 +140,33 @@ def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
                 carry, bxh, byh, tau_h)
 
             flat = _flatten_workers(carry)
-            if compress:
-                # --- compressed gossip: int8 round trip of z = x + e per
-                # worker through the Pallas quantize/dequantize kernels on
-                # the [W, rows, cols] layout, then the same tensordot
-                # mixing of ŷ as the reference's _gossip_compressed.
-                # comm_h gates no-communication rounds to an exact no-op
-                # (nothing is sent, so neither params nor residual move) ---
-                z = flat + err_c if ef else flat
-                yhat = compression.qdq_rows(z, use_kernel=True,
-                                            interpret=interpret)
-                if ef:
+            if kind == "topk" and ef:
+                # --- x̂-tracked top-k (ChocoSGD form, the same update as
+                # compression.compressed_gossip_ref): the wire carries
+                # the top-k innovation against the tracked public copy,
+                # through the Pallas sparsify kernel; the damped
+                # consensus step mixes the advanced copies. comm_h gates
+                # no-communication rounds to an exact no-op (nothing is
+                # sent: neither params nor x̂ move) ---
+                q = compression.sparsify_rows(flat - err_c, "topk", k,
+                                              use_kernel=True,
+                                              interpret=interpret)
+                xhat = err_c + q
+                err_c = jnp.where(comm_h > 0, xhat, err_c)
+                y_flat = flat + comm_h * gamma * (
+                    jnp.tensordot(mix_h, xhat, axes=1) - xhat)
+            elif compress:
+                # --- int8 / rand-k / naive top-k: the codec round trip
+                # of z = x + e per worker through the Pallas kernels on
+                # the [W, rows, cols] layout (quantize/dequantize or the
+                # sparsify mask-and-pack), then the same tensordot mixing
+                # of ŷ as the reference's _gossip_compressed, with comm_h
+                # gating as above ---
+                z = flat + err_c if stateful else flat
+                yhat = compression.encode_rows(z, kind, k, key=skey,
+                                               step=h_h, use_kernel=True,
+                                               interpret=interpret)
+                if stateful:
                     err_c = jnp.where(comm_h > 0, z - yhat, err_c)
                 y_flat = flat + comm_h * (
                     jnp.tensordot(mix_h, yhat, axes=1) - yhat)
@@ -192,7 +222,7 @@ def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
 
         return jax.lax.scan(body, (stacked, err),
                             (bx, by, taus, lrs, mixes, comms, ew, cw,
-                             keep, rw))
+                             keep, rw, hs))
 
     return jax.vmap(one_seed,
                     in_axes=(0, 0, 0, 0, 0, 0, 0, 0))(stacked, err, bx, by,
@@ -216,7 +246,10 @@ class _Segment:
     cw: np.ndarray            # [K, W] f32  consensus weights
     keep: np.ndarray          # [K, W] bool join re-init mask
     rw: np.ndarray            # [K, W] f32  donor weights
+    hs: np.ndarray            # [K] i32 absolute round indices (rand-k step)
     tau_cap: int
+    codec: object             # the segment's wire codec (compression.Codec)
+    wire_ratio: list[float]   # per-round Eq. 10 comm divisor (observe fb)
     alive: list[np.ndarray]
     adjs: list[np.ndarray]
     mus: list[np.ndarray]
@@ -235,15 +268,19 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
                         strategy: Strategy, cfg: FedHPConfig, rngs, data,
                         shards, mixfn, clock: float,
                         time_budget: float | None, adaptive: bool,
-                        compress: bool, comm_ratio: float):
+                        codec0, p_wire: int):
     """Advance cluster/strategy/batch RNG streams for rounds h0..h0+K-1 in
     the exact order ``run_dfl`` would, and pack the device inputs.
 
     For an adaptive strategy the plan is frozen at the segment's first
     round; static strategies re-plan every round (observation-free, so
-    this is exactly the reference behavior).
+    this is exactly the reference behavior). The frozen plan also fixes
+    the segment's wire codec (``plan.codec`` falling back to ``codec0``,
+    the parsed ``cfg.compress``), whose ``wire_ratio(p_wire)`` divides
+    the Eq. 10 comm term exactly like the reference engine's clock.
     """
     n = cfg.num_workers
+    compress = codec0.kind != "none"
     per: list[dict] = []
     plan = None
     stop = False
@@ -256,6 +293,8 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
         beta = cluster.sample_beta()
         if plan is None or not adaptive:
             plan = strategy.plan(h, alive=alive)
+        rcodec = plan.codec if plan.codec is not None else codec0
+        comm_ratio = rcodec.wire_ratio(p_wire) if compress else 1.0
         adj = plan.adj.copy()
         adj[~alive, :] = 0
         adj[:, ~alive] = 0
@@ -298,7 +337,8 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
         per.append(dict(alive=alive, adj=adj, mu=mu, beta=beta, taus=taus,
                         tau_cap=tau_cap, batches=batches, mix=mix,
                         comm=1.0 if adj.sum() > 0 else 0.0,
-                        keep=keep, rw=rw, ew=ew, cw=cw,
+                        keep=keep, rw=rw, ew=ew, cw=cw, h=h,
+                        codec=rcodec, wire_ratio=comm_ratio,
                         lr=cfg.lr * (cfg.lr_decay ** h),
                         t_round=t_round, waiting=waiting,
                         mean_tau=float(taus[alive].mean())
@@ -333,7 +373,10 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
         cw=np.stack([p["cw"] for p in per]).astype(np.float32),
         keep=np.stack([p["keep"] for p in per]),
         rw=np.stack([p["rw"] for p in per]).astype(np.float32),
+        hs=np.array([p["h"] for p in per], np.int32),
         tau_cap=cap,
+        codec=per[0]["codec"],
+        wire_ratio=[p["wire_ratio"] for p in per],
         alive=[p["alive"] for p in per], adjs=[p["adj"] for p in per],
         mus=[p["mu"] for p in per], betas=[p["beta"] for p in per],
         round_time=[p["t_round"] for p in per],
@@ -391,16 +434,24 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
         eys.append(np.stack([data.y[sh[rng.integers(0, len(sh), 256)]]
                              for sh in shards]))
     stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *stacked0)
-    compress = compression.validate_mode(cfg.compress) != "none"
-    comm_ratio = (compression.wire_ratio(
-        int(cluster.model_bits // compression.FP32_BITS))
-        if compress else 1.0)
-    # per-seed error-feedback residual, carried across segments; a [S, W, 1]
-    # dummy keeps the carry structure static when compression is off
-    # without hauling a dead fleet-sized buffer through the scan
-    err = jnp.zeros((len(seed_list), n,
-                     _param_count(stacked0[0]) if compress else 1),
-                    jnp.float32)
+    codec0 = compression.parse_mode(cfg.compress)
+    compress = codec0.kind != "none"
+    p_wire = int(cluster.model_bits // compression.FP32_BITS)
+    p_model = _param_count(stacked0[0])
+    # rand-k mask stream: derived from cfg.seed (not the lane seeds) so
+    # vmapped lanes share the masks like they share the rest of the
+    # host-side control plane
+    skey = compression.sparsify_base_key(cfg.seed)
+    # per-seed codec state (int8 residual / top-k x̂), carried across
+    # segments; a [S, W, 1] dummy keeps the carry structure static for
+    # stateless runs (uncompressed, rand-k, EF off) without hauling a
+    # dead fleet-sized buffer through the scan
+    err = (compression.state_init(
+        jnp.stack([_flatten_workers(s) for s in stacked0]),
+        codec0.kind, cfg.error_feedback)
+        if compress and compression.carries_state(codec0.kind,
+                                                  cfg.error_feedback)
+        else jnp.zeros((len(seed_list), n, 1), jnp.float32))
     ex = jnp.asarray(np.stack(exs))
     ey = jnp.asarray(np.stack(eys))
     px, py = ex[:, :, :32], ey[:, :, :32]
@@ -421,15 +472,18 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
                    else min(rounds - h, MAX_FUSE_ROUNDS))
         seg, clock, stop = _precompute_segment(
             h, seg_len, cluster, strategy, cfg, rngs, data, shards, mixfn,
-            clock, time_budget, adaptive, compress, comm_ratio)
+            clock, time_budget, adaptive, codec0, p_wire)
         (stacked, err), outs = _scan_segment(
             stacked, err, jnp.asarray(seg.bx), jnp.asarray(seg.by), ex, ey,
             px, py, jnp.asarray(seg.taus), jnp.asarray(seg.lrs),
             jnp.asarray(seg.mixes), jnp.asarray(seg.comms),
             jnp.asarray(seg.ew), jnp.asarray(seg.cw),
             jnp.asarray(seg.keep), jnp.asarray(seg.rw),
+            jnp.asarray(seg.hs), skey, jnp.float32(cfg.sparse_gamma),
             tx, ty, tau_cap=seg.tau_cap, measure=adaptive,
-            needs_cross=needs_cross, interpret=interp, compress=compress,
+            needs_cross=needs_cross, interpret=interp,
+            kind=seg.codec.kind,
+            k=seg.codec.resolve_k(p_model),
             ef=cfg.error_feedback)
         outs = {k: np.asarray(v) for k, v in outs.items()}
 
@@ -455,7 +509,7 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
                     loss=float(np.mean(outs["losses"][0, t][a])),
                     cross_loss=np.asarray(outs["cross"][0, t], np.float64)
                     if needs_cross else None,
-                    alive=a)
+                    alive=a, wire_ratio=seg.wire_ratio[t])
         h += len(seg)
     return hists if batched else hists[0]
 
@@ -464,10 +518,10 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
 # Fused event-driven AD-PSGD
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("tau", "interpret", "compress", "ef"))
-def _adpsgd_scan(stacked, snap, err, stale, bx, by, iidx, jidx, lrs, keep,
-                 rw, ew, cw, tx, ty, *, tau: int, interpret: bool,
-                 compress: bool, ef: bool):
+@partial(jax.jit, static_argnames=("tau", "interpret", "kind", "k", "ef"))
+def _adpsgd_scan(stacked, snap, err, stale, bx, by, iidx, jidx, eidx, lrs,
+                 keep, rw, ew, cw, skey, gamma, tx, ty, *, tau: int,
+                 interpret: bool, kind: str, k: int, ef: bool):
     """Run K AD-PSGD rounds (K*N events) on device in one nested scan.
 
     The outer scan walks rounds, the inner scan the round's N events;
@@ -477,18 +531,21 @@ def _adpsgd_scan(stacked, snap, err, stale, bx, by, iidx, jidx, lrs, keep,
     error-feedback residuals (``err``, [S, W, P] on compressed runs) and
     the per-worker staleness counters (``stale``, [S, W] i32). Batched
     over a leading seed axis S on (stacked, snap, err, stale, bx, by);
-    the event schedule (iidx/jidx [K, N]), learning rates, join masks
-    and metric weights are shared across seeds.
+    the event schedule (iidx/jidx [K, N] and the global event indices
+    eidx [K, N] — the rand-k mask step), learning rates, join masks,
+    metric weights and the mask key ``skey`` are shared across seeds.
 
     The pairwise average runs through the Pallas ``gossip_mix_2d`` kernel
     on the 2-row slice (partner row as the single neighbor buffer,
-    weight ½); compressed runs instead route the int8 round trip of both
-    rows through the Pallas quantize/dequantize kernels and apply the
-    compensated half-mix (``compression.compressed_pair_ref``).
+    weight ½); compressed runs instead route the codec round trip of
+    both rows through the Pallas kernels (int8 quantize/dequantize or
+    the sparsify mask-and-pack, per the static ``kind``/``k``) and apply
+    the compensated half-mix (``compression.compressed_pair_ref``).
 
     Returns ((stacked', snap', err', stale'), outs) where outs carries
     [S, K] metric trajectories plus the [S, K, N] per-event staleness
     actually observed by the scan (host schedule replay must agree)."""
+    compress = kind != "none"
     leaves = jax.tree.leaves(stacked)
     p_total = sum(int(np.prod(l.shape[2:])) for l in leaves)
     rows, cols = compression.flat_tile_shape(p_total)
@@ -504,7 +561,7 @@ def _adpsgd_scan(stacked, snap, err, stale, bx, by, iidx, jidx, lrs, keep,
 
         def event_body(carry, xs):
             flat, snapf, err, stale = carry
-            i, j, bxe, bye, lr_h = xs
+            i, j, bxe, bye, e_h, lr_h = xs
             p_snap = _unflatten_row(snapf[i], template)
             delta = _adpsgd_delta(p_snap, bxe, bye, lr_h, tau)
             xi = flat[i] + _flatten_row(delta)
@@ -512,6 +569,7 @@ def _adpsgd_scan(stacked, snap, err, stale, bx, by, iidx, jidx, lrs, keep,
             if compress:
                 xi2, xj2, ei2, ej2 = compression.compressed_pair_ref(
                     xi, xj, err[i], err[j], error_feedback=ef,
+                    kind=kind, k=k, key=skey, step=e_h, gamma=gamma,
                     use_kernel=True, interpret=interpret)
                 err = err.at[i].set(ei2).at[j].set(ej2)
                 flat = flat.at[i].set(xi2).at[j].set(xj2)
@@ -536,21 +594,24 @@ def _adpsgd_scan(stacked, snap, err, stale, bx, by, iidx, jidx, lrs, keep,
 
         def round_body(carry, xs):
             flat, snapf, err, stale = carry
-            bxh, byh, i_h, j_h, lr_h, keep_h, rw_h, ew_h, cw_h = xs
+            bxh, byh, i_h, j_h, e_h, lr_h, keep_h, rw_h, ew_h, cw_h = xs
             # --- join re-init before the round's events: joined rows
             # adopt the donor average, get a fresh snapshot, and drop
             # residual + staleness (exact no-op when keep_h is all-False)
             mean = jnp.tensordot(rw_h, flat, axes=1)
             flat = jnp.where(keep_h[:, None], mean[None], flat)
             snapf = jnp.where(keep_h[:, None], flat, snapf)
-            if compress and ef:
-                err = jnp.where(keep_h[:, None], 0.0, err)
+            if compress and compression.carries_state(kind, ef):
+                # same reset as the reference: zeroed residual, or x̂
+                # re-anchored at the (shared-knowledge) blended row
+                err = compression.state_after_join(err, keep_h[:, None],
+                                                   flat, kind, ef)
             stale = jnp.where(keep_h, 0, stale)
 
             lrs_ev = jnp.broadcast_to(lr_h, i_h.shape)
             (flat, snapf, err, stale), st = jax.lax.scan(
                 event_body, (flat, snapf, err, stale),
-                (i_h, j_h, bxh, byh, lrs_ev))
+                (i_h, j_h, bxh, byh, e_h, lrs_ev))
 
             carry_tree = _unflatten(flat, stacked)
             accs = jax.vmap(lambda p: accuracy(p, tx, ty))(carry_tree)
@@ -567,7 +628,7 @@ def _adpsgd_scan(stacked, snap, err, stale, bx, by, iidx, jidx, lrs, keep,
 
         (flat, snapf, err, stale), outs = jax.lax.scan(
             round_body, (flat0, snap0, err, stale),
-            (bx, by, iidx, jidx, lrs, keep, rw, ew, cw))
+            (bx, by, iidx, jidx, eidx, lrs, keep, rw, ew, cw))
         return (_unflatten(flat, stacked), _unflatten(snapf, snap),
                 err, stale), outs
 
@@ -611,7 +672,9 @@ def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
                  if batched else [int(cfg.seed)])
     interp = (jax.default_backend() == "cpu") if interpret is None \
         else interpret
-    compress = compression.validate_mode(cfg.compress) != "none"
+    codec = compression.parse_mode(cfg.compress)
+    compress = codec.kind != "none"
+    skey = compression.sparsify_base_key(cfg.seed)  # rand-k mask stream
     if schedule is None:
         schedule = adpsgd_schedule(cluster, cfg, rounds=rounds,
                                    time_budget=time_budget)
@@ -632,8 +695,16 @@ def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
     stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *stacked0)
     snap = stacked                       # snapshots start at the init rows
     p_total = _param_count(stacked0[0])
-    err = jnp.zeros((len(seed_list), n, p_total if compress else 1),
-                    jnp.float32)
+    k_abs = codec.resolve_k(p_total)
+    # codec state rows, or a [S, W, 1] dummy for stateless runs (see
+    # run_dfl_fused) — the stateless pair exchange returns its state
+    # rows untouched, so the dummy shape survives the event scan
+    err = (compression.state_init(
+        jnp.stack([_flatten_workers(s) for s in stacked0]),
+        codec.kind, cfg.error_feedback)
+        if compress and compression.carries_state(codec.kind,
+                                                  cfg.error_feedback)
+        else jnp.zeros((len(seed_list), n, 1), jnp.float32))
     stale = jnp.zeros((len(seed_list), n), jnp.int32)
     tx = jnp.asarray(test_x[:eval_subset])
     ty = jnp.asarray(test_y[:eval_subset])
@@ -654,6 +725,10 @@ def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
                         np.int32)
         jidx = np.array([[e.partner for e in r.events] for r in seg],
                         np.int32)
+        # global event indices — the reference loop's per-event counter,
+        # i.e. the rand-k mask step (every round has exactly n_ev events)
+        eidx = (done * n_ev + np.arange(len(seg) * n_ev)).reshape(
+            len(seg), n_ev).astype(np.int32)
         lrs = np.array([r.lr for r in seg], np.float32)
         keep = np.stack([r.keep for r in seg])
         rw = np.stack([r.donor_w for r in seg]).astype(np.float32)
@@ -679,11 +754,12 @@ def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
 
         (stacked, snap, err, stale), outs = _adpsgd_scan(
             stacked, snap, err, stale, jnp.asarray(bx), jnp.asarray(by),
-            jnp.asarray(iidx), jnp.asarray(jidx), jnp.asarray(lrs),
-            jnp.asarray(keep), jnp.asarray(rw),
+            jnp.asarray(iidx), jnp.asarray(jidx), jnp.asarray(eidx),
+            jnp.asarray(lrs), jnp.asarray(keep), jnp.asarray(rw),
             jnp.asarray(np.stack(ew), dtype=jnp.float32),
             jnp.asarray(np.stack(cw), dtype=jnp.float32),
-            tx, ty, tau=tau, interpret=interp, compress=compress,
+            skey, jnp.float32(cfg.sparse_gamma), tx, ty, tau=tau,
+            interpret=interp, kind=codec.kind, k=k_abs,
             ef=cfg.error_feedback)
         outs = {k: np.asarray(v) for k, v in outs.items()}
         # the scan carries its own staleness counters; they must agree

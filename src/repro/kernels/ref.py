@@ -54,6 +54,19 @@ def quantize_block_ref(x, block_rows: int, block_cols: int):
     return q, scales
 
 
+def sparsify_block_ref(x, gate, thresh):
+    """Oracle twin of ``sparsify_block.sparsify_block_2d`` (tile-multiple
+    shapes): y keeps x where gate >= thresh, nnz counts survivors per
+    (8, 1024) tile."""
+    r, c = x.shape
+    br, bc = min(8, r), min(1024, c)
+    keep = gate.astype(jnp.float32) >= jnp.asarray(thresh, jnp.float32)
+    y = jnp.where(keep, x, jnp.zeros_like(x))
+    t = keep.astype(jnp.int32).reshape(r // br, br, c // bc, bc)
+    nnz = t.transpose(0, 2, 1, 3).sum(axis=(2, 3))
+    return y, nnz
+
+
 def dequantize_block_ref(q, scales, dtype=jnp.float32):
     r, c = q.shape
     nr, nc = scales.shape

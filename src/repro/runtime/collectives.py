@@ -9,8 +9,9 @@ topology costs (#matchings) x |params| wire bytes instead of the
 becomes a measurable collective-bytes term in the roofline.
 
 Also provides the fused consensus-distance measurement (Alg. 1 line 9) in
-the same data pass, and int8-compressed gossip with error feedback
-(beyond-paper; DeepSqueeze/ChocoSGD-style).
+the same data pass, and compressed gossip (beyond-paper;
+DeepSqueeze/ChocoSGD-style) sharing ``core/compression``'s codecs —
+int8 + error feedback, x̂-tracked top-k, shared-mask rand-k.
 """
 from __future__ import annotations
 
@@ -104,61 +105,124 @@ def gossip_fn(mesh: Mesh, worker_axes: tuple[str, ...],
 
 def gossip_compressed_fn(mesh: Mesh, worker_axes: tuple[str, ...],
                          pairs: list[list[tuple[int, int]]],
-                         weight_table: np.ndarray, param_specs):
-    """int8-compressed gossip with error feedback (beyond-paper).
+                         weight_table: np.ndarray, param_specs,
+                         *, mode: str = "int8", seed: int = 0,
+                         gamma: float = 0.25):
+    """Compressed gossip with the core codecs (beyond-paper).
 
-    The compensated update is the one ``core/compression.py`` defines
-    (and the core engines implement): each worker sends the int8 round
-    trip of z = x + e instead of x, the residual e <- z - dequant(quant(z))
-    carries to the next round (keeping the mixing unbiased over rounds),
-    and quantization uses the shared wire format — the flattened leaf
-    shard laid out per ``flat_tile_shape`` with one f32 scale per
-    (8, 1024) tile, exactly what ``kernels/quantize_block.py`` produces.
-    Wire bytes per matching drop ~4x (f32), plus the scale side-channel.
+    The updates are the ones ``core/compression.py`` defines (and the
+    core engines implement), applied per leaf shard:
 
-    Returns gossip(params, err) -> (mixed, new_err).
+    - ``mode="int8"``: each worker sends the int8 round trip of
+      z = x + e instead of x, the residual e <- z - dequant(quant(z))
+      carries to the next round, and quantization uses the shared wire
+      format — the flattened leaf shard laid out per ``flat_tile_shape``
+      with one f32 scale per (8, 1024) tile, exactly what
+      ``kernels/quantize_block.py`` produces. Wire bytes per matching
+      drop ~4x (f32), plus the scale side-channel.
+    - ``mode="topk:<k>"``: ChocoSGD x̂-tracking — the err buffer holds
+      the public copy, the wire carries the top-k innovation (k resolved
+      per leaf shard), and the mix runs damped (``gamma``) on the
+      advanced copies.
+    - ``mode="randk:<k>"``: the shared seeded mask (``seed``, the
+      caller-supplied per-round ``step`` and the leaf index pick the
+      draw — identical on every worker, so sender and receiver agree
+      without shipping indices) ships k coordinates exactly; no state
+      evolves.
+
+    Returns gossip(params, err, step) -> (mixed, new_err) — ``step`` is
+    a traced i32 round counter the caller advances every call (a reused
+    rand-k mask would freeze the un-drawn coordinates forever; int8 and
+    top-k ignore it). For topk pass the initial params as the initial
+    ``err`` (``compression.state_init``).
     """
+    codec = compression.parse_mode(mode)
+    if codec.kind == "none":
+        raise ValueError("use gossip_fn for uncompressed exchange")
     wt = jnp.asarray(weight_table)
+    skey = compression.sparsify_base_key(seed)
 
-    def body(x, err):
+    def sparse_payload(leaf, e, idx, step):
+        """(payload ŷ or innovation q, new state) for one leaf shard."""
+        zf = leaf.astype(jnp.float32).reshape(-1)
+        kk = codec.resolve_k(zf.size)
+        if codec.kind == "topk":
+            q = compression.sparsify_rows((zf - e.reshape(-1))[None],
+                                          "topk", kk)[0]
+            xhat = e.reshape(-1) + q
+            return xhat.reshape(leaf.shape), xhat.reshape(leaf.shape)
+        kst = jax.random.fold_in(skey, idx)
+        y = compression.sparsify_rows(zf[None], "randk", kk, key=kst,
+                                      step=step)[0]
+        return y.reshape(leaf.shape), e
+
+    def body(x, err, step):
         me = jax.lax.axis_index(worker_axes)
 
-        def q8(leaf, e):
-            z = leaf.astype(jnp.float32) + e
-            n = int(np.prod(z.shape))
-            q, scale = compression.quantize_flat(z.reshape(-1))
-            deq = compression.dequantize_flat(q, scale, n).reshape(leaf.shape)
-            return q, scale, z - deq, deq
+        if codec.kind == "int8":
+            def q8(leaf, e):
+                z = leaf.astype(jnp.float32) + e
+                n = int(np.prod(z.shape))
+                q, scale = compression.quantize_flat(z.reshape(-1))
+                deq = compression.dequantize_flat(q, scale,
+                                                  n).reshape(leaf.shape)
+                return q, scale, z - deq, deq
 
-        packed = jax.tree.map(q8, x, err,
-                              is_leaf=lambda l: isinstance(l, jnp.ndarray))
-        qs = jax.tree.map(lambda t: t[0], packed,
-                          is_leaf=lambda t: isinstance(t, tuple))
-        scales = jax.tree.map(lambda t: t[1], packed,
+            packed = jax.tree.map(
+                q8, x, err, is_leaf=lambda l: isinstance(l, jnp.ndarray))
+            qs = jax.tree.map(lambda t: t[0], packed,
                               is_leaf=lambda t: isinstance(t, tuple))
-        new_err = jax.tree.map(lambda t: t[2], packed,
-                               is_leaf=lambda t: isinstance(t, tuple))
-        deq_self = jax.tree.map(lambda t: t[3], packed,
-                                is_leaf=lambda t: isinstance(t, tuple))
+            scales = jax.tree.map(lambda t: t[1], packed,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+            new_err = jax.tree.map(lambda t: t[2], packed,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+            deq_self = jax.tree.map(lambda t: t[3], packed,
+                                    is_leaf=lambda t: isinstance(t, tuple))
 
+            acc = x
+            for m, perm in enumerate(pairs):
+                pq = jax.tree.map(
+                    lambda l: jax.lax.ppermute(l, worker_axes, perm=perm),
+                    qs)
+                ps = jax.tree.map(
+                    lambda l: jax.lax.ppermute(l, worker_axes, perm=perm),
+                    scales)
+                w_m = wt[m, me]
+
+                def mix(a, qn, sn, ds):
+                    yn = compression.dequantize_flat(
+                        qn, sn, int(np.prod(a.shape))).reshape(a.shape)
+                    return a + (w_m * (yn - ds)).astype(a.dtype)
+
+                acc = jax.tree.map(mix, acc, pq, ps, deq_self)
+            return acc, new_err
+
+        # sparse codecs: the masked payload rides ppermute dense (the
+        # simulated wire cost is codec.wire_bits); mixing matches the
+        # core compensated update on ŷ (rand-k) / x̂ (top-k, damped)
+        xl, treedef = jax.tree.flatten(x)
+        el = jax.tree.leaves(err)
+        ys, news = [], []
+        for idx, (leaf, e) in enumerate(zip(xl, el)):
+            y, ne = sparse_payload(leaf, e, idx, step)
+            ys.append(y)
+            news.append(ne)
+        ys = jax.tree.unflatten(treedef, ys)
+        new_err = jax.tree.unflatten(treedef, news)
+        g = gamma if codec.kind == "topk" else 1.0
         acc = x
         for m, perm in enumerate(pairs):
-            pq = jax.tree.map(
-                lambda l: jax.lax.ppermute(l, worker_axes, perm=perm), qs)
-            ps = jax.tree.map(
-                lambda l: jax.lax.ppermute(l, worker_axes, perm=perm),
-                scales)
+            yn = jax.tree.map(
+                lambda l: jax.lax.ppermute(l, worker_axes, perm=perm), ys)
             w_m = wt[m, me]
-
-            def mix(a, qn, sn, ds):
-                yn = compression.dequantize_flat(
-                    qn, sn, int(np.prod(a.shape))).reshape(a.shape)
-                return a + (w_m * (yn - ds)).astype(a.dtype)
-
-            acc = jax.tree.map(mix, acc, pq, ps, deq_self)
+            acc = jax.tree.map(
+                lambda a, ynn, ysf: a + (g * w_m * (
+                    ynn.astype(jnp.float32) - ysf.astype(jnp.float32))
+                    ).astype(a.dtype),
+                acc, yn, ys)
         return acc, new_err
 
-    return _shard_map(body, mesh, (param_specs, param_specs),
+    return _shard_map(body, mesh, (param_specs, param_specs, P()),
                       (param_specs, param_specs))
 
 

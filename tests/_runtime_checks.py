@@ -74,7 +74,7 @@ def main():
                                                 pairs, wt, spec)
     err0 = jnp.zeros_like(x)
     with mesh:
-        yc, err = jax.jit(gossip_c)(x, err0)
+        yc, err = jax.jit(gossip_c)(x, err0, jnp.int32(0))
     rel = np.linalg.norm(np.asarray(yc) - np.asarray(want)) / \
         np.linalg.norm(np.asarray(want))
     check(f"int8 gossip close (rel={rel:.4f})", rel < 0.02)
@@ -94,6 +94,33 @@ def main():
                 (blk - deq).reshape(6, 16)
     check("compressed residual == z - Q(z) (core parity)",
           np.allclose(np.asarray(err), want_err, atol=1e-7))
+
+    # ---- sparse codecs over the same collective ---------------------------
+    # rand-k: shared mask -> intermittent exact gossip; the doubly
+    # stochastic compensated update preserves the fleet mean exactly
+    gossip_rk = collectives.gossip_compressed_fn(
+        mesh, ("pod", "data"), pairs, wt, spec, mode="randk:0.25", seed=7)
+    with mesh:
+        yr, err_r = jax.jit(gossip_rk)(x, err0, jnp.int32(0))
+        yr2, _ = jax.jit(gossip_rk)(x, err0, jnp.int32(1))
+    check("randk gossip preserves mean",
+          np.allclose(np.asarray(yr).mean(0), np.asarray(x).mean(0),
+                      atol=1e-5))
+    check("randk carries no state", float(jnp.abs(err_r).max()) == 0.0)
+    check("randk mask advances with step",
+          not np.allclose(np.asarray(yr), np.asarray(yr2)))
+    # top-k: x̂-tracking — one round from x̂ = x mixes the damped exact
+    # update (innovation q = topk(x - x̂) = 0, x̂ unchanged)
+    gossip_tk = collectives.gossip_compressed_fn(
+        mesh, ("pod", "data"), pairs, wt, spec, mode="topk:0.5",
+        gamma=0.5)
+    with mesh:
+        yt, xhat = jax.jit(gossip_tk)(x, x, jnp.int32(0))
+    want_tk = x + 0.5 * (want - x)
+    check("topk gossip == damped mix of tracked copies",
+          np.allclose(np.asarray(yt), np.asarray(want_tk), atol=1e-5))
+    check("topk xhat tracks params",
+          np.allclose(np.asarray(xhat), np.asarray(x), atol=1e-7))
 
     # ---- full train step on a RING (sparse) topology ----------------------
     # (a full graph with uniform weights is exact averaging — replicas

@@ -160,3 +160,191 @@ def test_identity_mix_is_exact_noop():
     mixed, _ = compression.compressed_gossip_ref(
         x, jnp.zeros_like(x), jnp.eye(w, dtype=jnp.float32))
     np.testing.assert_array_equal(np.asarray(mixed), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# sparse codecs: parsing + wire accounting
+# ---------------------------------------------------------------------------
+
+def test_parse_mode_sparse():
+    """"topk:<k>" / "randk:<k>" parse to sparse codecs with fractional
+    (< 1) or absolute (>= 1) keep specs; a Codec passes through."""
+    c = compression.parse_mode("topk:0.1")
+    assert (c.kind, c.k, c.is_sparse) == ("topk", 0.1, True)
+    assert c.resolve_k(1000) == 100
+    assert c.mode == "topk:0.1"
+    c2 = compression.parse_mode("randk:64")
+    assert c2.resolve_k(1000) == 64
+    assert compression.parse_mode(c2) is c2
+    assert c.with_k(0.05).resolve_k(1000) == 50
+    assert not compression.parse_mode("int8").is_sparse
+    for bad in ("topk", "topk:", "topk:-1", "randk:0", "sparse:9", "fp8"):
+        with pytest.raises(ValueError, match="compress"):
+            compression.parse_mode(bad)
+
+
+def test_sparse_wire_accounting():
+    """top-k ships k (value, index) pairs; rand-k ships k values plus the
+    shared mask seed, so it is ~2x cheaper at equal k; both ratios are
+    monotone in k (tightening k always shrinks the payload)."""
+    p = 7300
+    topk = compression.parse_mode("topk:0.1")
+    k = topk.resolve_k(p)
+    assert topk.wire_bits(p) == k * (compression.FP32_BITS
+                                     + compression.INDEX_BITS)
+    randk = compression.parse_mode("randk:0.1")
+    assert randk.wire_bits(p) == k * compression.FP32_BITS \
+        + compression.SEED_BITS
+    assert randk.wire_ratio(p) > topk.wire_ratio(p)
+    assert compression.wire_ratio(p, "topk:0.1") >= 4.0   # the CI gate
+    ratios = [compression.wire_ratio(p, f"topk:{f}")
+              for f in (0.5, 0.25, 0.125, 0.0625)]
+    assert ratios == sorted(ratios)
+    # module-level helpers agree with the codec methods
+    assert compression.wire_bits(p, "randk:0.1") == randk.wire_bits(p)
+
+
+# ---------------------------------------------------------------------------
+# sparse round trips: kernel vs oracle on the engine layout
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", [96, 2762, 8192])
+def test_sparsify_rows_kernel_matches_oracle(p):
+    """The Pallas mask-and-pack path and the jnp oracle are pure selects
+    of the same mask — outputs bit-identical, exactly k kept per row."""
+    kkey = compression.sparsify_base_key(7)
+    z = jax.random.normal(KEY, (5, p)) * 0.3
+    k = max(p // 10, 1)
+    for kind, kw in (("topk", {}),
+                     ("randk", dict(key=kkey, step=jnp.int32(3)))):
+        want = compression.sparsify_rows(z, kind, k, **kw)
+        got = compression.sparsify_rows(z, kind, k, use_kernel=True,
+                                        interpret=True, **kw)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=kind)
+        assert (np.asarray(want != 0).sum(axis=1) <= k).all()
+
+
+def test_sparsify_topk_keeps_largest():
+    """Every kept coordinate dominates every dropped one in |z|."""
+    z = jax.random.normal(KEY, (3, 500))
+    y = np.asarray(compression.sparsify_rows(z, "topk", 50))
+    za = np.abs(np.asarray(z))
+    for r in range(3):
+        kept = za[r][y[r] != 0]
+        dropped = za[r][y[r] == 0]
+        assert len(kept) == 50
+        assert kept.min() >= dropped.max()
+
+
+def test_sparsify_block_kernel_parity():
+    """sparsify_block_2d == the ref.py oracle on values AND per-tile
+    survivor counts (the pack accounting)."""
+    from repro.kernels import ref
+    from repro.kernels.sparsify_block import sparsify_block_2d
+    x = jax.random.normal(KEY, (8, 1024))
+    gate = jnp.abs(x)
+    t = 0.7
+    yk, nk = sparsify_block_2d(x, gate, t, interpret=True)
+    yr, nr = ref.sparsify_block_ref(x, gate, t)
+    np.testing.assert_array_equal(np.asarray(yk), np.asarray(yr))
+    np.testing.assert_array_equal(np.asarray(nk), np.asarray(nr))
+    assert int(np.asarray(nk).sum()) == int((np.abs(np.asarray(x)) >= t).sum())
+
+
+def test_randk_mask_shared_and_step_varied():
+    """The rand-k draw is one shared mask per step (every row keeps the
+    same coordinates — what lets the wire ship no indices) and changes
+    with the step."""
+    kkey = compression.sparsify_base_key(3)
+    z = jnp.ones((4, 400))
+    y1 = np.asarray(compression.sparsify_rows(z, "randk", 40, key=kkey,
+                                              step=jnp.int32(5)))
+    y2 = np.asarray(compression.sparsify_rows(z, "randk", 40, key=kkey,
+                                              step=jnp.int32(5)))
+    y3 = np.asarray(compression.sparsify_rows(z, "randk", 40, key=kkey,
+                                              step=jnp.int32(6)))
+    np.testing.assert_array_equal(y1, y2)
+    assert not np.array_equal(y1, y3)
+    assert (np.all(y1 == y1[0], axis=0)).all()   # same mask on every row
+
+
+# ---------------------------------------------------------------------------
+# sparse codecs: the convergence properties the designs exist for
+# ---------------------------------------------------------------------------
+
+def _sparse_mix(x0, mix, kind, k, error_feedback, steps=400, gamma=0.25):
+    key = compression.sparsify_base_key(0)
+    flat = x0
+    err = compression.state_init(x0, kind, error_feedback)
+    for t in range(steps):
+        flat, err = compression.compressed_gossip_ref(
+            flat, err, mix, error_feedback=error_feedback, kind=kind,
+            k=k, key=key, step=jnp.int32(t), gamma=gamma)
+    return np.asarray(flat)
+
+
+def test_topk_xhat_tracking_converges_naive_freezes():
+    """x̂-tracked top-k contracts to exact consensus (the ChocoSGD form;
+    a damped step on tracked public copies), while naive top-k (EF off)
+    never ships small coordinates, so they stay frozen at their initial
+    values — the property the x̂ state exists for."""
+    w, p, k = 8, 600, 60
+    rng = np.random.default_rng(0)
+    x0 = jnp.asarray(rng.normal(size=(w, p)), jnp.float32)
+    mix = jnp.asarray(
+        topo.mixing_matrix_metropolis(topo.ring_topology(w)), jnp.float32)
+    target = np.asarray(x0).mean(0)
+
+    tracked = _sparse_mix(x0, mix, "topk", k, True)
+    assert np.abs(tracked - target).max() < 1e-3
+    naive = _sparse_mix(x0, mix, "topk", k, False, steps=100)
+    # small coordinates never go on the wire -> rows stay apart
+    assert np.abs(naive - target[None]).max() > 0.5
+
+
+def test_randk_shared_mask_converges():
+    """Shared-mask rand-k is intermittent exact gossip: every coordinate
+    is drawn eventually, so the iterates contract to the true mean with
+    no state at all."""
+    w, p, k = 8, 600, 120
+    rng = np.random.default_rng(1)
+    x0 = jnp.asarray(rng.normal(size=(w, p)), jnp.float32)
+    mix = jnp.asarray(
+        topo.mixing_matrix_metropolis(topo.ring_topology(w)), jnp.float32)
+    target = np.asarray(x0).mean(0)
+    out = _sparse_mix(x0, mix, "randk", k, True)
+    assert np.abs(out - target).max() < 1e-3
+
+
+@pytest.mark.parametrize("kind,k", [("topk", 80), ("randk", 80)])
+def test_sparse_gossip_preserves_mean(kind, k):
+    """Doubly stochastic mixing preserves the fleet average exactly for
+    both sparse forms (x̂-tracked and shared-mask)."""
+    w, p = 6, 400
+    x = jax.random.normal(KEY, (w, p))
+    err = compression.state_init(x, kind, True)
+    mix = jnp.asarray(
+        topo.mixing_matrix_uniform(topo.ring_topology(w)), jnp.float32)
+    mixed, _ = compression.compressed_gossip_ref(
+        x, err, mix, kind=kind, k=k,
+        key=compression.sparsify_base_key(2), step=jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(mixed.mean(0)),
+                               np.asarray(x.mean(0)), atol=1e-5)
+
+
+def test_sparse_pair_preserves_sum():
+    """The pairwise (AD-PSGD) forms preserve x_i + x_j for both sparse
+    codecs, like the int8 exchange."""
+    p = 500
+    xi = jax.random.normal(KEY, (p,))
+    xj = jax.random.normal(jax.random.fold_in(KEY, 3), (p,))
+    for kind in ("topk", "randk"):
+        s0 = compression.state_init(jnp.stack([xi, xj]), kind, True)
+        xi2, xj2, *_ = compression.compressed_pair_ref(
+            xi, xj, s0[0], s0[1], kind=kind, k=50,
+            key=compression.sparsify_base_key(4), step=jnp.int32(9),
+            gamma=0.25)
+        np.testing.assert_allclose(np.asarray(xi2 + xj2),
+                                   np.asarray(xi + xj), atol=1e-5,
+                                   err_msg=kind)

@@ -138,6 +138,158 @@ def test_prune_dead_repairs_connectivity():
     assert topo.is_connected(pruned[np.ix_(live, live)])
 
 
+# ---------------------------------------------------------------------------
+# compression-aware planning (wire_ratio scales the Eq. 10 comm term)
+# ---------------------------------------------------------------------------
+
+def _decide(ctl, tr, mu, beta, wire_ratio, sigma=1.0, tau_max=None):
+    return ctl.decide(mu, beta, tr, f1=2.0, smooth_l=1.0, sigma=sigma,
+                      eta=0.1, rounds=100, wire_ratio=wire_ratio)
+
+
+def test_wire_ratio_shifts_tau_star_monotonically():
+    """Satellite property: the comm term scales with 1/wire_ratio, so
+    LOWERING the wire ratio (more expensive wire) monotonically shifts
+    tau* toward more local steps — the pace setter amortizes each
+    costlier exchange over more compute — and no point of the sweep
+    yields a disconnected topology or a busted consensus budget."""
+    n = 10
+    mu, beta, x = _setup(n, seed=4)
+    base = topo.full_topology(n)
+    taus, links = [], []
+    for ratio in (16.0, 8.0, 4.0, 2.0, 1.0, 0.5):      # comm cost rising
+        ctl = AdaptiveController(base, tau_max=200)
+        tr = _tracker(n, base, x, d_scale=10.0)
+        # large sigma -> the Remark 2 theory term is tiny, so tau* is
+        # driven by the comm floor the wire ratio moves
+        dec = _decide(ctl, tr, mu, beta, ratio, sigma=3.0)
+        assert topo.is_connected(dec.adj)
+        assert tr.satisfies_budget(dec.adj)
+        assert dec.wire_ratio == ratio
+        taus.append(dec.tau_pace)
+    assert taus == sorted(taus), taus            # non-decreasing with cost
+    assert taus[0] < taus[-1]                    # and actually moves
+
+
+@given(st.integers(4, 12), st.integers(0, 2**31 - 1),
+       st.sampled_from([2.0, 4.0, 8.0, 16.0]))
+@settings(max_examples=15, deadline=None)
+def test_wire_ratio_monotonicity_property(n, seed, hi):
+    """For any heterogeneity draw: a cheaper wire never forces MORE
+    local steps, and the decided topology stays connected at both ends
+    of the ratio."""
+    mu, beta, x = _setup(n, seed)
+    base = topo.full_topology(n)
+    outs = []
+    for ratio in (1.0, hi):
+        ctl = AdaptiveController(base, tau_max=100)
+        tr = _tracker(n, base, x, d_scale=10.0)
+        dec = _decide(ctl, tr, mu, beta, ratio, sigma=3.0)
+        assert topo.is_connected(dec.adj)
+        outs.append(dec)
+    assert outs[1].tau_pace <= outs[0].tau_pace
+
+
+def test_decision_responds_to_wire_ratio():
+    """Acceptance: the planned (tau, topology) actually changes when the
+    codec's wire ratio does — the planner is not compression-blind."""
+    n = 10
+    mu, beta, x = _setup(n, seed=6)
+    beta *= 10.0                                  # comm-dominated cluster
+    outs = []
+    for ratio in (1.0, 8.0):
+        ctl = AdaptiveController(topo.full_topology(n), tau_max=100)
+        tr = _tracker(n, topo.full_topology(n), x, d_scale=1e3)
+        outs.append(_decide(ctl, tr, mu, beta, ratio, sigma=3.0))
+    a, b = outs
+    assert not (np.array_equal(a.taus, b.taus)
+                and np.array_equal(a.adj, b.adj))
+    # the cheaper wire lowered the predicted round time
+    assert b.round_time < a.round_time
+
+
+# ---------------------------------------------------------------------------
+# the replan-cadence sparsity feedback path (SparsityScheduler)
+# ---------------------------------------------------------------------------
+
+def test_sparsity_scheduler_halves_and_floors():
+    from repro.core.compression import parse_mode
+    from repro.core.controller import SparsityScheduler
+    s = SparsityScheduler(parse_mode("topk:0.4"), floor_frac=0.25)
+    assert s.step(10.0).k == 0.4          # first observation: anchor only
+    assert s.step(9.0).k == 0.4           # not halved yet
+    assert s.step(4.9).k == 0.2           # consensus halved -> k halves
+    assert s.step(4.0).k == 0.2           # hysteresis re-anchored at 4.9
+    assert s.step(2.0).k == 0.1           # floor 0.4 * 0.25
+    assert s.step(0.1).k == 0.1           # never below the floor
+    assert s.step(0.0).k == 0.1           # degenerate signals ignored
+    assert s.step(float("nan")).k == 0.1
+
+
+def test_sparsity_scheduler_absolute_spec_stays_absolute():
+    """Halving an absolute keep count must never cross below 1.0 — that
+    would silently reinterpret k as a fraction of P and EXPAND the
+    payload instead of tightening it."""
+    from repro.core.compression import parse_mode
+    from repro.core.controller import SparsityScheduler
+    s = SparsityScheduler(parse_mode("topk:3"), floor_frac=0.125)
+    s.step(100.0)
+    ks = [s.step(100.0 * 0.4 ** i).k for i in range(1, 6)]
+    assert all(k >= 1.0 for k in ks), ks
+    assert ks[-1] == 1.0
+    # resolved counts only ever shrink (wire ratio only ever grows)
+    res = [parse_mode("topk:3").with_k(k).resolve_k(1000) for k in ks]
+    assert res == sorted(res, reverse=True) and res[-1] >= 1
+
+
+def test_sparsity_scheduler_rejects_non_sparse():
+    from repro.core.compression import parse_mode
+    from repro.core.controller import SparsityScheduler
+    import pytest
+    with pytest.raises(ValueError, match="sparse"):
+        SparsityScheduler(parse_mode("int8"))
+
+
+def test_fedhp_strategy_learns_wire_ratio_and_tightens_k():
+    """End-to-end feedback path at the strategy level: observe() feeds
+    the engine's wire ratio into the next decide(), and with tighten_k
+    the plan's codec halves k as the observed consensus distances
+    shrink (replay identical in both engines — the observations are all
+    host-side here)."""
+    from dataclasses import replace as dreplace
+    from repro.configs.base import FedHPConfig
+    from repro.core.algorithms import FedHPStrategy
+    n = 6
+    cfg = FedHPConfig(num_workers=n, rounds=50, compress="topk:0.4",
+                      tighten_k=True, sparse_k_floor=0.25,
+                      replan_every=1)
+    base = topo.full_topology(n)
+    strat = FedHPStrategy(cfg, base)
+    mu, beta, x = _setup(n, seed=7)
+    p0 = strat.plan(0)
+    assert p0.codec.k == 0.4
+    dists = pairwise_distances(x)
+    ks = []
+    for h in range(6):
+        scale = 0.4 ** h                 # consensus shrinking fast
+        strat.observe(h, adj=base, mu=mu, beta=beta,
+                      edge_dist=dists * scale, update_norms=[1e3],
+                      smooth_l=1.0, sigma=1.0, loss=2.0, wire_ratio=5.0)
+        plan = strat.plan(h + 1)
+        ks.append(plan.codec.k)
+    assert strat.last_decision.wire_ratio == 5.0   # learned, not assumed
+    assert ks[-1] == 0.1                           # halved to the floor
+    assert ks == sorted(ks, reverse=True)          # only ever tightens
+    # the flag turns the learning off
+    cfg2 = dreplace(cfg, planner_wire_aware=False)
+    strat2 = FedHPStrategy(cfg2, base)
+    strat2.observe(0, adj=base, mu=mu, beta=beta, edge_dist=dists,
+                   update_norms=[1e3], smooth_l=1.0, sigma=1.0, loss=2.0,
+                   wire_ratio=5.0)
+    strat2.plan(1)
+    assert strat2.last_decision.wire_ratio == 1.0
+
+
 def test_controller_with_failures():
     n = 8
     mu, beta, x = _setup(n, seed=5)

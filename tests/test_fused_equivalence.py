@@ -180,6 +180,91 @@ def test_compressed_vmapped_seeds_match_independent_runs():
 
 
 # ---------------------------------------------------------------------------
+# sparsified gossip (top-k / rand-k) through both engines
+# ---------------------------------------------------------------------------
+
+# sparse codecs at a 25% keep fraction: x̂-tracked top-k and shared-mask
+# rand-k (codec state rides the fused scan exactly like int8 residuals)
+TKCFG = replace(CFG, compress="topk:0.25")
+RKCFG = replace(CFG, compress="randk:0.25")
+
+
+def test_sparse_fused_matches_reference_smoke():
+    """Fast gate for the sparse paths: D-PSGD, 6 rounds, no churn."""
+    _assert_equivalent(*_pair("dpsgd", None, rounds=6, cfg=TKCFG),
+                       device_tol=COMPRESSED_TOL)
+    _assert_equivalent(*_pair("dpsgd", None, rounds=6, cfg=RKCFG),
+                       device_tol=COMPRESSED_TOL)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("churn", [None, SCHED], ids=["nochurn", "churn"])
+@pytest.mark.parametrize("cfg", [TKCFG, RKCFG], ids=["topk", "randk"])
+@pytest.mark.parametrize("algo", ["dpsgd", "ldsgd", "fedhp"])
+def test_sparse_fused_matches_reference(algo, cfg, churn):
+    """The sparse updates (Pallas mask-and-pack kernel + codec state in
+    the fused scan vs jnp oracle + eager state in the reference) stay
+    interchangeable across strategies ± churn."""
+    _assert_equivalent(*_pair(algo, churn, cfg=cfg),
+                       device_tol=COMPRESSED_TOL)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("cfg", [TKCFG, RKCFG], ids=["topk", "randk"])
+def test_sparse_no_error_feedback_matches_too(cfg):
+    """Naive sparse mixing (EF off: no x̂ tracking / no state) is a
+    distinct code path — the engines must still agree on it."""
+    _assert_equivalent(*_pair("dpsgd", SCHED,
+                              cfg=replace(cfg, error_feedback=False)),
+                       device_tol=COMPRESSED_TOL)
+
+
+@pytest.mark.slow
+def test_tighten_k_fused_matches_reference():
+    """The replan-cadence k-tightening feedback path (plan.codec) must
+    replay identically in both engines: the tightened codec changes the
+    Eq. 10 wire charge, so any divergence shows up in the bit-exact
+    round_time/cumulative_time columns immediately."""
+    cfg = replace(CFG, compress="topk:0.5", tighten_k=True,
+                  sparse_k_floor=0.125)
+    _assert_equivalent(*_pair("fedhp", None, rounds=12, cfg=cfg),
+                       device_tol=COMPRESSED_TOL)
+
+
+@pytest.mark.slow
+def test_sparse_vmapped_seeds_match_independent_runs():
+    """Codec state is per-lane while the rand-k mask stream is shared
+    (cfg.seed-derived): a vmapped sparse scan equals independent runs."""
+    import jax.numpy as jnp
+    seeds = (11, 12)
+    for cfg in (TKCFG, RKCFG):
+        batched = run_algorithm("dpsgd", cfg, non_iid_p=0.4, rounds=6,
+                                fused=True, seeds=jnp.asarray(seeds))
+        for s, hv in zip(seeds, batched):
+            (hi,) = run_algorithm("dpsgd", cfg, non_iid_p=0.4, rounds=6,
+                                  fused=True, seeds=jnp.asarray([s]))
+            a, b = hv.as_arrays(), hi.as_arrays()
+            for k in EXACT:
+                np.testing.assert_array_equal(a[k], b[k],
+                                              err_msg=f"{s}:{k}")
+            for k, tol in COMPRESSED_TOL.items():
+                np.testing.assert_allclose(a[k], b[k], rtol=tol, atol=tol,
+                                           err_msg=f"{s}:{k}")
+
+
+def test_sparse_cuts_comm_time_per_codec():
+    """Eq. 10 charges each codec's own wire ratio: rand-k (no indices on
+    the wire) runs a strictly faster clock than top-k at the same k,
+    which beats uncompressed."""
+    h_u = run_algorithm("dpsgd", CFG, non_iid_p=0.4, rounds=6)
+    h_t = run_algorithm("dpsgd", TKCFG, non_iid_p=0.4, rounds=6)
+    h_r = run_algorithm("dpsgd", RKCFG, non_iid_p=0.4, rounds=6)
+    u, t, r = (h.as_arrays() for h in (h_u, h_t, h_r))
+    assert (t["round_time"] < u["round_time"]).all()
+    assert (r["round_time"] < t["round_time"]).all()
+
+
+# ---------------------------------------------------------------------------
 # AD-PSGD: fused event-driven scan vs the reference event loop
 # ---------------------------------------------------------------------------
 
@@ -230,6 +315,26 @@ def test_adpsgd_compressed_no_error_feedback_matches_too():
     cfg = replace(CCFG, error_feedback=False)
     _assert_adpsgd_equivalent(*_pair("adpsgd", SCHED, cfg=cfg),
                               device_tol=COMPRESSED_TOL)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("churn", [None, SCHED], ids=["nochurn", "churn"])
+@pytest.mark.parametrize("cfg", [TKCFG, RKCFG], ids=["topk", "randk"])
+def test_adpsgd_sparse_fused_matches_reference(cfg, churn):
+    """Sparse pairwise exchange: the x̂-tracked / shared-mask event
+    updates (Pallas kernels + per-worker codec state in the scan carry)
+    stay interchangeable with the reference event loop — including the
+    per-event rand-k mask stream indexed by the global event counter."""
+    _assert_adpsgd_equivalent(*_pair("adpsgd", churn, cfg=cfg),
+                              device_tol=COMPRESSED_TOL)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("cfg", [TKCFG, RKCFG], ids=["topk", "randk"])
+def test_adpsgd_sparse_no_error_feedback_matches_too(cfg):
+    _assert_adpsgd_equivalent(
+        *_pair("adpsgd", SCHED, cfg=replace(cfg, error_feedback=False)),
+        device_tol=COMPRESSED_TOL)
 
 
 @pytest.mark.slow

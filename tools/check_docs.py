@@ -30,6 +30,10 @@ AUDITED_MODULES = [
     "src/repro/core/compression.py",
     "src/repro/core/topology.py",
     "src/repro/core/controller.py",
+    "src/repro/core/consensus.py",
+    "src/repro/core/algorithms.py",
+    "src/repro/kernels/sparsify_block.py",
+    "src/repro/kernels/quantize_block.py",
 ]
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
