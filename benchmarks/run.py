@@ -13,6 +13,10 @@
   sparse   top-k / rand-k sparsified gossip vs uncompressed: wire bytes,
            accuracy parity (CI-gated via --smoke: top-k >= 4x wire at
            <= 1% accuracy drift)
+  sparse_gossip  edge-list gossip (cfg.gossip="sparse") vs the dense
+           [W, W] matrix: small-W accuracy parity (<= 0.1%) plus a
+           W=2048 ring leg the dense engine cannot reach (CI-gated via
+           --smoke: wall-clock + memory budgets)
   adpsgd   fused event-driven AD-PSGD vs the reference event loop:
            events/sec + accuracy parity (CI-gated via --smoke: >= 5x)
 
@@ -321,6 +325,81 @@ def bench_sparse(rows, full):
             FAILURES.append(f"top-k accuracy drift {drift:.4f} > 1%")
 
 
+def bench_sparse_gossip(rows, full):
+    """Edge-list gossip (cfg.gossip="sparse") vs the dense [W, W] mixing
+    matrix: (1) small-W accuracy parity on the fused engine — the two
+    representations must agree to <= 0.1% final accuracy; (2) a large-W
+    scaling leg the dense path cannot reach — the dense fused engine
+    materializes O(W^2 P) neighbor buffers (122 TB at W=2048 on the
+    smoke model), while the sparse engine runs O(E P) through the
+    gather-mix-scatter kernel. In --smoke mode the run fails (exit 1)
+    if parity drifts > 0.1%, the W=2048 ring exceeds the per-round
+    wall-clock budget, or peak RSS exceeds the memory budget."""
+    import resource
+
+    from repro.core import topology as topo
+    from repro.core.experiment import run_algorithm
+
+    # ---- small-W parity: dense vs sparse fused ---------------------------
+    cfg = base_cfg(full)
+    rounds = 30 if SMOKE else (60 if not full else 150)
+    if SMOKE:
+        cfg = replace(cfg, num_workers=8)
+    cfg = replace(cfg, base_topology="ring")
+    hs = {}
+    for gossip in ("dense", "sparse"):
+        c = replace(cfg, gossip=gossip)
+        hs[gossip] = run_algorithm("dpsgd", c, non_iid_p=0.4, rounds=rounds,
+                                   spread=SPREAD, fused=True)
+        emit(rows, "sparse_gossip", f"final_acc[{gossip}]",
+             round(hs[gossip].final_accuracy, 4))
+    drift = abs(hs["sparse"].final_accuracy - hs["dense"].final_accuracy)
+    emit(rows, "sparse_gossip", "acc_drift_sparse_vs_dense",
+         round(drift, 5))
+
+    # ---- large-W scaling: W where dense is out of reach ------------------
+    big_w = 2048 if (SMOKE or full) else 512
+    big_rounds = 3
+    big = FedHPConfig(num_workers=big_w, rounds=big_rounds, tau_init=2,
+                      tau_max=4, lr=0.1, batch_size=16, seed=5,
+                      base_topology="ring", gossip="sparse")
+    t0 = time.perf_counter()
+    h_big = run_algorithm("dpsgd", big, non_iid_p=0.1, rounds=big_rounds,
+                          fused=True, num_samples=32 * big_w)
+    wall = time.perf_counter() - t0
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    edges = topo.edges_from_adj(topo.ring_topology(big_w)).shape[0]
+    emit(rows, "sparse_gossip", "big_w", big_w)
+    emit(rows, "sparse_gossip", "big_edges", edges)
+    emit(rows, "sparse_gossip", "big_seconds_per_round",
+         round(wall / big_rounds, 2))
+    emit(rows, "sparse_gossip", "big_peak_rss_mb", round(rss_mb, 0))
+    emit(rows, "sparse_gossip", "big_final_acc",
+         round(h_big.final_accuracy, 4))
+    # the dense fused path at this W would vmap a [W, R, C] neighbor
+    # buffer per worker: O(W^2 P) f32 — emit the would-be footprint
+    params = 7300  # smoke MLP flat size (compression.flat_tile_shape)
+    emit(rows, "sparse_gossip", "dense_neighbor_buffer_gb",
+         round(big_w * big_w * params * 4 / 2**30, 0))
+
+    if SMOKE:
+        if drift > 1e-3:
+            FAILURES.append(
+                f"sparse gossip accuracy drift {drift:.4f} > 0.1%")
+        if wall / big_rounds > 60.0:
+            FAILURES.append(
+                f"sparse gossip W={big_w} at {wall / big_rounds:.1f}"
+                " s/round > 60 s budget")
+        if rss_mb > 6144:
+            FAILURES.append(
+                f"sparse gossip W={big_w} peak RSS {rss_mb:.0f} MB "
+                "> 6 GB budget")
+        if h_big.final_accuracy < 0.5:
+            FAILURES.append(
+                f"sparse gossip W={big_w} failed to learn "
+                f"(acc {h_big.final_accuracy:.3f})")
+
+
 def bench_adpsgd(rows, full):
     """Fused event-driven AD-PSGD (core/fused.run_adpsgd_fused) vs the
     reference event loop on the smoke shape: identical event schedule
@@ -404,6 +483,7 @@ BENCHES = {
     "fused": bench_fused,
     "compressed": bench_compressed,
     "sparse": bench_sparse,
+    "sparse_gossip": bench_sparse_gossip,
     "adpsgd": bench_adpsgd,
 }
 

@@ -181,6 +181,14 @@ class FedHPConfig:
     # otherwise; top-k ships value+index pairs, rand-k values + a shared
     # mask seed). Eq. 10 charges comm time / the codec's wire ratio.
     compress: str = "none"    # "none" | "int8" | "topk:<k>" | "randk:<k>"
+    # gossip representation: "dense" mixes through the [W, W] matrix
+    # (O(W^2 P) per round — fine to ~hundreds of workers), "sparse"
+    # mixes over the round topology's edge list (O(E P):
+    # jax.ops.segment_sum in the reference engine, the
+    # kernels/gossip_edges.py gather-mix-scatter kernel in the fused
+    # engine). Same host-side control plane either way; device
+    # trajectories agree to summation-order float drift (<= 1e-5).
+    gossip: str = "dense"     # "dense" | "sparse"
     # error feedback: carry the per-worker compression residual into the
     # next round's payload (keeps compressed mixing unbiased); False ==
     # naive compressed mixing (stalls at the int8 step floor / freezes

@@ -387,11 +387,21 @@ def compress_decompress(flat, err, *, error_feedback: bool = True,
     return yhat, new_err
 
 
+def edge_mix_delta(v, src, dst, w, num_workers: int):
+    """Sparse ``(W @ v - v)``: for a row-stochastic mixing matrix the
+    mixing delta is ``sum_{j != i} W_ij (v_j - v_i)``, computable from
+    directed edges ``(src, dst, w)`` alone via ``segment_sum`` — O(E P)
+    instead of the dense tensordot's O(W^2 P). ``num_workers`` must be
+    static (it sizes the scatter)."""
+    delta = w.astype(jnp.float32)[:, None] * (v[src] - v[dst])
+    return jax.ops.segment_sum(delta, dst, num_segments=num_workers)
+
+
 def compressed_gossip_ref(flat, err, mix, *, error_feedback: bool = True,
                           kind: str = "int8", k: int = 0, key=None,
                           step=None, gamma: float = 1.0,
                           use_kernel: bool = False,
-                          interpret: bool = False):
+                          interpret: bool = False, edges=None):
     """One compressed gossip round on the flattened [W, P] params — the
     jnp reference the engines and tests share, for any codec.
 
@@ -417,19 +427,28 @@ def compressed_gossip_ref(flat, err, mix, *, error_feedback: bool = True,
     tests/test_compression.py for the convergent-vs-naive property).
     Both forms preserve the fleet average exactly for doubly stochastic
     W and are exact no-ops through an identity mix.
+
+    ``edges=(src, dst, w)`` switches the mixing delta to the sparse
+    edge-list form (``edge_mix_delta``; pass ``mix=None``) — the same
+    compensated update, O(E P) instead of O(W^2 P).
     """
+    def mix_delta(v):
+        if edges is not None:
+            return edge_mix_delta(v, *edges, flat.shape[0])
+        return jnp.tensordot(mix, v, axes=1) - v
+
     if kind == "topk" and error_feedback:
         q = sparsify_rows(flat - err, "topk", k, use_kernel=use_kernel,
                           interpret=interpret)
         xhat = err + q
-        mixed = flat + gamma * (jnp.tensordot(mix, xhat, axes=1) - xhat)
+        mixed = flat + gamma * mix_delta(xhat)
         return mixed, xhat
     yhat, new_err = compress_decompress(flat, err,
                                         error_feedback=error_feedback,
                                         kind=kind, k=k, key=key, step=step,
                                         use_kernel=use_kernel,
                                         interpret=interpret)
-    mixed = flat + (jnp.tensordot(mix, yhat, axes=1) - yhat)
+    mixed = flat + mix_delta(yhat)
     return mixed, new_err
 
 

@@ -35,6 +35,7 @@ from repro.core import compression
 from repro.core import topology as topo
 from repro.core.algorithms import Strategy
 from repro.core.consensus import pairwise_distances
+from repro.kernels import ref as kernel_ref
 from repro.data.synthetic import Dataset
 from repro.simulation.cluster import SimCluster
 from repro.simulation.model import accuracy, classifier_loss, init_classifier
@@ -130,6 +131,26 @@ def _gossip(stacked, mix):
     return jax.tree.map(
         lambda leaf: jnp.tensordot(mix, leaf, axes=1).astype(leaf.dtype),
         stacked)
+
+
+@jax.jit
+def _gossip_edges(flat, src, dst, w):
+    """Sparse Eq. 5 on the flattened [W, P] matrix: the ``segment_sum``
+    jnp oracle (``kernels/ref.gossip_edges_ref``) over directed edges —
+    the dense ``_gossip``'s twin for ``cfg.gossip == "sparse"``. Retraces
+    per distinct edge count; the fused engine pads to a static E_max."""
+    return kernel_ref.gossip_edges_ref(flat, src, dst, w)
+
+
+@partial(jax.jit, static_argnames=("kind", "k", "error_feedback"))
+def _gossip_compressed_edges(flat, err, src, dst, w, key, step, gamma, *,
+                             kind: str, k: int, error_feedback: bool):
+    """Compressed sparse Eq. 5: ``_gossip_compressed`` with the mixing
+    delta computed from directed edges (``compression.edge_mix_delta``)
+    instead of a dense matrix — same codecs, same compensated update."""
+    return compression.compressed_gossip_ref(
+        flat, err, None, error_feedback=error_feedback, kind=kind, k=k,
+        key=key, step=step, gamma=gamma, edges=(src, dst, w))
 
 
 def _blend_joined(stacked, keep, w):
@@ -327,6 +348,7 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
     hist = History()
     clock = 0.0
     needs_cross = strategy.name == "pens"
+    sparse_gossip = cfg.gossip == "sparse"
     for h in range(rounds):
         alive = cluster.advance_round(h)
         joined = cluster.last_joined
@@ -390,19 +412,38 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
 
         # --- gossip aggregation (Eq. 5-6), optionally compressed ---
         if adj.sum() > 0:
-            mixfn = (topo.mixing_matrix_metropolis if mixing == "metropolis"
-                     else topo.mixing_matrix_uniform)
-            mix = jnp.asarray(mixfn(adj), jnp.float32)
-            if compress:
+            if sparse_gossip:
+                # edge-list path: per-edge weights from degrees alone
+                # (bit-identical to the dense matrices' off-diagonals),
+                # mixing via segment_sum — no [W, W] matrix materialized
+                e = topo.edges_from_adj(adj)
+                ew = topo.edge_mixing_weights(e, n, mixing)
+                src, dst, ws = map(jnp.asarray, topo.directed_edges(e, ew))
                 flat = _flatten_workers(stacked)
-                mixed, err = _gossip_compressed(
-                    flat, err, mix, skey, jnp.int32(h),
-                    jnp.float32(cfg.sparse_gamma),
-                    kind=rcodec.kind, k=rcodec.resolve_k(p_model),
-                    error_feedback=cfg.error_feedback)
+                if compress:
+                    mixed, err = _gossip_compressed_edges(
+                        flat, err, src, dst, ws, skey, jnp.int32(h),
+                        jnp.float32(cfg.sparse_gamma),
+                        kind=rcodec.kind, k=rcodec.resolve_k(p_model),
+                        error_feedback=cfg.error_feedback)
+                else:
+                    mixed = _gossip_edges(flat, src, dst, ws)
                 stacked = _unflatten(mixed, stacked)
             else:
-                stacked = _gossip(stacked, mix)
+                mixfn = (topo.mixing_matrix_metropolis
+                         if mixing == "metropolis"
+                         else topo.mixing_matrix_uniform)
+                mix = jnp.asarray(mixfn(adj), jnp.float32)
+                if compress:
+                    flat = _flatten_workers(stacked)
+                    mixed, err = _gossip_compressed(
+                        flat, err, mix, skey, jnp.int32(h),
+                        jnp.float32(cfg.sparse_gamma),
+                        kind=rcodec.kind, k=rcodec.resolve_k(p_model),
+                        error_feedback=cfg.error_feedback)
+                    stacked = _unflatten(mixed, stacked)
+                else:
+                    stacked = _gossip(stacked, mix)
 
         # --- measurements (Alg. 1 lines 4-5, 9-10) ---
         losses, accs, ls, sigs, upds = _measure(stacked, prev, ex, ey, px, py)

@@ -62,7 +62,8 @@ def run_algorithm(algorithm: str, cfg: FedHPConfig, *, non_iid_p: float = 0.1,
                   fail_at: dict | None = None, spread: float = 1.0,
                   churn: ChurnSchedule | None = None,
                   time_budget: float | None = None,
-                  fused: bool = False, seeds=None):
+                  fused: bool = False, seeds=None,
+                  num_samples: int = 6000):
     """Run one (algorithm, non-IID level) cell and return its History.
 
     ``fused=True`` routes the run through the scan-based engines
@@ -70,14 +71,16 @@ def run_algorithm(algorithm: str, cfg: FedHPConfig, *, non_iid_p: float = 0.1,
     ``core.fused.run_adpsgd_fused`` for the event-driven AD-PSGD) —
     equivalent trajectories, far fewer host round trips; ``seeds``
     (fused only) batches S experiments through one vmapped scan and
-    returns ``list[History]``.
+    returns ``list[History]``. ``num_samples`` sizes the synthetic
+    dataset — raise it for large-W runs so every worker shard stays
+    non-empty.
     """
     if seeds is not None and not fused:
         raise ValueError("seeds batching requires fused=True")
     cfg = replace(cfg, algorithm=algorithm)
     train, tx, ty, shards, cluster = setup_experiment(
         cfg, non_iid_p=non_iid_p, fail_at=fail_at, spread=spread,
-        churn=churn, rounds=rounds)
+        churn=churn, rounds=rounds, num_samples=num_samples)
     if algorithm == "adpsgd":
         if fused:
             from repro.core.fused import run_adpsgd_fused

@@ -17,6 +17,13 @@ and ``run_adpsgd``.
 - Gossip (Eq. 5-6) runs through the Pallas ``gossip_mix_2d`` kernel on
   the flattened [W, P] parameter matrix; the kernel's padding shim means
   P need not be a tile multiple, so real model sizes work.
+- ``cfg.gossip == "sparse"`` swaps the dense [W, W] mixing for the
+  edge-list path: per-round directed edge arrays (padded to a static
+  E_max with zero-weight no-op edges) ride the scan instead of [K, W, W]
+  mixing matrices, and the mix runs through the
+  ``kernels/gossip_edges.py`` gather-mix-scatter kernel — O(E P) per
+  round instead of O(W² P), which is what lets W scale past the dense
+  wall (composes with churn masks, every codec, and ``seeds=``).
 - Churn masks (alive / joined / donor weights) become traced arrays
   threaded through the scan — join re-init, metric masking and mixing all
   happen on device. The schedule itself is replayed host-side so the
@@ -65,6 +72,7 @@ from repro.core.engine import (AdpsgdSchedule, History, RoundRecord,
                                _measure_worker, _param_count, _sgd_worker,
                                _unflatten, _unflatten_row, adpsgd_schedule)
 from repro.data.synthetic import Dataset
+from repro.kernels.gossip_edges import gossip_edges
 from repro.kernels.gossip_mix import gossip_mix_2d
 from repro.simulation.cluster import SimCluster
 from repro.simulation.model import accuracy, classifier_loss, init_classifier
@@ -85,11 +93,13 @@ ADPSGD_FUSE_ROUNDS = 32
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("tau_cap", "measure", "needs_cross",
-                                   "interpret", "kind", "k", "ef"))
+                                   "interpret", "kind", "k", "ef",
+                                   "sparse"))
 def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
-                  comms, ew, cw, keep, rw, hs, skey, gamma, tx, ty, *,
-                  tau_cap: int, measure: bool, needs_cross: bool,
-                  interpret: bool, kind: str, k: int, ef: bool):
+                  esrc, edst, ewt, comms, ew, cw, keep, rw, hs, skey,
+                  gamma, tx, ty, *, tau_cap: int, measure: bool,
+                  needs_cross: bool, interpret: bool, kind: str, k: int,
+                  ef: bool, sparse: bool):
     """Run K rounds on device. Batched over a leading seed axis S on
     (stacked, err, bx, by, ex, ey, px, py); control inputs (taus .. rw
     plus the round indices ``hs``, all [K]-leading), the rand-k mask key
@@ -99,6 +109,14 @@ def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
     state on compressed runs (untouched otherwise); ``kind``/``k`` name
     the segment's wire codec ("none" uncompressed — a frozen adaptive
     plan fixes the codec for the whole segment).
+
+    ``sparse`` selects the edge-list gossip path: the round topology
+    arrives as directed edge arrays (``esrc``/``edst``/``ewt``,
+    [K, E_max] padded with zero-weight edges — exact no-ops), the mixing
+    delta runs through the ``kernels/gossip_edges.py`` gather-mix-scatter
+    kernel on [W, P], and ``mixes`` is a [K, 1, 1] dummy (no dense
+    [W, W] matrix is ever staged). Dense mode carries [K, 8] edge
+    dummies instead.
 
     Returns ((stacked', err'), outs) where outs is a dict of [S, K, ...]
     metric trajectories.
@@ -116,8 +134,17 @@ def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
 
         def body(carry, xs):
             carry, err_c = carry
-            (bxh, byh, tau_h, lr_h, mix_h, comm_h, ew_h, cw_h, keep_h,
-             rw_h, h_h) = xs
+            (bxh, byh, tau_h, lr_h, mix_h, src_h, dst_h, wgt_h, comm_h,
+             ew_h, cw_h, keep_h, rw_h, h_h) = xs
+
+            def mix_delta(v):
+                # (W @ v - v): through the edge kernel when sparse (zero-
+                # weight padding edges make no-comm rounds exact no-ops),
+                # dense tensordot otherwise
+                if sparse:
+                    return gossip_edges(v, src_h, dst_h, wgt_h,
+                                        interpret=interpret) - v
+                return jnp.tensordot(mix_h, v, axes=1) - v
 
             # --- join re-init: the reference's _reinit_joined with
             # (keep, donor weights) precomputed host-side; an all-False
@@ -153,8 +180,7 @@ def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
                                               interpret=interpret)
                 xhat = err_c + q
                 err_c = jnp.where(comm_h > 0, xhat, err_c)
-                y_flat = flat + comm_h * gamma * (
-                    jnp.tensordot(mix_h, xhat, axes=1) - xhat)
+                y_flat = flat + comm_h * gamma * mix_delta(xhat)
             elif compress:
                 # --- int8 / rand-k / naive top-k: the codec round trip
                 # of z = x + e per worker through the Pallas kernels on
@@ -168,8 +194,14 @@ def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
                                                interpret=interpret)
                 if stateful:
                     err_c = jnp.where(comm_h > 0, z - yhat, err_c)
-                y_flat = flat + comm_h * (
-                    jnp.tensordot(mix_h, yhat, axes=1) - yhat)
+                y_flat = flat + comm_h * mix_delta(yhat)
+            elif sparse:
+                # --- sparse gossip (Eq. 5-6) through the edge kernel on
+                # [W, P]: y_i = x_i + sum_e w_e (x_src - x_i) over the
+                # round's directed edges; no-communication rounds carry
+                # all-zero-weight edges — an exact no-op ---
+                y_flat = gossip_edges(flat, src_h, dst_h, wgt_h,
+                                      interpret=interpret)
             else:
                 # --- gossip (Eq. 5-6) through the Pallas kernel on
                 # [W, R, C]. Row i of the mixing matrix becomes the
@@ -221,8 +253,8 @@ def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
             return (carry, err_c), outs
 
         return jax.lax.scan(body, (stacked, err),
-                            (bx, by, taus, lrs, mixes, comms, ew, cw,
-                             keep, rw, hs))
+                            (bx, by, taus, lrs, mixes, esrc, edst, ewt,
+                             comms, ew, cw, keep, rw, hs))
 
     return jax.vmap(one_seed,
                     in_axes=(0, 0, 0, 0, 0, 0, 0, 0))(stacked, err, bx, by,
@@ -240,7 +272,10 @@ class _Segment:
     by: np.ndarray            # [S, K, W, T, B]
     taus: np.ndarray          # [K, W] i32
     lrs: np.ndarray           # [K] f32
-    mixes: np.ndarray         # [K, W, W] f32
+    mixes: np.ndarray         # [K, W, W] f32 ([K, 1, 1] dummy when sparse)
+    esrc: np.ndarray          # [K, E_max] i32 directed edge sources
+    edst: np.ndarray          # [K, E_max] i32 directed edge destinations
+    ewt: np.ndarray           # [K, E_max] f32 edge weights (0 == padding)
     comms: np.ndarray         # [K] f32  1.0 on rounds with communication
     ew: np.ndarray            # [K, W] f32  eval (accuracy/loss) weights
     cw: np.ndarray            # [K, W] f32  consensus weights
@@ -268,7 +303,8 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
                         strategy: Strategy, cfg: FedHPConfig, rngs, data,
                         shards, mixfn, clock: float,
                         time_budget: float | None, adaptive: bool,
-                        codec0, p_wire: int):
+                        codec0, p_wire: int, sparse: bool = False,
+                        mixing: str = "uniform"):
     """Advance cluster/strategy/batch RNG streams for rounds h0..h0+K-1 in
     the exact order ``run_dfl`` would, and pack the device inputs.
 
@@ -323,7 +359,22 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
         clock += t_round
 
         # --- device-side control inputs ---
-        mix = mixfn(adj) if adj.sum() > 0 else np.eye(n)
+        if sparse:
+            # edge-list round topology: per-edge weights from degrees
+            # (bit-identical to the dense matrices' off-diagonals); the
+            # dense mix is never built — [K, 1, 1] dummies ride the scan
+            mix = np.zeros((1, 1), np.float32)
+            if adj.sum() > 0:
+                e_und = topo.edges_from_adj(adj)
+                e_w = topo.edge_mixing_weights(e_und, n, mixing)
+                src, dst, wts = topo.directed_edges(e_und, e_w)
+            else:
+                src = dst = np.zeros(0, np.int32)
+                wts = np.zeros(0, np.float32)
+        else:
+            mix = mixfn(adj) if adj.sum() > 0 else np.eye(n)
+            src = dst = np.zeros(0, np.int32)
+            wts = np.zeros(0, np.float32)
         donors = alive & ~joined
         do_reinit = joined.any() and donors.any()
         keep = joined if do_reinit else np.zeros(n, bool)
@@ -336,6 +387,7 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
 
         per.append(dict(alive=alive, adj=adj, mu=mu, beta=beta, taus=taus,
                         tau_cap=tau_cap, batches=batches, mix=mix,
+                        src=src, dst=dst, wts=wts,
                         comm=1.0 if adj.sum() > 0 else 0.0,
                         keep=keep, rw=rw, ew=ew, cw=cw, h=h,
                         codec=rcodec, wire_ratio=comm_ratio,
@@ -363,11 +415,26 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
                              for p in per]) for s in range(n_seeds)])
     by = np.stack([np.stack([pad(p["batches"][s][1], p["tau_cap"])
                              for p in per]) for s in range(n_seeds)])
+    # pad per-round edge arrays to one static E_max (zero-weight edges are
+    # exact kernel no-ops), bucketed to the next power of two like tau_cap
+    # so adaptive topologies trigger ~log2(E) jit specializations, not one
+    # per distinct edge count
+    e_max = max((len(p["src"]) for p in per), default=0)
+    e_max = max(8, 1 << (e_max - 1).bit_length()) if e_max > 1 else 8
+    esrc = np.zeros((len(per), e_max), np.int32)
+    edst = np.zeros((len(per), e_max), np.int32)
+    ewt_a = np.zeros((len(per), e_max), np.float32)
+    for t, p in enumerate(per):
+        ne = len(p["src"])
+        esrc[t, :ne] = p["src"]
+        edst[t, :ne] = p["dst"]
+        ewt_a[t, :ne] = p["wts"]
     seg = _Segment(
         bx=bx.astype(np.float32), by=by.astype(np.int32),
         taus=np.stack([p["taus"] for p in per]).astype(np.int32),
         lrs=np.array([p["lr"] for p in per], np.float32),
         mixes=np.stack([p["mix"] for p in per]).astype(np.float32),
+        esrc=esrc, edst=edst, ewt=ewt_a,
         comms=np.array([p["comm"] for p in per], np.float32),
         ew=np.stack([p["ew"] for p in per]).astype(np.float32),
         cw=np.stack([p["cw"] for p in per]).astype(np.float32),
@@ -462,6 +529,7 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
              else topo.mixing_matrix_uniform)
     needs_cross = strategy.name == "pens"
     replan = max(int(getattr(cfg, "replan_every", 1)), 1)
+    sparse = cfg.gossip == "sparse"
 
     hists = [History() for _ in seed_list]
     clock = 0.0
@@ -472,11 +540,14 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
                    else min(rounds - h, MAX_FUSE_ROUNDS))
         seg, clock, stop = _precompute_segment(
             h, seg_len, cluster, strategy, cfg, rngs, data, shards, mixfn,
-            clock, time_budget, adaptive, codec0, p_wire)
+            clock, time_budget, adaptive, codec0, p_wire, sparse=sparse,
+            mixing=mixing)
         (stacked, err), outs = _scan_segment(
             stacked, err, jnp.asarray(seg.bx), jnp.asarray(seg.by), ex, ey,
             px, py, jnp.asarray(seg.taus), jnp.asarray(seg.lrs),
-            jnp.asarray(seg.mixes), jnp.asarray(seg.comms),
+            jnp.asarray(seg.mixes), jnp.asarray(seg.esrc),
+            jnp.asarray(seg.edst), jnp.asarray(seg.ewt),
+            jnp.asarray(seg.comms),
             jnp.asarray(seg.ew), jnp.asarray(seg.cw),
             jnp.asarray(seg.keep), jnp.asarray(seg.rw),
             jnp.asarray(seg.hs), skey, jnp.float32(cfg.sparse_gamma),
@@ -484,7 +555,7 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
             needs_cross=needs_cross, interpret=interp,
             kind=seg.codec.kind,
             k=seg.codec.resolve_k(p_model),
-            ef=cfg.error_feedback)
+            ef=cfg.error_feedback, sparse=sparse)
         outs = {k: np.asarray(v) for k, v in outs.items()}
 
         for t in range(len(seg)):

@@ -3,8 +3,20 @@ mixing matrices, and matching decomposition (Sec. II-A, Eq. 1, 5-6).
 
 Everything here is host-side coordinator math (numpy), deliberately
 outside jit: topologies are round-static control inputs.
+
+Two representations coexist:
+
+- dense ``[N, N]`` 0/1 adjacency matrices — the original small-W path;
+- sparse ``[E, 2]`` edge arrays (undirected, each row ``i < j``) with
+  per-edge mixing weights — the large-W path, where anything O(N^2)
+  (dense mixing matrices, row scans) is off the table. The edge-list
+  helpers (``edges_from_adj``, ``ring_edges``, ``edge_mixing_weights``,
+  ``connected_components_edges``, ``UnionFind``) never materialize a
+  dense matrix.
 """
 from __future__ import annotations
+
+import warnings
 
 import numpy as np
 
@@ -34,15 +46,39 @@ def ring_topology(n: int) -> np.ndarray:
 
 
 def erdos_topology(n: int, p: float, rng: np.random.Generator) -> np.ndarray:
-    """Erdős–Rényi base topology, retried until connected."""
+    """Erdős–Rényi base topology, retried until connected.
+
+    If 1000 draws never produce a connected graph (tiny ``p``), falls
+    back to a ring plus seeded random chords — connected by the ring,
+    with the chords recovering some of the requested edge density (a
+    bare ring has the worst spectral gap of any connected topology, so
+    silently returning one would sabotage low-``p`` specs). The
+    fallback warns so callers can tell the spec was unsatisfiable.
+    """
     for _ in range(1000):
         u = rng.random((n, n))
         a = ((u + u.T) / 2 < p).astype(np.int8)
         np.fill_diagonal(a, 0)
         if is_connected(a):
             return a
-    # fall back: ring + random chords
+    # fall back: ring + seeded random chords
+    warnings.warn(
+        f"erdos_topology(n={n}, p={p}): no connected draw in 1000 tries;"
+        " falling back to ring + random chords", RuntimeWarning,
+        stacklevel=2)
     a = ring_topology(n)
+    if n > 3:
+        # aim for the requested expected edge count, minus the ring's n
+        # edges; always add at least one chord so the fallback never
+        # degrades to a bare ring
+        target = max(1, int(round(p * n * (n - 1) / 2)) - n)
+        iu, ju = np.triu_indices(n, k=1)
+        free = np.nonzero(a[iu, ju] == 0)[0]
+        take = min(target, free.size)
+        if take > 0:
+            sel = free[rng.choice(free.size, size=take, replace=False)]
+            a[iu[sel], ju[sel]] = 1
+            a[ju[sel], iu[sel]] = 1
     return a
 
 
@@ -121,11 +157,169 @@ def connected_components(adj: np.ndarray,
     return comps
 
 
+class UnionFind:
+    """Disjoint-set forest with path compression + union by size.
+
+    The workhorse behind the edge-list connectivity helpers and
+    ``repair_connectivity``: component queries in near-O(1) without ever
+    scanning dense adjacency rows.
+    """
+
+    def __init__(self, n: int):
+        self.parent = np.arange(n, dtype=np.int64)
+        self.size = np.ones(n, dtype=np.int64)
+        self.count = n                      # number of disjoint sets
+
+    def find(self, i: int) -> int:
+        """Root of ``i``'s set (with path compression)."""
+        p = self.parent
+        root = i
+        while p[root] != root:
+            root = p[root]
+        while p[i] != root:                 # compress
+            p[i], i = root, p[i]
+        return int(root)
+
+    def union(self, i: int, j: int) -> bool:
+        """Merge the sets of ``i`` and ``j``; True if they were disjoint."""
+        ri, rj = self.find(i), self.find(j)
+        if ri == rj:
+            return False
+        if self.size[ri] < self.size[rj]:
+            ri, rj = rj, ri
+        self.parent[rj] = ri
+        self.size[ri] += self.size[rj]
+        self.count -= 1
+        return True
+
+
+# ---------------------------------------------------------------------------
+# Edge-list representation (sparse gossip path; no dense row scans)
+# ---------------------------------------------------------------------------
+
+def edges_from_adj(adj: np.ndarray) -> np.ndarray:
+    """Dense adjacency -> ``[E, 2]`` int32 undirected edge array, each
+    row ``i < j``, sorted row-major (the boundary op between the dense
+    planner output and the sparse engine)."""
+    i, j = np.nonzero(np.triu(np.asarray(adj), k=1))
+    return np.stack([i, j], axis=1).astype(np.int32)
+
+
+def adj_from_edges(edges: np.ndarray, n: int) -> np.ndarray:
+    """``[E, 2]`` edge array -> dense int8 adjacency (small-W parity and
+    validation only; defeats the point at large W)."""
+    a = np.zeros((n, n), dtype=np.int8)
+    e = np.asarray(edges).reshape(-1, 2)
+    if e.size:
+        a[e[:, 0], e[:, 1]] = 1
+        a[e[:, 1], e[:, 0]] = 1
+    return a
+
+
+def ring_edges(n: int) -> np.ndarray:
+    """Ring topology directly as an ``[n, 2]`` edge array (no dense
+    [n, n] intermediate) — the D-PSGD baseline at large W."""
+    if n <= 1:
+        return np.zeros((0, 2), dtype=np.int32)
+    if n == 2:
+        return np.array([[0, 1]], dtype=np.int32)
+    idx = np.arange(n - 1, dtype=np.int32)
+    chain = np.stack([idx, idx + 1], axis=1)
+    return np.concatenate([np.array([[0, n - 1]], np.int32), chain])
+
+
+def degrees_from_edges(edges: np.ndarray, n: int) -> np.ndarray:
+    """Vertex degrees of an ``[E, 2]`` edge array via bincount (O(E))."""
+    e = np.asarray(edges).reshape(-1, 2)
+    return np.bincount(e.reshape(-1), minlength=n).astype(np.int64)
+
+
+def mask_edges(edges: np.ndarray, alive: np.ndarray) -> np.ndarray:
+    """Drop edges touching dead workers (the edge-list analogue of
+    zeroing dead rows/columns of the adjacency)."""
+    e = np.asarray(edges).reshape(-1, 2)
+    alive = np.asarray(alive, bool)
+    keep = alive[e[:, 0]] & alive[e[:, 1]]
+    return e[keep]
+
+
+def edge_mixing_weights(edges: np.ndarray, n: int,
+                        mixing: str = "uniform") -> np.ndarray:
+    """Per-edge mixing weight ``w_e = W[i, j]`` from degrees alone, in
+    O(E) — bit-identical to the off-diagonal entries of the dense
+    ``mixing_matrix_uniform`` (Eq. 6) / ``mixing_matrix_metropolis``
+    matrices, without building them. Self-weights are implicit: the
+    sparse update ``y_i = x_i + sum_e w_e (x_j - x_i)`` already encodes
+    ``W_ii = 1 - sum_j W_ij``.
+    """
+    e = np.asarray(edges).reshape(-1, 2)
+    if e.shape[0] == 0:
+        return np.zeros((0,), np.float64)
+    deg = degrees_from_edges(e, n)
+    if mixing == "uniform":
+        u_max = deg.max()
+        return np.full(e.shape[0], 1.0 / (u_max + 1.0))
+    if mixing == "metropolis":
+        return 1.0 / (1.0 + np.maximum(deg[e[:, 0]], deg[e[:, 1]]))
+    raise ValueError(f"unknown mixing {mixing!r}")
+
+
+def directed_edges(edges: np.ndarray,
+                   weights: np.ndarray) -> tuple[np.ndarray, np.ndarray,
+                                                 np.ndarray]:
+    """Undirected ``[E, 2]`` + weights -> directed ``(src, dst, w)``
+    arrays of length 2E (both orientations), the device-side gossip
+    format: ``y[dst] += w * (x[src] - x[dst])``."""
+    e = np.asarray(edges).reshape(-1, 2).astype(np.int32)
+    w = np.asarray(weights, np.float32).reshape(-1)
+    src = np.concatenate([e[:, 0], e[:, 1]])
+    dst = np.concatenate([e[:, 1], e[:, 0]])
+    return src, dst, np.concatenate([w, w])
+
+
+def connected_components_edges(edges: np.ndarray, n: int,
+                               nodes: np.ndarray | None = None
+                               ) -> list[np.ndarray]:
+    """Connected components from an edge array via union-find — O(E α)
+    instead of the dense BFS's O(N^2) row scans. Matches
+    ``connected_components``: components ordered by smallest member,
+    members sorted."""
+    nodes = np.arange(n) if nodes is None else np.asarray(nodes)
+    in_sub = np.zeros(n, bool)
+    in_sub[nodes] = True
+    uf = UnionFind(n)
+    for i, j in mask_edges(edges, in_sub):
+        uf.union(int(i), int(j))
+    groups: dict[int, list[int]] = {}
+    for v in sorted(int(x) for x in nodes):
+        groups.setdefault(uf.find(v), []).append(v)
+    return [np.array(g) for g in groups.values()]
+
+
+def is_connected_edges(edges: np.ndarray, n: int) -> bool:
+    """Edge-array connectivity check (union-find; O(E α))."""
+    if n <= 1:
+        return True
+    uf = UnionFind(n)
+    for i, j in np.asarray(edges).reshape(-1, 2):
+        uf.union(int(i), int(j))
+    return uf.count == 1
+
+
 def repair_connectivity(adj: np.ndarray, alive: np.ndarray | None = None,
                         cost: np.ndarray | None = None) -> np.ndarray:
     """Cheapest-reconnect pass (churn tolerance): if the alive-induced
-    subgraph is disconnected, greedily add the min-cost cross-component
-    edge until one component remains (Kruskal over the component graph).
+    subgraph is disconnected, greedily add the GLOBAL min-cost
+    cross-component edge until one component remains — true Kruskal
+    over the component graph, so the added edges form a minimum-cost
+    spanning forest of the components (ties broken row-major on the
+    live-index grid, keeping the repair a pure function of its inputs).
+
+    Components are tracked with a union-find instead of re-running BFS
+    after every added edge; candidate costs live in one live x live
+    matrix whose intra-component entries are masked as the merges
+    happen, so the whole repair is O(L^2) after the initial component
+    pass rather than O(C L^2) BFS re-scans.
 
     ``cost`` is an (N,N) link-time matrix (e.g. beta); unit costs when
     None. Dead rows/columns are zeroed in the result. Returns a new array.
@@ -137,23 +331,37 @@ def repair_connectivity(adj: np.ndarray, alive: np.ndarray | None = None,
     adj[dead, :] = 0
     adj[:, dead] = 0
     live = np.nonzero(alive)[0]
-    if len(live) <= 1:
+    nl = len(live)
+    if nl <= 1:
         return adj
-    cost = np.ones((n, n)) if cost is None else np.asarray(cost, np.float64)
-    comps = connected_components(adj, live)
-    while len(comps) > 1:
-        best: tuple[float, int, int] | None = None
-        base = comps[0]
-        for other in comps[1:]:
-            sub = cost[np.ix_(base, other)]
-            k = int(np.argmin(sub))
-            i, j = base[k // len(other)], other[k % len(other)]
-            c = float(sub.flat[k])
-            if best is None or c < best[0]:
-                best = (c, int(i), int(j))
-        _, i, j = best
-        adj[i, j] = adj[j, i] = 1
-        comps = connected_components(adj, live)
+    uf = UnionFind(nl)                       # over live-local indices
+    loc = np.full(n, -1, np.int64)
+    loc[live] = np.arange(nl)
+    li, lj = np.nonzero(np.triu(adj[np.ix_(live, live)], k=1))
+    for a, b in zip(li, lj):
+        uf.union(int(a), int(b))
+    if uf.count == 1:
+        return adj
+    if cost is None:
+        sub = np.ones((nl, nl))
+    else:
+        sub = np.asarray(cost, np.float64)[np.ix_(live, live)].copy()
+    # mask intra-component candidates (incl. the diagonal) once
+    members: dict[int, list[int]] = {}
+    for v in range(nl):
+        members.setdefault(uf.find(v), []).append(v)
+    for g in members.values():
+        sub[np.ix_(g, g)] = np.inf
+    while uf.count > 1:
+        k = int(np.argmin(sub))              # first flat min: deterministic
+        a, b = divmod(k, nl)
+        adj[live[a], live[b]] = adj[live[b], live[a]] = 1
+        ra, rb = uf.find(a), uf.find(b)
+        ga, gb = members.pop(ra), members.pop(rb)
+        sub[np.ix_(ga, gb)] = np.inf
+        sub[np.ix_(gb, ga)] = np.inf
+        uf.union(a, b)
+        members[uf.find(a)] = ga + gb
     return adj
 
 

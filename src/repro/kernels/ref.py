@@ -35,6 +35,16 @@ def gossip_mix_ref(x, u, w):
     return y.astype(x.dtype)
 
 
+def gossip_edges_ref(x, src, dst, w):
+    """x: [W, C]; src, dst: [E] directed edges; w: [E].
+    y[i] = x[i] + sum_{e: dst_e=i} w_e (x[src_e] - x[i]) via segment_sum
+    — the jnp oracle for ``kernels/gossip_edges.py``."""
+    xf = x.astype(jnp.float32)
+    delta = w.astype(jnp.float32)[:, None] * (xf[src] - xf[dst])
+    y = xf + jax.ops.segment_sum(delta, dst, num_segments=x.shape[0])
+    return y.astype(x.dtype)
+
+
 def consensus_dist_ref(x, u):
     """x: [R, C]; u: [K, R, C] -> [K] squared L2 distances."""
     d = u.astype(jnp.float32) - x.astype(jnp.float32)[None]

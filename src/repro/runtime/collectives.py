@@ -226,6 +226,77 @@ def gossip_compressed_fn(mesh: Mesh, worker_axes: tuple[str, ...],
                       (param_specs, param_specs))
 
 
+def gossip_edges_sharded_fn(mesh: Mesh, worker_axes: tuple[str, ...],
+                            src: np.ndarray, dst: np.ndarray,
+                            w: np.ndarray, num_workers: int):
+    """Sparse edge-list gossip over a worker-sharded [W, P] stack.
+
+    The dense path above pays one ppermute per *matching* (O(degree) of
+    them). Here the directed edge list (``topology.directed_edges``) is
+    grouped host-side by shard offset delta = shard(dst) - shard(src)
+    mod n_shards; each distinct delta costs exactly ONE ppermute of the
+    local [W/n_shards, P] block, and every edge in the group lands via a
+    per-shard segment_sum on local row indices — so wire cost scales with
+    the number of distinct shard offsets the topology touches, not E.
+    Per-shard edge tables are zero-weight padded to the group max so every
+    shard runs the same static shapes (padding rows add w*(x0-x0)=0).
+
+    Returns a jit-able f(x: [W, P]) -> mixed [W, P] with
+    y_i = x_i + sum_{e: dst_e=i} w_e (x_{src_e} - x_i); x is sharded
+    P(worker_axes, None). Requires W divisible by the worker-axes extent.
+    """
+    n_shards = 1
+    for a in worker_axes:
+        n_shards *= mesh.shape[a]
+    if num_workers % n_shards != 0:
+        raise ValueError(f"W={num_workers} not divisible by "
+                         f"worker-shard extent {n_shards}")
+    rows = num_workers // n_shards
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    w = np.asarray(w, np.float32)
+    deltas = (dst // rows - src // rows) % n_shards
+    groups = []
+    for delta in sorted(set(deltas.tolist())):
+        sel = deltas == delta
+        es, ed, ew = src[sel], dst[sel], w[sel]
+        # bucket edges by destination shard, pad to the widest shard
+        dshard = ed // rows
+        width = max(1, int(np.bincount(dshard, minlength=n_shards).max()))
+        sl = np.zeros((n_shards, width), np.int32)
+        dl = np.zeros((n_shards, width), np.int32)
+        wl = np.zeros((n_shards, width), np.float32)
+        for k in range(n_shards):
+            m = dshard == k
+            c = int(m.sum())
+            sl[k, :c] = es[m] % rows
+            dl[k, :c] = ed[m] % rows
+            wl[k, :c] = ew[m]
+        groups.append((int(delta),
+                       jnp.asarray(sl), jnp.asarray(dl), jnp.asarray(wl)))
+    tables = tuple((g[1], g[2], g[3]) for g in groups)
+    offsets = tuple(g[0] for g in groups)
+
+    def body(x, tabs):
+        xf = x.astype(jnp.float32)
+        acc = xf
+        for delta, (sl, dl, wl) in zip(offsets, tabs):
+            if delta == 0:
+                recv = xf
+            else:
+                perm = [(k, (k + delta) % n_shards) for k in range(n_shards)]
+                recv = jax.lax.ppermute(xf, worker_axes, perm=perm)
+            contrib = wl[0][:, None] * (recv[sl[0]] - xf[dl[0]])
+            acc = acc + jax.ops.segment_sum(contrib, dl[0],
+                                            num_segments=rows)
+        return acc.astype(x.dtype)
+
+    spec = P(worker_axes, None)
+    tab_specs = tuple((spec, spec, spec) for _ in tables)
+    mapped = _shard_map(body, mesh, (spec, tab_specs), spec)
+    return lambda x: mapped(x, tables)
+
+
 def ring_allreduce_mean_fn(mesh: Mesh, worker_axes: tuple[str, ...],
                            param_specs):
     """Dense baseline: full model averaging over all workers (what a

@@ -150,6 +150,131 @@ def test_repair_connectivity_connected_and_deterministic(n, seed):
     assert (rep1[np.ix_(live, live)] >= adj[np.ix_(live, live)]).all()
 
 
+def _min_forest_cost(adj, alive, cost):
+    """Independent reference: Prim's MST total over the component graph
+    (each component-pair weighted by its cheapest cross edge) — the
+    optimal total cost any reconnection of the survivors can achieve."""
+    live = np.nonzero(alive)[0]
+    comps = topo.connected_components(adj, live)
+    k = len(comps)
+    if k <= 1:
+        return 0.0
+    wmat = np.full((k, k), np.inf)
+    for a in range(k):
+        for b in range(a + 1, k):
+            w = cost[np.ix_(comps[a], comps[b])].min()
+            wmat[a, b] = wmat[b, a] = w
+    in_tree = {0}
+    total = 0.0
+    while len(in_tree) < k:
+        best, pick = np.inf, -1
+        for a in in_tree:
+            for b in range(k):
+                if b not in in_tree and wmat[a, b] < best:
+                    best, pick = wmat[a, b], b
+        in_tree.add(pick)
+        total += best
+    return total
+
+
+@given(st.integers(min_value=3, max_value=14), st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_repair_adds_minimum_cost_forest(n, seed):
+    """The greedy global-cheapest merge is Kruskal over the component
+    graph, so the total cost of the edges repair adds must equal the
+    minimum spanning forest cost (brute-force Prim reference)."""
+    rng = np.random.default_rng(seed)
+    adj = (rng.random((n, n)) < 0.2).astype(np.int8)
+    adj = np.maximum(adj, adj.T)
+    np.fill_diagonal(adj, 0)
+    alive = rng.random(n) > 0.35
+    if alive.sum() < 2:
+        alive[:2] = True
+    cost = rng.uniform(0.1, 5.0, (n, n))
+    cost = (cost + cost.T) / 2
+    rep = topo.repair_connectivity(adj, alive, cost=cost)
+    masked = adj.copy()
+    masked[~alive, :] = 0
+    masked[:, ~alive] = 0
+    added = np.triu((rep - masked) > 0, k=1)
+    got = float(cost[added].sum())
+    want = _min_forest_cost(adj, alive, cost)
+    assert got == pytest.approx(want, rel=1e-12)
+
+
+def test_repair_minimum_forest_seeded_sweep():
+    """Non-hypothesis twin of the property test above (hypothesis is an
+    optional dev dependency): 100 seeded random (adj, alive, cost) cases."""
+    rng = np.random.default_rng(42)
+    for _ in range(100):
+        n = int(rng.integers(3, 14))
+        adj = (rng.random((n, n)) < 0.2).astype(np.int8)
+        adj = np.maximum(adj, adj.T)
+        np.fill_diagonal(adj, 0)
+        alive = rng.random(n) > 0.35
+        if alive.sum() < 2:
+            alive[:2] = True
+        cost = rng.uniform(0.1, 5.0, (n, n))
+        cost = (cost + cost.T) / 2
+        rep = topo.repair_connectivity(adj, alive, cost=cost)
+        masked = adj.copy()
+        masked[~alive, :] = 0
+        masked[:, ~alive] = 0
+        added = np.triu((rep - masked) > 0, k=1)
+        got = float(cost[added].sum())
+        assert got == pytest.approx(_min_forest_cost(adj, alive, cost),
+                                    rel=1e-12)
+        live = np.nonzero(alive)[0]
+        assert topo.is_connected(rep[np.ix_(live, live)])
+
+
+def test_repair_picks_global_cheapest_cross_edge():
+    """Regression for the comps[0]-anchored scan: with three components
+    {0,1} {2,3} {4,5}, the cheapest cross-component edge (2, 4) does not
+    touch the first component — a comps[0]-anchored greedy would start
+    with a costlier edge; the global Kruskal merge must add (2, 4)."""
+    n = 6
+    adj = np.zeros((n, n), np.int8)
+    for (i, j) in ((0, 1), (2, 3), (4, 5)):
+        adj[i, j] = adj[j, i] = 1
+    cost = np.full((n, n), 10.0)
+    cost[2, 4] = cost[4, 2] = 0.5
+    cost[0, 2] = cost[2, 0] = 3.0
+    np.fill_diagonal(cost, 0.0)
+    alive = np.ones(n, bool)
+    rep = topo.repair_connectivity(adj, alive, cost=cost)
+    assert rep[2, 4] == 1 and rep[4, 2] == 1
+    assert topo.is_connected(rep)
+    # exactly two edges added (three components -> forest of two links)
+    assert (np.triu(rep - adj, k=1) > 0).sum() == 2
+
+
+def test_erdos_fallback_warns_and_adds_chords():
+    """An unsatisfiably low p cannot draw a connected graph, so the
+    fallback must warn and return ring + chords, never a bare ring."""
+    n, p = 30, 0.04   # expected edges 17 < n-1: connectivity impossible
+    with pytest.warns(RuntimeWarning, match="falling back to ring"):
+        a = topo.erdos_topology(n, p, np.random.default_rng(0))
+    topo.validate_topology(a)
+    assert topo.is_connected(a)
+    ring_edges = topo.ring_topology(n).sum() // 2
+    extra = a.sum() // 2 - ring_edges
+    assert extra >= 1, "fallback degraded to a bare ring"
+    target = max(1, int(round(p * n * (n - 1) / 2)) - n)
+    assert extra == target
+
+
+def test_erdos_fallback_higher_p_matches_density():
+    """With a p whose expected edge count exceeds the ring's, the chord
+    count recovers the requested density (minus the ring edges)."""
+    n, p = 40, 0.055  # expected 42.9 edges, still << connectivity threshold
+    with pytest.warns(RuntimeWarning):
+        a = topo.erdos_topology(n, p, np.random.default_rng(1))
+    assert topo.is_connected(a)
+    want = n + max(1, int(round(p * n * (n - 1) / 2)) - n)
+    assert a.sum() // 2 == want
+
+
 def test_validate_topology_rejects_bad():
     with pytest.raises(ValueError):
         topo.validate_topology(np.ones((3, 3), dtype=np.int8))  # self loops

@@ -34,6 +34,7 @@ AUDITED_MODULES = [
     "src/repro/core/algorithms.py",
     "src/repro/kernels/sparsify_block.py",
     "src/repro/kernels/quantize_block.py",
+    "src/repro/kernels/gossip_edges.py",
 ]
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
