@@ -457,6 +457,109 @@ def bench_adpsgd(rows, full):
                         f"from the reference event loop")
 
 
+def bench_scenarios(rows, full):
+    """Scenario-diversity benchmark: (1) FedHP's adaptive topology vs
+    fixed complex-network graphs (BA / WS / geo) under correlated rack
+    outages (``ChurnSchedule.generate_correlated``); (2) Byzantine
+    sign-flip attackers vs trimmed-mean robust gossip (core/robust.py);
+    (3) time-varying non-IID drift (``cfg.drift_every``). Per-leg final
+    metrics are emitted as CSV rows and the full per-round trajectories
+    are persisted to ``BENCH_scenarios.json`` (the CI artifact).
+
+    In --smoke mode the Byzantine leg is gated: with 20% sign-flip
+    attackers, trimmed-mean gossip must reach >= 90% of the clean run's
+    final accuracy while plain uniform mixing must degrade measurably
+    below clean — both failures exit 1."""
+    import json
+
+    from repro.core.experiment import run_algorithm
+    from repro.simulation.cluster import ChurnSchedule
+
+    cfg = base_cfg(full)
+    rounds = 40 if SMOKE else (60 if not full else 150)
+    if SMOKE:
+        cfg = replace(cfg, num_workers=16)
+    n = cfg.num_workers
+    traj: dict[str, dict] = {}
+
+    def record(leg, h):
+        a = h.as_arrays()
+        traj[leg] = {
+            "final_accuracy": round(h.final_accuracy, 4),
+            "trajectory": {k: a[k].tolist() for k in
+                           ("round", "accuracy", "loss", "consensus",
+                            "cumulative_time")},
+        }
+
+    # ---- (1) adaptive vs fixed complex-network graphs under outages ------
+    racks = 4
+    outages = ChurnSchedule.generate_correlated(
+        n, rounds, racks=racks, outages=2, seed=cfg.churn_seed,
+        min_alive=cfg.churn_min_alive)
+    emit(rows, "scenarios", "outage_events", len(outages.events))
+    # "base" = fixed given topology at tau_init (dpsgd always plans a
+    # ring, so it can't exercise the complex-network graphs)
+    topo_legs = [("fedhp", "full"), ("base", "ba:2"),
+                 ("base", "ws:4:0.2"), ("base", f"geo:{racks}")]
+    for algo, base in topo_legs:
+        c = replace(cfg, base_topology=base)
+        h = run_algorithm(algo, c, non_iid_p=0.4, rounds=rounds,
+                          spread=SPREAD, churn=outages, fused=True)
+        leg = f"outage[{algo}@{base}]"
+        emit(rows, "scenarios", f"acc_{leg}", round(h.final_accuracy, 4))
+        record(leg, h)
+
+    # ---- (2) Byzantine fraction: clean vs plain vs trimmed ---------------
+    nb = 10 if SMOKE else n            # 20% attackers on the gate shape
+    byz = tuple(range(0, nb, 5))       # workers 0, 5, ... -> nb/5 = 20%
+    byz_rounds = 30 if SMOKE else rounds
+    bcfg = replace(cfg, num_workers=nb, tau_init=4,
+                   byzantine_attack="signflip")
+    legs = {"clean": replace(bcfg, byzantine=(), robust="none"),
+            "byz_plain": replace(bcfg, byzantine=byz, robust="none"),
+            "byz_trimmed": replace(bcfg, byzantine=byz,
+                                   robust=f"trimmed:{len(byz)}")}
+    accs = {}
+    for name, c in legs.items():
+        h = run_algorithm("dpsgd", c, non_iid_p=0.4, rounds=byz_rounds,
+                          spread=SPREAD)
+        accs[name] = h.final_accuracy
+        emit(rows, "scenarios", f"acc_byz[{name}]",
+             round(h.final_accuracy, 4))
+        record(f"byz[{name}]", h)
+    emit(rows, "scenarios", "byz_fraction", round(len(byz) / nb, 2))
+    emit(rows, "scenarios", "trimmed_recovery",
+         round(accs["byz_trimmed"] / max(accs["clean"], 1e-9), 3))
+
+    # ---- (3) time-varying non-IID drift ----------------------------------
+    for name, c in (("static", cfg),
+                    ("drift", replace(cfg, drift_every=max(rounds // 8,
+                                                           1)))):
+        h = run_algorithm("dpsgd", c, non_iid_p=0.6, rounds=rounds,
+                          spread=SPREAD, fused=True)
+        emit(rows, "scenarios", f"acc_drift[{name}]",
+             round(h.final_accuracy, 4))
+        record(f"drift[{name}]", h)
+
+    with open("BENCH_scenarios.json", "w") as f:
+        json.dump({"mode": "smoke" if SMOKE else
+                   ("full" if full else "quick"),
+                   "workers": n, "rounds": rounds, "legs": traj}, f)
+    emit(rows, "scenarios", "trajectory_file", "BENCH_scenarios.json")
+
+    if SMOKE:
+        if accs["byz_trimmed"] < 0.9 * accs["clean"]:
+            FAILURES.append(
+                f"trimmed-mean gossip under 20% sign-flip attackers "
+                f"reached {accs['byz_trimmed']:.3f} < 90% of clean "
+                f"({accs['clean']:.3f})")
+        if accs["clean"] - accs["byz_plain"] < 0.02:
+            FAILURES.append(
+                f"plain uniform mixing under attack should degrade "
+                f"measurably; clean {accs['clean']:.3f} vs attacked "
+                f"{accs['byz_plain']:.3f}")
+
+
 def bench_collective(rows, full):
     """Adapted-topology gossip vs all-reduce wire bytes (the roofline knob
     the paper's technique controls; DESIGN.md §3)."""
@@ -485,6 +588,7 @@ BENCHES = {
     "sparse": bench_sparse,
     "sparse_gossip": bench_sparse_gossip,
     "adpsgd": bench_adpsgd,
+    "scenarios": bench_scenarios,
 }
 
 SMOKE = False              # set by --smoke; bench_fused reads it

@@ -32,6 +32,13 @@ and D-PSGD with int8 + error-feedback gossip (core/compression.py,
 uncompressed selves, racing to a target accuracy on equal wall time:
 
     PYTHONPATH=src python examples/heterogeneity_study.py --compressed
+
+``--scenarios`` runs the scenario-axis study instead: FedHP's adaptive
+topology vs fixed complex-network graphs (Barabási–Albert,
+Watts–Strogatz, geo/racks) under correlated rack outages, then 20%
+sign-flip Byzantine workers with plain vs trimmed-mean vs median gossip:
+
+    PYTHONPATH=src python examples/heterogeneity_study.py --scenarios
 """
 import argparse
 from dataclasses import replace
@@ -106,6 +113,35 @@ def compressed_study(fused: bool = False):
                   f"{h.records[-1].cumulative_time:9.1f}")
 
 
+def scenarios_study(fused: bool = False):
+    """Scenario axis: complex-network topologies under correlated rack
+    outages, then Byzantine attackers vs robust gossip."""
+    from repro.simulation.cluster import ChurnSchedule
+
+    racks = 4
+    sched = ChurnSchedule.generate_correlated(
+        CFG.num_workers, CFG.rounds, racks=racks, outages=2, seed=CFG.seed)
+    n_out = sum(1 for e in sched.events if e.kind == "crash")
+    print(f"rack outages: {n_out} grouped crash events over {racks} racks")
+    print(f"{'algo':8s} {'topology':>10s} {'acc':>6s} {'total(s)':>9s}")
+    for algo, base in (("fedhp", "full"), ("base", "ba:2"),
+                       ("base", "ws:4:0.2"), ("base", f"geo:{racks}")):
+        cfg = replace(CFG, base_topology=base)
+        h = run_algorithm(algo, cfg, non_iid_p=0.4, spread=3.0,
+                          churn=sched, time_budget=BUDGET, fused=fused)
+        print(f"{algo:8s} {base:>10s} {h.final_accuracy:6.3f} "
+              f"{h.records[-1].cumulative_time:9.1f}")
+
+    byz = (3, 7)                                 # 20% of the fleet
+    print(f"\nByzantine: workers {byz} sign-flip on the wire "
+          f"(reference engine)")
+    print(f"{'robust':>10s} {'acc':>6s}")
+    for robust in ("none", "trimmed:2", "median"):
+        cfg = replace(CFG, rounds=30, byzantine=byz, robust=robust)
+        h = run_algorithm("dpsgd", cfg, non_iid_p=0.4, spread=3.0)
+        print(f"{robust:>10s} {h.final_accuracy:6.3f}")
+
+
 def adpsgd_study():
     """Asynchronous engines head to head: reference event loop vs fused
     event scan, uncompressed vs int8 compensated pairwise exchange."""
@@ -133,11 +169,16 @@ def main():
                     help="run the asynchronous (AD-PSGD) engine study "
                          "(always compares reference AND fused engines; "
                          "--fused has no extra effect here)")
+    ap.add_argument("--scenarios", action="store_true",
+                    help="run the scenario-axis study (complex-network "
+                         "topologies, rack outages, Byzantine workers)")
     ap.add_argument("--fused", action="store_true",
                     help="run the algorithms on the fused scan engines")
     args = ap.parse_args()
     if args.churn:
         churn_study(fused=args.fused)
+    elif args.scenarios:
+        scenarios_study(fused=args.fused)
     elif args.compressed:
         compressed_study(fused=args.fused)
     elif args.adpsgd:

@@ -224,6 +224,27 @@ class FedHPConfig:
     # to the round when a worker crashes (graceful leaves cost nothing)
     straggle_factor: float = 4.0     # mu multiplier during a straggler spike
     straggle_duration: int = 5       # spike length in rounds
+    # Byzantine scenario axis (core/robust.py): workers in ``byzantine``
+    # gossip corrupted rows — their LOCAL training is honest, only the
+    # transmitted copy lies on the wire (``byzantine_attack``:
+    # "signflip[:scale]" sends -scale*x, "largenorm[:scale]" sends
+    # scale*x). ``robust`` picks the aggregation countermeasure:
+    # "trimmed:<b>" drops the b largest + b smallest values per
+    # coordinate before averaging the closed neighborhood (b a fraction
+    # of the neighborhood when < 1, an absolute count otherwise),
+    # "median" takes the coordinate-wise median. Robust modes replace
+    # the weighted Eq. 5 mix with an unweighted robust average and are
+    # reference-engine only in this PR (the fused driver delegates);
+    # neither composes with cfg.compress.
+    byzantine: tuple[int, ...] = ()  # worker ids that attack the wire
+    byzantine_attack: str = "signflip"
+    robust: str = "none"             # "none" | "trimmed:<b>" | "median"
+    # time-varying non-IID drift (data/partition.DriftingPartition):
+    # every drift_every rounds the p-skew class -> worker-group pinning
+    # rotates one worker over the fleet, so each worker's local label
+    # distribution slowly cycles while the global distribution stays
+    # fixed. 0 disables drift (the paper's static partition).
+    drift_every: int = 0
 
 
 @dataclass(frozen=True)

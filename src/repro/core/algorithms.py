@@ -262,6 +262,7 @@ class FedHPStrategy(Strategy):
 
 
 STRATEGIES = {
+    "base": Strategy,
     "fedhp": FedHPStrategy,
     "dpsgd": DPSGDStrategy,
     "ldsgd": LDSGDStrategy,

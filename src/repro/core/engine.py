@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.configs.base import FedHPConfig
 from repro.core import compression
+from repro.core import robust as robust_agg
 from repro.core import topology as topo
 from repro.core.algorithms import Strategy
 from repro.core.consensus import pairwise_distances
@@ -331,6 +332,21 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
 
     codec0 = compression.parse_mode(cfg.compress)
     compress = codec0.kind != "none"
+    # Byzantine scenario axis (core/robust.py): attackers corrupt the
+    # wire copy, robust modes replace the weighted mix with a trimmed /
+    # median aggregation of the closed neighborhood. Neither composes
+    # with compressed gossip (a codec's residual state assumes the mix
+    # consumed what was shipped).
+    byz = robust_agg.byzantine_mask(cfg.byzantine, n)
+    has_byz = bool(byz.any())
+    robust_mode, robust_b = robust_agg.parse_robust(cfg.robust)
+    robust_active = has_byz or robust_mode != "none"
+    if robust_active and compress:
+        raise ValueError(
+            "cfg.byzantine / cfg.robust do not compose with cfg.compress")
+    atk_kind, atk_scale = (robust_agg.parse_attack(cfg.byzantine_attack)
+                           if has_byz else ("signflip", 1.0))
+    byz_j = jnp.asarray(byz)
     # compressed links pay Eq. 10 comm time / the codec's wire ratio
     # (int8+scales or k sparse values instead of raw f32); the adaptive
     # strategy may tighten a sparse codec's k per round via plan.codec.
@@ -349,6 +365,11 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
     clock = 0.0
     needs_cross = strategy.name == "pens"
     sparse_gossip = cfg.gossip == "sparse"
+    # time-varying non-IID drift: a DriftingPartition swaps shard lists
+    # on its schedule; static lists pass through untouched. The batch
+    # RNG consumption is shape-identical either way, so both engines
+    # replay the same stream draw for draw.
+    drifting = hasattr(shards, "shards_at")
     for h in range(rounds):
         alive = cluster.advance_round(h)
         joined = cluster.last_joined
@@ -389,7 +410,9 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
 
         # --- local updating (Eq. 3), masked to tau_i ---
         tau_cap = int(max(taus.max(), 1))
-        bx, by = _draw_batches(rng, data, shards, tau_cap, cfg.batch_size)
+        bx, by = _draw_batches(rng, data,
+                               shards.shards_at(h) if drifting else shards,
+                               tau_cap, cfg.batch_size)
         prev = stacked
         stacked = _local_train(stacked, bx, by, jnp.asarray(taus),
                                jnp.float32(lr), tau_cap)
@@ -411,7 +434,47 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
         clock += t_round
 
         # --- gossip aggregation (Eq. 5-6), optionally compressed ---
-        if adj.sum() > 0:
+        if adj.sum() > 0 and robust_active:
+            # Byzantine / robust path (core/robust.py): byzantine rows
+            # lie on the wire; robust modes aggregate the closed
+            # neighborhood coordinate-wise instead of the weighted mix.
+            # Dense gathers + sorts; sparse trims via segment-op peeling
+            # (median has no segment form and uses the gathered table).
+            flat = _flatten_workers(stacked)
+            transmitted = (robust_agg.apply_attack(
+                flat, byz_j, jnp.float32(atk_scale), kind=atk_kind)
+                if has_byz else flat)
+            if robust_mode == "trimmed" and sparse_gossip:
+                e = topo.edges_from_adj(adj)
+                src, dst, _ = topo.directed_edges(
+                    e, np.zeros(e.shape[0]))
+                cnt = adj.sum(1) + 1
+                bi = np.minimum(
+                    np.floor(robust_b * cnt) if robust_b < 1
+                    else np.full(n, robust_b), (cnt - 1) // 2)
+                mixed = robust_agg.trimmed_mean_edges(
+                    flat, transmitted, jnp.asarray(src), jnp.asarray(dst),
+                    b=robust_b, num_workers=n,
+                    b_max=max(int(bi.max()), 0))
+            elif robust_mode in ("trimmed", "median"):
+                nbr, deg = robust_agg.neighbor_table(adj)
+                mixed = robust_agg.robust_gossip_dense(
+                    flat, transmitted, jnp.asarray(nbr), jnp.asarray(deg),
+                    b=robust_b, mode=robust_mode)
+            elif sparse_gossip:
+                e = topo.edges_from_adj(adj)
+                ew = topo.edge_mixing_weights(e, n, mixing)
+                src, dst, ws = map(jnp.asarray, topo.directed_edges(e, ew))
+                mixed = robust_agg.gossip_byz_edges(flat, transmitted,
+                                                    src, dst, ws)
+            else:
+                mixfn = (topo.mixing_matrix_metropolis
+                         if mixing == "metropolis"
+                         else topo.mixing_matrix_uniform)
+                mixed = robust_agg.gossip_byz_dense(
+                    flat, transmitted, jnp.asarray(mixfn(adj), jnp.float32))
+            stacked = _unflatten(mixed, stacked)
+        elif adj.sum() > 0:
             if sparse_gossip:
                 # edge-list path: per-edge weights from degrees alone
                 # (bit-identical to the dense matrices' off-diagonals),
@@ -446,6 +509,10 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
                     stacked = _gossip(stacked, mix)
 
         # --- measurements (Alg. 1 lines 4-5, 9-10) ---
+        # fleet metrics cover the honest alive workers only: byzantine
+        # rows are not part of the deployment being measured (their
+        # local state is honest but they are adversaries, not clients)
+        meas = (alive & ~byz) if has_byz and (alive & ~byz).any() else alive
         losses, accs, ls, sigs, upds = _measure(stacked, prev, ex, ey, px, py)
         flat = np.asarray(_flatten_workers(stacked))
         pair = pairwise_distances(flat)
@@ -455,14 +522,14 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
                                                   ey[:, :64]))
         strategy.observe(
             h, adj=adj, mu=mu, beta=beta, edge_dist=pair,
-            update_norms=np.asarray(upds)[alive] if alive.any() else [0.0],
-            smooth_l=float(np.median(np.asarray(ls)[alive])),
-            sigma=float(np.median(np.asarray(sigs)[alive])),
-            loss=float(np.mean(np.asarray(losses)[alive])),
+            update_norms=np.asarray(upds)[meas] if meas.any() else [0.0],
+            smooth_l=float(np.median(np.asarray(ls)[meas])),
+            sigma=float(np.median(np.asarray(sigs)[meas])),
+            loss=float(np.mean(np.asarray(losses)[meas])),
             cross_loss=cross, alive=alive, wire_ratio=comm_ratio)
 
-        mean_acc, mean_loss = _mean_accuracy(stacked, tx, ty, alive)
-        fa = flat[alive] if alive.any() else flat
+        mean_acc, mean_loss = _mean_accuracy(stacked, tx, ty, meas)
+        fa = flat[meas] if meas.any() else flat
         d_bar = float(np.linalg.norm(fa - fa.mean(0), axis=1).mean())
         hist.records.append(RoundRecord(
             round=h, round_time=t_round, waiting_time=waiting,
@@ -705,6 +772,10 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
     charges Eq. 10 event comm time divided by the codec's wire ratio."""
     rounds = rounds or cfg.rounds
     n = cfg.num_workers
+    if cfg.byzantine or cfg.robust != "none":
+        raise ValueError(
+            "byzantine/robust gossip is synchronous-engine only; "
+            "run_adpsgd's pairwise exchange has no robust form yet")
     codec = compression.parse_mode(cfg.compress)
     compress = codec.kind != "none"
     if schedule is None:
@@ -733,7 +804,9 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
     snapshots = [jax.tree.map(lambda l, i=i: l[i], stacked)
                  for i in range(n)]
     hist = History()
-    for rnd in schedule.rounds:
+    drifting = hasattr(shards, "shards_at")
+    for rnd_idx, rnd in enumerate(schedule.rounds):
+        round_shards = shards.shards_at(rnd_idx) if drifting else shards
         if rnd.keep.any():
             stacked = _blend_joined(stacked, jnp.asarray(rnd.keep),
                                     jnp.asarray(rnd.donor_w, jnp.float32))
@@ -746,7 +819,7 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
                 snapshots[w] = jax.tree.map(lambda l, w=w: l[w], stacked)
         for ev in rnd.events:
             i, j = ev.worker, ev.partner
-            shard = shards[i]
+            shard = round_shards[i]
             ix = rng.integers(0, len(shard), (tau, cfg.batch_size))
             bx = jnp.asarray(data.x[shard[ix]])
             by = jnp.asarray(data.y[shard[ix]])

@@ -10,7 +10,7 @@ from repro.configs.base import FedHPConfig
 from repro.core import engine
 from repro.core.algorithms import make_strategy
 from repro.core.topology import make_base_topology
-from repro.data.partition import pskew_partition
+from repro.data.partition import DriftingPartition, pskew_partition
 from repro.data.synthetic import make_classification_data
 from repro.simulation.cluster import ChurnSchedule, SimCluster
 
@@ -43,8 +43,15 @@ def setup_experiment(cfg: FedHPConfig, *, non_iid_p: float = 0.1,
     n_test = max(num_samples // 6, 256)
     test_x, test_y = data.x[:n_test], data.y[:n_test]
     train = replace_dataset(data, data.x[n_test:], data.y[n_test:])
-    rng = np.random.default_rng(cfg.seed + 1)
-    shards = pskew_partition(train.y, cfg.num_workers, non_iid_p, rng)
+    if cfg.drift_every > 0:
+        # time-varying non-IID: the class -> group pinning rotates every
+        # drift_every rounds; shift 0 reproduces the static partition
+        # below exactly (same seed stream)
+        shards = DriftingPartition(train.y, cfg.num_workers, non_iid_p,
+                                   cfg.seed + 1, cfg.drift_every)
+    else:
+        rng = np.random.default_rng(cfg.seed + 1)
+        shards = pskew_partition(train.y, cfg.num_workers, non_iid_p, rng)
     if churn is None:
         churn = churn_from_config(cfg, rounds)
     cluster = SimCluster(cfg.num_workers, model_bits=MODEL_BITS_DEFAULT,

@@ -317,6 +317,7 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
     """
     n = cfg.num_workers
     compress = codec0.kind != "none"
+    drifting = hasattr(shards, "shards_at")
     per: list[dict] = []
     plan = None
     stop = False
@@ -341,7 +342,8 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
             adj = topo.repair_connectivity(adj, alive, cost=beta)
         taus = np.where(alive, np.clip(plan.taus, 1, cfg.tau_max), 0)
         tau_cap = int(max(taus.max(), 1))
-        batches = [_draw_batches(rng, data, shards, tau_cap, cfg.batch_size)
+        sh = shards.shards_at(h) if drifting else shards
+        batches = [_draw_batches(rng, data, sh, tau_cap, cfg.batch_size)
                    for rng in rngs]
 
         # --- clock (Eq. 10-11), formulas identical to run_dfl ---
@@ -475,6 +477,20 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
     """
     rounds = rounds or cfg.rounds
     n = cfg.num_workers
+    if cfg.byzantine or cfg.robust != "none":
+        # robust modes are reference-path only: the trimmed /
+        # median aggregations are data-dependent sorts that do not yet
+        # have a fused scan lowering, so the driver delegates — same
+        # History, one engine of truth
+        if seeds is not None:
+            raise ValueError(
+                "byzantine/robust runs delegate to the reference engine "
+                "and do not support batched seeds")
+        from repro.core.engine import run_dfl
+        return run_dfl(data, test_x, test_y, shards, cluster, cfg,
+                       strategy, rounds=rounds, hidden=hidden,
+                       eval_subset=eval_subset, mixing=mixing,
+                       time_budget=time_budget)
     adaptive = getattr(strategy, "adaptive", False)
     batched = seeds is not None
     seed_list = ([int(s) for s in np.asarray(seeds).reshape(-1)]
@@ -738,6 +754,10 @@ def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
     (``rounds``/``time_budget`` are generation-time knobs)."""
     rounds = rounds or cfg.rounds
     n = cfg.num_workers
+    if cfg.byzantine or cfg.robust != "none":
+        raise ValueError(
+            "byzantine/robust gossip is synchronous-engine only in this "
+            "PR; the AD-PSGD pairwise exchange has no robust form yet")
     batched = seeds is not None
     seed_list = ([int(s) for s in np.asarray(seeds).reshape(-1)]
                  if batched else [int(cfg.seed)])
@@ -817,8 +837,10 @@ def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
                        cfg.batch_size), np.int32)
         for si, rng in enumerate(rngs):
             for t, r in enumerate(seg):
+                round_shards = (shards.shards_at(done + t)
+                                if hasattr(shards, "shards_at") else shards)
                 for k, e in enumerate(r.events):
-                    shard = shards[e.worker]
+                    shard = round_shards[e.worker]
                     ix = rng.integers(0, len(shard), (tau, cfg.batch_size))
                     bx[si, t, k] = data.x[shard[ix]]
                     by[si, t, k] = data.y[shard[ix]]

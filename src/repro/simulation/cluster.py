@@ -43,16 +43,47 @@ class ChurnEvent:
       crash    — abrupt failure (survivors also pay a detection timeout)
       join     — (re-)admission; the engine re-initializes the model row
       straggle — compute slows by ``factor`` for ``duration`` rounds
+
+    ``group`` carries a correlated-failure payload: when non-empty the
+    event applies to every worker in it at once (a rack/region outage
+    from ``generate_correlated``) and ``worker`` is just the group's
+    representative. Single-worker events leave it empty.
     """
     round: int
     kind: str
     worker: int
     factor: float = 4.0
     duration: int = 5
+    group: tuple[int, ...] = ()
 
     def __post_init__(self):
         if self.kind not in CHURN_KINDS:
             raise ValueError(f"unknown churn kind {self.kind!r}")
+
+    @property
+    def workers(self) -> tuple[int, ...]:
+        """Every worker the event applies to: the correlated ``group``
+        when present, else the single ``worker``."""
+        return self.group if self.group else (self.worker,)
+
+
+def _alive_replay(events: list[ChurnEvent], num_workers: int):
+    """Closure over a schedule-in-progress: ``alive_at(r)`` replays the
+    membership events scheduled so far up to round ``r`` — the ground
+    truth the generators' ``min_alive`` guards hold against (a rejoin
+    only restores its workers from its `back` round on). Group events
+    apply to every member."""
+    def alive_at(r: int) -> np.ndarray:
+        a = np.ones(num_workers, bool)
+        for e in sorted(events, key=lambda e: e.round):
+            if e.round > r:
+                break
+            if e.kind in ("leave", "crash"):
+                a[list(e.workers)] = False
+            elif e.kind == "join":
+                a[list(e.workers)] = True
+        return a
+    return alive_at
 
 
 @dataclass(frozen=True)
@@ -62,10 +93,12 @@ class ChurnSchedule:
     events: tuple[ChurnEvent, ...] = ()
 
     def events_at(self, h: int) -> list[ChurnEvent]:
+        """Every event scheduled for the start of round ``h``."""
         return [e for e in self.events if e.round == h]
 
     @property
     def departure_rounds(self) -> list[int]:
+        """Sorted rounds at which any leave/crash event fires."""
         return sorted(e.round for e in self.events
                       if e.kind in ("leave", "crash"))
 
@@ -90,22 +123,14 @@ class ChurnSchedule:
         # before/after on both sides
         lo, hi = max(1, rounds // 10), max(2, rounds - rounds // 10)
         depart_rounds = np.sort(rng.integers(lo, hi, n_depart))
+        alive_at = _alive_replay(events, num_workers)
+        # sample each departure's kind from the allowed subset — a fixed
+        # leave/crash coin that `continue`d on disallowed kinds silently
+        # halved the delivered rate for kinds=("crash",) and dropped the
+        # paired rejoin with it
+        dep_kinds = tuple(k for k in ("leave", "crash") if k in kinds)
 
-        def alive_at(r: int) -> np.ndarray:
-            """Replay membership events scheduled so far up to round r —
-            the ground truth the min_alive guard must hold against (a
-            rejoin only restores the worker from its `back` round on)."""
-            a = np.ones(num_workers, bool)
-            for e in sorted(events, key=lambda e: e.round):
-                if e.round > r:
-                    break
-                if e.kind in ("leave", "crash"):
-                    a[e.worker] = False
-                elif e.kind == "join":
-                    a[e.worker] = True
-            return a
-
-        for r in depart_rounds:
+        for r in depart_rounds if dep_kinds else ():
             a = alive_at(int(r))
             # the departure must keep min_alive from round r until the
             # departed worker's own rejoin (if any) — check the minimum
@@ -113,10 +138,7 @@ class ChurnSchedule:
             if a.sum() <= min_alive:
                 continue
             w = int(rng.choice(np.nonzero(a)[0]))
-            kind = "crash" if ("crash" in kinds and rng.random() < 0.5
-                              ) else "leave"
-            if kind not in kinds:
-                continue
+            kind = str(rng.choice(dep_kinds))
             events.append(ChurnEvent(int(r), kind, w))
             if any(alive_at(rr).sum() < min_alive
                    for rr in range(int(r), rounds)):
@@ -128,17 +150,74 @@ class ChurnSchedule:
                     events.append(ChurnEvent(back, "join", w))
         if "straggle" in kinds:
             for _ in range(n_depart):
-                w = int(rng.integers(0, num_workers))
                 r = int(rng.integers(lo, hi))
+                # spikes must hit survivors: draw from the alive set at
+                # the spike round (a spike on a departed worker is a
+                # silent no-op that under-delivers the scenario)
+                a = alive_at(r)
+                if not a.any():
+                    continue
+                w = int(rng.choice(np.nonzero(a)[0]))
                 events.append(ChurnEvent(r, "straggle", w,
                                          factor=straggle_factor,
                                          duration=straggle_duration))
         events.sort(key=lambda e: (e.round, e.worker))
         return cls(tuple(events))
 
+    @classmethod
+    def generate_correlated(cls, num_workers: int, rounds: int, *,
+                            racks: int, outages: int, seed: int = 0,
+                            min_alive: int = 2, rejoin_p: float = 0.5,
+                            outage_len: int = 5,
+                            kind: str = "crash") -> "ChurnSchedule":
+        """Seeded correlated-failure generator: ``outages`` rack/region
+        outage events, each taking out one whole rack (the same
+        contiguous ``topology.rack_assignment`` blocks the ``geo:<racks>``
+        topology uses, so an outage removes exactly one dense
+        neighborhood). Each outage is a single grouped ``kind`` event;
+        with probability ``rejoin_p`` the rack comes back as a grouped
+        join after ``outage_len`` rounds. Racks are trimmed (and outages
+        skipped) as needed so the alive count never drops below
+        ``min_alive``.
+        """
+        from repro.core.topology import rack_assignment
+        if kind not in ("leave", "crash"):
+            raise ValueError(f"outage kind must be leave|crash, got {kind!r}")
+        rng = np.random.default_rng(seed)
+        assign = rack_assignment(num_workers, racks)
+        events: list[ChurnEvent] = []
+        lo, hi = max(1, rounds // 10), max(2, rounds - rounds // 10)
+        alive_at = _alive_replay(events, num_workers)
+        for r in np.sort(rng.integers(lo, hi, outages)):
+            rack = int(rng.integers(0, racks))
+            a = alive_at(int(r))
+            members = np.nonzero((assign == rack) & a)[0]
+            # trim the group so the fleet keeps min_alive survivors
+            take = min(members.size, int(a.sum()) - min_alive)
+            if take <= 0:
+                continue
+            group = tuple(int(w) for w in members[:take])
+            events.append(ChurnEvent(int(r), kind, group[0], group=group))
+            if any(alive_at(rr).sum() < min_alive
+                   for rr in range(int(r), rounds)):
+                events.pop()                       # would starve the fleet
+                continue
+            back = int(r) + max(outage_len, 1)
+            if rng.random() < rejoin_p and back < rounds:
+                events.append(ChurnEvent(back, "join", group[0],
+                                         group=group))
+        events.sort(key=lambda e: (e.round, e.worker))
+        return cls(tuple(events))
+
 
 @dataclass
 class SimCluster:
+    """The simulated heterogeneous fleet: seeded per-round compute/link
+    time draws (device profiles + fluctuating bandwidth) plus dynamic
+    membership — ``advance_round`` replays the ``ChurnSchedule`` (and the
+    legacy ``fail_at``/``recover_at`` hooks) into the alive mask the
+    engines consume."""
+
     num_workers: int
     model_bits: float                    # per-transfer payload (bits)
     seed: int = 0
@@ -151,10 +230,11 @@ class SimCluster:
     def __post_init__(self):
         if self.churn is not None:
             for e in self.churn.events:
-                if not 0 <= e.worker < self.num_workers:
-                    raise ValueError(
-                        f"churn event {e} targets worker {e.worker}; "
-                        f"cluster has {self.num_workers} workers")
+                for w in e.workers:
+                    if not 0 <= w < self.num_workers:
+                        raise ValueError(
+                            f"churn event {e} targets worker {w}; "
+                            f"cluster has {self.num_workers} workers")
         rng = np.random.default_rng(self.seed)
         profiles = list(DEVICE_PROFILES.values())
         if self.heterogeneous:
@@ -208,16 +288,19 @@ class SimCluster:
                 self.last_joined[w] = True
         if self.churn is not None:
             for ev in self.churn.events_at(h):
-                w = ev.worker
-                if ev.kind in ("leave", "crash") and self.alive[w]:
-                    self.alive[w] = False
-                    if ev.kind == "crash":
-                        self.last_crashed[w] = True
-                elif ev.kind == "join" and not self.alive[w]:
-                    self.alive[w] = True
-                    self.last_joined[w] = True
-                elif ev.kind == "straggle":
-                    # active for rounds h .. h+duration-1 (exactly duration)
-                    self._straggle_factor[w] = max(ev.factor, 1.0)
-                    self._straggle_until[w] = h + max(ev.duration, 1)
+                # grouped events (correlated rack outages) apply the same
+                # transition to every member in one round
+                for w in ev.workers:
+                    if ev.kind in ("leave", "crash") and self.alive[w]:
+                        self.alive[w] = False
+                        if ev.kind == "crash":
+                            self.last_crashed[w] = True
+                    elif ev.kind == "join" and not self.alive[w]:
+                        self.alive[w] = True
+                        self.last_joined[w] = True
+                    elif ev.kind == "straggle":
+                        # active for rounds h .. h+duration-1 (exactly
+                        # duration rounds)
+                        self._straggle_factor[w] = max(ev.factor, 1.0)
+                        self._straggle_until[w] = h + max(ev.duration, 1)
         return self.alive.copy()

@@ -309,3 +309,142 @@ def test_join_reinits_from_population():
     assert np.isfinite(cons).all()
     # join round's consensus stays within the run's historical envelope
     assert cons[8] <= 3.0 * max(cons[:8]) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# generator invariants (regression: kinds-subset rate under-delivery)
+# ---------------------------------------------------------------------------
+
+from _hypothesis_compat import given, settings, st  # noqa: E402
+from repro.simulation.cluster import CHURN_KINDS, _alive_replay  # noqa: E402
+
+KIND_SUBSETS = (("crash",), ("leave",), ("leave", "crash"),
+                ("crash", "join"), ("leave", "join", "straggle"),
+                CHURN_KINDS)
+
+
+def test_generate_delivers_rate_for_every_kinds_subset():
+    """Regression: the old fixed leave/crash coin ``continue``d on the
+    disallowed kind, silently halving the delivered departure rate for
+    single-kind subsets. With min_alive=1 (clamp never binds at these
+    rates) every subset must deliver exactly round(rate*N) departures,
+    all drawn from the allowed kinds."""
+    n, rounds = 12, 80
+    for kinds in KIND_SUBSETS:
+        allowed_dep = {k for k in ("leave", "crash") if k in kinds}
+        for rate in (0.25, 0.5, 0.75):
+            for seed in range(5):
+                sched = ChurnSchedule.generate(
+                    n, rounds, rate=rate, seed=seed, kinds=kinds,
+                    min_alive=1)
+                deps = [e for e in sched.events
+                        if e.kind in ("leave", "crash")]
+                assert {e.kind for e in sched.events} <= set(kinds), kinds
+                if allowed_dep:
+                    assert len(deps) == round(rate * n), (kinds, rate, seed)
+                else:
+                    assert not deps, (kinds, rate, seed)
+
+
+def test_generate_min_alive_sweep():
+    """min_alive is never violated at ANY round, for every kinds subset
+    and aggressive rates (rate=1.0 forces the clamp to bind)."""
+    n, rounds = 8, 60
+    for kinds in KIND_SUBSETS:
+        for min_alive in (1, 3, 5):
+            for seed in range(8):
+                sched = ChurnSchedule.generate(
+                    n, rounds, rate=1.0, seed=seed, kinds=kinds,
+                    min_alive=min_alive)
+                cl = SimCluster(n, model_bits=1e3, churn=sched)
+                for h in range(rounds):
+                    alive = cl.advance_round(h)
+                    assert alive.sum() >= min_alive, \
+                        (kinds, min_alive, seed, h)
+
+
+def test_generate_stragglers_hit_survivors():
+    """Regression: straggler spikes drew from range(N) ignoring
+    departures, so spikes could land on dead workers (silent no-ops that
+    under-deliver the scenario). Every spike's target must be alive at
+    the spike round under full-schedule replay."""
+    n, rounds = 10, 60
+    for seed in range(20):
+        sched = ChurnSchedule.generate(n, rounds, rate=0.6, seed=seed,
+                                       rejoin_p=0.3)
+        alive_at = _alive_replay(list(sched.events), n)
+        spikes = [e for e in sched.events if e.kind == "straggle"]
+        assert spikes, seed                      # rate 0.6 -> 6 spikes drawn
+        for e in spikes:
+            assert alive_at(e.round)[e.worker], (seed, e)
+
+
+def test_generate_correlated_grouped_rack_outages():
+    """Correlated schedules: every outage is a grouped event whose
+    members share one rack_assignment block, min_alive holds at every
+    round, and grouped rejoins restore the same group."""
+    from repro.core.topology import rack_assignment
+    n, rounds, racks = 12, 50, 4
+    assign = rack_assignment(n, racks)
+    saw_outage = False
+    for seed in range(15):
+        sched = ChurnSchedule.generate_correlated(
+            n, rounds, racks=racks, outages=3, seed=seed, min_alive=3)
+        cl = SimCluster(n, model_bits=1e3, churn=sched)
+        for h in range(rounds):
+            assert cl.advance_round(h).sum() >= 3, (seed, h)
+        for e in sched.events:
+            assert e.group, e                    # every event is grouped
+            if e.kind == "crash":
+                saw_outage = True
+                assert len({int(assign[w]) for w in e.workers}) == 1, e
+    assert saw_outage
+
+
+def test_generate_correlated_rejects_bad_kind():
+    with pytest.raises(ValueError):
+        ChurnSchedule.generate_correlated(8, 20, racks=2, outages=1,
+                                          kind="straggle")
+
+
+def test_cluster_applies_grouped_events():
+    """SimCluster.advance_round applies a grouped crash/join to every
+    member atomically."""
+    n = 8
+    sched = ChurnSchedule((
+        ChurnEvent(2, "crash", 1, group=(1, 2, 3)),
+        ChurnEvent(5, "join", 1, group=(1, 2, 3)),
+    ))
+    cl = SimCluster(n, model_bits=1e3, churn=sched)
+    assert cl.advance_round(1).all()
+    alive = cl.advance_round(2)
+    assert not alive[[1, 2, 3]].any() and alive[[0, 4, 5, 6, 7]].all()
+    assert cl.last_crashed[[1, 2, 3]].all()
+    alive = cl.advance_round(5)
+    assert alive.all() and cl.last_joined[[1, 2, 3]].all()
+
+
+def test_cluster_rejects_out_of_range_group_member():
+    sched = ChurnSchedule((ChurnEvent(1, "crash", 0, group=(0, 9)),))
+    with pytest.raises(ValueError, match="targets worker 9"):
+        SimCluster(4, model_bits=1e3, churn=sched)
+
+
+@given(st.integers(min_value=4, max_value=16), st.integers(0, 2**31 - 1),
+       st.sampled_from(KIND_SUBSETS),
+       st.floats(min_value=0.0, max_value=1.0))
+@settings(max_examples=40, deadline=None)
+def test_generate_property_invariants(n, seed, kinds, rate):
+    """Property sweep: delivered departures == round(rate*n) whenever the
+    clamp cannot bind (min_alive=1, departures < n), every event kind is
+    from the allowed subset, and replayed membership respects min_alive."""
+    sched = ChurnSchedule.generate(n, 50, rate=rate, seed=seed,
+                                   kinds=kinds, min_alive=1)
+    assert {e.kind for e in sched.events} <= set(kinds)
+    deps = [e for e in sched.events if e.kind in ("leave", "crash")]
+    allowed_dep = {k for k in ("leave", "crash") if k in kinds}
+    want = round(rate * n) if allowed_dep else 0
+    if want < n:                       # clamp can only bind at want == n
+        assert len(deps) == want
+    alive_at = _alive_replay(list(sched.events), n)
+    assert all(alive_at(r).sum() >= 1 for r in range(50))

@@ -282,3 +282,140 @@ def test_validate_topology_rejects_bad():
     bad[0, 1] = 1  # asymmetric
     with pytest.raises(ValueError):
         topo.validate_topology(bad)
+
+
+# ---------------------------------------------------------------------------
+# complex-network families: Barabasi-Albert, Watts-Strogatz, geo/racks
+# ---------------------------------------------------------------------------
+
+FAMILY_SPECS = ("ba:1", "ba:2", "ba:3", "ws:2:0.0", "ws:4:0.2", "ws:6:1.0",
+                "geo:1", "geo:3", "geo:5")
+
+
+def test_families_valid_connected_roundtrip():
+    """Every family x size x seed: validate_topology passes, the graph is
+    connected, and it survives the edges_from_adj/adj_from_edges
+    round-trip (so both the dense and the edge-list engines can run it)."""
+    for spec in FAMILY_SPECS:
+        for n in (5, 8, 17):
+            if spec.startswith("ws:") and n <= int(spec.split(":")[1]):
+                continue             # WS needs k < n
+            for seed in range(3):
+                a = topo.make_base_topology(n, spec, seed)
+                topo.validate_topology(a)
+                assert topo.is_connected(a), (spec, n, seed)
+                e = topo.edges_from_adj(a)
+                np.testing.assert_array_equal(topo.adj_from_edges(e, n), a,
+                                              err_msg=f"{spec} n={n}")
+
+
+def test_families_deterministic_per_seed():
+    for spec in ("ba:2", "ws:4:0.3", "geo:3"):
+        a = topo.make_base_topology(12, spec, 7)
+        b = topo.make_base_topology(12, spec, 7)
+        np.testing.assert_array_equal(a, b, err_msg=spec)
+        c = topo.make_base_topology(12, spec, 8)
+        if spec != "geo:3":          # geo's rack blocks are seed-free
+            assert not np.array_equal(a, c), spec
+
+
+def test_ba_edge_count_and_hubs():
+    """BA attaches each of the n-m-1 later nodes with exactly m edges to a
+    complete (m+1)-core, so the total edge count is closed-form; the
+    preferential attachment should make the max degree exceed m."""
+    rng = np.random.default_rng(0)
+    for n, m in ((10, 1), (20, 2), (40, 3)):
+        a = topo.barabasi_albert_topology(n, m, rng)
+        want = m * (m + 1) // 2 + m * (n - m - 1)
+        assert a.sum() // 2 == want, (n, m)
+        assert a.sum(axis=1).max() > m, "no hub emerged"
+    with pytest.raises(ValueError):
+        topo.barabasi_albert_topology(4, 0, rng)
+    with pytest.raises(ValueError):
+        topo.barabasi_albert_topology(4, 4, rng)
+
+
+def test_ws_zero_p_is_ring_lattice():
+    """p=0 disables rewiring: the graph is exactly the circulant lattice
+    with degree k everywhere."""
+    n, k = 12, 4
+    a = topo.watts_strogatz_topology(n, k, 0.0, np.random.default_rng(0))
+    assert (a.sum(axis=1) == k).all()
+    for i in range(n):
+        for off in range(1, k // 2 + 1):
+            assert a[i, (i + off) % n] == 1
+    with pytest.raises(ValueError):
+        topo.watts_strogatz_topology(6, 3, 0.1, np.random.default_rng(0))
+    with pytest.raises(ValueError):
+        topo.watts_strogatz_topology(6, 2, 1.5, np.random.default_rng(0))
+
+
+def test_ws_rewiring_preserves_degree_sum():
+    """Rewiring moves endpoints but never adds/removes edges: the edge
+    count is invariant for any p."""
+    n, k = 20, 4
+    for p in (0.1, 0.5, 1.0):
+        a = topo.watts_strogatz_topology(n, k, p, np.random.default_rng(3))
+        assert a.sum() // 2 == n * k // 2, p
+        assert topo.is_connected(a)
+
+
+def test_rack_assignment_contiguous_blocks():
+    assign = topo.rack_assignment(10, 3)
+    assert assign.shape == (10,)
+    # contiguous, sorted, covers all racks
+    assert (np.diff(assign) >= 0).all()
+    assert set(assign.tolist()) == {0, 1, 2}
+    np.testing.assert_array_equal(np.bincount(assign), [4, 3, 3])
+    with pytest.raises(ValueError):
+        topo.rack_assignment(4, 5)
+
+
+def test_geo_intra_rack_complete_plus_ring_uplinks():
+    n, racks = 12, 4
+    a = topo.geo_topology(n, racks, np.random.default_rng(0))
+    assign = topo.rack_assignment(n, racks)
+    same = np.equal.outer(assign, assign)
+    np.fill_diagonal(same, False)
+    # within a rack: complete
+    assert (a[same] == 1).all()
+    # across racks: exactly one uplink per ring edge (racks >= 3 -> racks
+    # ring edges; racks == 2 would collapse the two ring directions)
+    assert a[~same & np.triu(np.ones((n, n), bool), 1)].sum() == racks
+
+
+def test_metropolis_vectorized_matches_loop():
+    """The vectorized Metropolis-Hastings weights must be BIT-identical
+    to the original O(N^2) loop (the differential engine tests depend on
+    exact reproducibility of the mixing matrix)."""
+    rng = np.random.default_rng(5)
+    for spec in ("ba:2", "ws:4:0.2", "erdos:0.4"):
+        for n in (6, 9, 16):
+            adj = topo.make_base_topology(n, spec, int(rng.integers(1e6)))
+            deg = adj.sum(axis=1)
+            w_loop = np.zeros((n, n))
+            for i in range(n):
+                for j in range(n):
+                    if adj[i, j]:
+                        w_loop[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+                w_loop[i, i] = 1.0 - w_loop[i].sum()
+            np.testing.assert_array_equal(topo.mixing_matrix_metropolis(adj),
+                                          w_loop, err_msg=f"{spec} n={n}")
+
+
+@given(st.integers(min_value=4, max_value=24), st.integers(0, 2**31 - 1),
+       st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_ba_property_valid_connected(n, seed, m):
+    a = topo.barabasi_albert_topology(n, m, np.random.default_rng(seed))
+    topo.validate_topology(a)
+    assert topo.is_connected(a)
+
+
+@given(st.integers(min_value=6, max_value=24), st.integers(0, 2**31 - 1),
+       st.floats(0.0, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_ws_property_valid_connected(n, seed, p):
+    a = topo.watts_strogatz_topology(n, 4, p, np.random.default_rng(seed))
+    topo.validate_topology(a)
+    assert topo.is_connected(a)

@@ -1,0 +1,134 @@
+"""Time-varying non-IID drift: DriftingPartition semantics and the
+engine integration (``cfg.drift_every``) — reference and fused engines
+must see the same rotating shards and stay differentially equivalent.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.configs.base import FedHPConfig
+from repro.core.experiment import run_algorithm, setup_experiment
+from repro.data.partition import (DriftingPartition, label_histogram,
+                                  pskew_partition)
+
+CFG = FedHPConfig(num_workers=8, rounds=12, tau_init=4, tau_max=20,
+                  lr=0.1, batch_size=32, seed=3, drift_every=4)
+
+
+def _labels(n=600, c=10, seed=0):
+    return np.random.default_rng(seed).integers(0, c, n)
+
+
+# ---------------------------------------------------------------------------
+# DriftingPartition semantics
+# ---------------------------------------------------------------------------
+
+def test_shift_schedule_and_periodicity():
+    dp = DriftingPartition(_labels(), 12, 0.5, seed=1, period=5)
+    assert [dp.shift_at(h) for h in (0, 4, 5, 9, 10)] == [0, 0, 1, 1, 2]
+    # rotation is periodic in the fleet size: shift 12 == shift 0
+    a = dp.shards_at(0)
+    b = dp.shards_at(12 * 5)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_shift_zero_matches_static_partition():
+    """drift_every > 0 with shift 0 must reproduce the static partition
+    exactly (same seed stream) — the first drift period is the paper's
+    assignment."""
+    labels = _labels()
+    dp = DriftingPartition(labels, 8, 0.5, seed=7, period=3)
+    static = pskew_partition(labels, 8, 0.5, np.random.default_rng(7))
+    for x, y in zip(dp.shards_at(0), static):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_shards_rotate_and_cover():
+    """Each shift is a full partition (all samples, no duplicates) and
+    the per-worker histograms actually move between shifts."""
+    labels = _labels()
+    dp = DriftingPartition(labels, 8, 0.7, seed=2, period=1)
+    h_prev = None
+    for h in range(3):
+        shards = dp.shards_at(h)
+        allix = np.sort(np.concatenate(shards))
+        np.testing.assert_array_equal(allix, np.arange(len(labels)))
+        hist = label_histogram(labels, shards, 10)
+        if h_prev is not None:
+            assert (hist != h_prev).any(), f"no drift at shift {h}"
+        h_prev = hist
+
+
+def test_static_views_are_round_zero():
+    dp = DriftingPartition(_labels(), 8, 0.5, seed=3, period=2)
+    assert len(dp) == 8
+    for w, ix in enumerate(dp):
+        np.testing.assert_array_equal(ix, dp.shards_at(0)[w])
+        np.testing.assert_array_equal(dp[w], dp.shards_at(0)[w])
+
+
+def test_rejects_bad_period():
+    with pytest.raises(ValueError):
+        DriftingPartition(_labels(), 8, 0.5, seed=0, period=0)
+
+
+def test_setup_experiment_routes_drift():
+    _, _, _, shards, _ = setup_experiment(CFG, non_iid_p=0.5)
+    assert isinstance(shards, DriftingPartition)
+    assert shards.period == CFG.drift_every
+    # drift_every=0 -> plain static list with the identical seed stream
+    _, _, _, static, _ = setup_experiment(replace(CFG, drift_every=0),
+                                          non_iid_p=0.5)
+    assert isinstance(static, list)
+    for x, y in zip(static, shards.shards_at(0)):
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+def test_drift_changes_trajectory():
+    """drift_every must actually reach the batch sampler: the drifting
+    run's trajectory diverges from the static one after the first
+    rotation."""
+    h_d = run_algorithm("dpsgd", CFG, non_iid_p=0.6, rounds=10)
+    h_s = run_algorithm("dpsgd", replace(CFG, drift_every=0),
+                        non_iid_p=0.6, rounds=10)
+    a, b = h_d.as_arrays(), h_s.as_arrays()
+    # identical until the first shift (rounds 0..3), different after
+    np.testing.assert_allclose(a["loss"][:4], b["loss"][:4], rtol=1e-6)
+    assert not np.allclose(a["loss"][4:], b["loss"][4:])
+
+
+def test_drift_reference_matches_fused():
+    """Both synchronous engines replay the same rotating shards: host
+    fields exact, device metrics within the differential tolerance."""
+    h_ref = run_algorithm("dpsgd", CFG, non_iid_p=0.6, rounds=10)
+    h_fus = run_algorithm("dpsgd", CFG, non_iid_p=0.6, rounds=10,
+                          fused=True)
+    a, b = h_ref.as_arrays(), h_fus.as_arrays()
+    for k in ("round", "round_time", "waiting_time", "mean_tau",
+              "num_links", "cumulative_time"):
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    for k, tol in (("accuracy", 1e-5), ("loss", 1e-4), ("consensus", 1e-4)):
+        np.testing.assert_allclose(a[k], b[k], rtol=tol, atol=tol,
+                                   err_msg=k)
+
+
+@pytest.mark.slow
+def test_drift_adpsgd_reference_matches_fused():
+    cfg = replace(CFG, num_workers=6)
+    h_ref = run_algorithm("adpsgd", cfg, non_iid_p=0.6, rounds=8)
+    h_fus = run_algorithm("adpsgd", cfg, non_iid_p=0.6, rounds=8,
+                          fused=True)
+    a, b = h_ref.as_arrays(), h_fus.as_arrays()
+    for k in ("round", "cumulative_time"):
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    for k, tol in (("accuracy", 1e-5), ("loss", 1e-4)):
+        np.testing.assert_allclose(a[k], b[k], rtol=tol, atol=tol,
+                                   err_msg=k)

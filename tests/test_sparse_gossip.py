@@ -386,3 +386,15 @@ def test_tracker_large_w_uses_capped_estimate():
     out = tr.update(adj, pd, 1.0)
     assert np.isfinite(out).all()
     assert out.shape == (n, n)
+
+
+@pytest.mark.parametrize("base", ["ba:2", "ws:4:0.2"], ids=["ba", "ws"])
+def test_sparse_matches_dense_complex_topologies(base):
+    """Differential matrix over the complex-network families: the
+    edge-list path must be a drop-in on Barabasi-Albert and
+    Watts-Strogatz graphs too. The "base" strategy gossips over the raw
+    family graph every round (dpsgd would substitute a ring), so hubs
+    and rewired chords actually reach the segment ops."""
+    cfg = replace(CFG, base_topology=base)
+    _assert_equivalent(*_pair("base", SCHED, cfg=cfg))
+    _assert_equivalent(*_pair("base", SCHED, cfg=cfg, fused=True))

@@ -32,6 +32,9 @@ AUDITED_MODULES = [
     "src/repro/core/controller.py",
     "src/repro/core/consensus.py",
     "src/repro/core/algorithms.py",
+    "src/repro/core/robust.py",
+    "src/repro/data/partition.py",
+    "src/repro/simulation/cluster.py",
     "src/repro/kernels/sparsify_block.py",
     "src/repro/kernels/quantize_block.py",
     "src/repro/kernels/gossip_edges.py",
