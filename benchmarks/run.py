@@ -247,13 +247,13 @@ def bench_compressed(rows, full):
     --smoke mode a wire reduction < 2x or an accuracy drift > 1% vs the
     uncompressed run fails the whole benchmark (exit 1)."""
     from repro.core.compression import FP32_BITS, wire_bits, wire_ratio
-    from repro.core.experiment import MODEL_BITS_DEFAULT, run_algorithm
+    from repro.core.experiment import model_bits_for, run_algorithm
 
     cfg = base_cfg(full)
     rounds = 30 if SMOKE else (60 if not full else 150)
     if SMOKE:
         cfg = replace(cfg, num_workers=8)
-    params = int(MODEL_BITS_DEFAULT // FP32_BITS)
+    params = int(model_bits_for(cfg) // FP32_BITS)
     ratio = wire_ratio(params)
     emit(rows, "compressed", "wire_bits[f32]", wire_bits(params, "none"))
     emit(rows, "compressed", "wire_bits[int8]", wire_bits(params, "int8"))
@@ -289,13 +289,13 @@ def bench_sparse(rows, full):
     (exit 1) if top-k saves < 4x wire bits or drifts > 1% final accuracy
     from the uncompressed run."""
     from repro.core.compression import wire_bits, wire_ratio
-    from repro.core.experiment import MODEL_BITS_DEFAULT, run_algorithm
+    from repro.core.experiment import model_bits_for, run_algorithm
 
     cfg = base_cfg(full)
     rounds = 30 if SMOKE else (60 if not full else 150)
     if SMOKE:
         cfg = replace(cfg, num_workers=8)
-    params = int(MODEL_BITS_DEFAULT // 32)
+    params = int(model_bits_for(cfg) // 32)
     modes = ("none", "topk:0.1", "randk:0.1")
     for mode in modes[1:]:
         emit(rows, "sparse", f"wire_bits[{mode}]", wire_bits(params, mode))
@@ -378,7 +378,8 @@ def bench_sparse_gossip(rows, full):
          round(h_big.final_accuracy, 4))
     # the dense fused path at this W would vmap a [W, R, C] neighbor
     # buffer per worker: O(W^2 P) f32 — emit the would-be footprint
-    params = 7300  # smoke MLP flat size (compression.flat_tile_shape)
+    from repro.core import modelspec
+    params = modelspec.get_adapter("mlp").param_count  # smoke MLP flat size
     emit(rows, "sparse_gossip", "dense_neighbor_buffer_gb",
          round(big_w * big_w * params * 4 / 2**30, 0))
 
@@ -575,6 +576,96 @@ def bench_collective(rows, full):
          round(2 * (n - 1) / n * params, 3))
 
 
+def bench_pytree(rows, full):
+    """Registry pytree models through the DFL engines (core/modelspec.py):
+    a tiny dense transformer LM trains under fedhp on BOTH the reference
+    engine (core/engine.run_dfl) and the fused scan (run_dfl_fused), with
+    a per-leaf codec map ("leafmap:embed=randk:...,ln=none,default=int8")
+    compiled against the adapter's leaf-offset table. Emits the exact
+    wire accounting of the leaf map vs uniform int8 and persists both
+    trajectories to ``BENCH_pytree.json`` (the CI artifact).
+
+    In --smoke mode the run fails (exit 1) if reference and fused final
+    accuracy drift > 0.1% (the leafmap gossip payload is shared oracle
+    math — the engines must agree), if the leaf map's wire reduction
+    falls below uniform int8's, or if the LM's inverse perplexity does
+    not improve >= 5% over the run (the smoke horizon is too short to
+    cross the uniform-entropy floor; steady descent is the learning
+    gate)."""
+    import json
+
+    from repro.core import compression, modelspec
+    from repro.core.experiment import run_algorithm
+
+    cfg = base_cfg(full)
+    rounds = 10 if SMOKE else (20 if not full else 40)
+    # transformer LM under plain SGD: smaller cluster than the MLP
+    # smoke shape, and a leaf-mapped codec on the gossip wire. The
+    # smoke model is deliberately tiny — fedhp replans every round, so
+    # each distinct (adj, tau_cap) pair costs one scan compile of the
+    # whole transformer
+    model = ("dense:d=16,layers=1,ff=32,vocab=32,seq=8" if SMOKE
+             else "dense")
+    leafmap = "leafmap:embed=randk:0.05,ln=none,default=int8"
+    cfg = replace(cfg, num_workers=6 if SMOKE else 8, tau_init=6,
+                  tau_max=12, lr=0.25 if SMOKE else 0.05, model=model,
+                  compress=leafmap)
+
+    adapter = modelspec.get_adapter(cfg.model)
+    lcodec = compression.parse_mode(leafmap).compile(adapter.leaf_offsets())
+    int8_ratio = compression.wire_ratio(adapter.param_count, "int8")
+    leaf_ratio = lcodec.wire_ratio()
+    emit(rows, "pytree", "param_count", adapter.param_count)
+    emit(rows, "pytree", "model_bits", int(adapter.model_bits))
+    emit(rows, "pytree", "wire_reduction[int8]", round(int8_ratio, 2))
+    emit(rows, "pytree", "wire_reduction[leafmap]", round(leaf_ratio, 2))
+    emit(rows, "pytree", "leaf_segments", len(lcodec.segments))
+
+    traj: dict[str, dict] = {}
+    hs = {}
+    for leg, fused in (("ref", False), ("fused", True)):
+        h = run_algorithm("fedhp", cfg, non_iid_p=0.4, rounds=rounds,
+                          spread=SPREAD, fused=fused)
+        hs[leg] = h
+        a = h.as_arrays()
+        traj[leg] = {
+            "final_accuracy": round(h.final_accuracy, 6),
+            "trajectory": {k: a[k].tolist() for k in
+                           ("round", "accuracy", "loss", "consensus",
+                            "cumulative_time")},
+        }
+        emit(rows, "pytree", f"final_acc[{leg}]",
+             round(h.final_accuracy, 4))
+    drift = abs(hs["ref"].final_accuracy - hs["fused"].final_accuracy)
+    emit(rows, "pytree", "acc_drift_ref_vs_fused", round(drift, 6))
+
+    with open("BENCH_pytree.json", "w") as f:
+        json.dump({"mode": "smoke" if SMOKE else
+                   ("full" if full else "quick"),
+                   "model": adapter.spec, "workers": cfg.num_workers,
+                   "rounds": rounds, "compress": leafmap,
+                   "param_count": adapter.param_count,
+                   "wire_reduction": {"int8": int8_ratio,
+                                      "leafmap": leaf_ratio},
+                   "legs": traj}, f)
+    emit(rows, "pytree", "trajectory_file", "BENCH_pytree.json")
+
+    if SMOKE:
+        if drift > 1e-3:
+            FAILURES.append(
+                f"pytree ref-vs-fused accuracy drift {drift:.5f} > 0.1%")
+        if leaf_ratio < int8_ratio:
+            FAILURES.append(
+                f"leafmap wire reduction {leaf_ratio:.2f}x below uniform "
+                f"int8 ({int8_ratio:.2f}x) — the per-leaf map should "
+                "never pay more than its default codec alone")
+        acc0 = hs["fused"].records[0].accuracy
+        if hs["fused"].final_accuracy < 1.05 * acc0:
+            FAILURES.append(
+                f"pytree LM failed the 5% learning gate "
+                f"({acc0:.4f} -> {hs['fused'].final_accuracy:.4f})")
+
+
 BENCHES = {
     "fig1": bench_fig1,
     "fig2_3": bench_fig2_3,
@@ -589,6 +680,7 @@ BENCHES = {
     "sparse_gossip": bench_sparse_gossip,
     "adpsgd": bench_adpsgd,
     "scenarios": bench_scenarios,
+    "pytree": bench_pytree,
 }
 
 SMOKE = False              # set by --smoke; bench_fused reads it

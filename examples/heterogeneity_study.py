@@ -33,6 +33,14 @@ uncompressed selves, racing to a target accuracy on equal wall time:
 
     PYTHONPATH=src python examples/heterogeneity_study.py --compressed
 
+``--pytree`` runs the registry-model study instead: tiny dense
+transformer / xLSTM language models (models/registry.py behind
+core/modelspec.py's ModelAdapter) train under fedhp with a per-leaf
+codec map ("leafmap:embed=randk:0.05,ln=none,default=int8") on the
+gossip wire, under 10% churn:
+
+    PYTHONPATH=src python examples/heterogeneity_study.py --pytree
+
 ``--scenarios`` runs the scenario-axis study instead: FedHP's adaptive
 topology vs fixed complex-network graphs (Barabási–Albert,
 Watts–Strogatz, geo/racks) under correlated rack outages, then 20%
@@ -96,8 +104,8 @@ def compressed_study(fused: bool = False):
     """Accuracy vs completion time: int8+EF compressed gossip against
     uncompressed FedHP / D-PSGD on the same simulated-time budget."""
     from repro.core.compression import FP32_BITS, wire_ratio
-    from repro.core.experiment import MODEL_BITS_DEFAULT
-    ratio = wire_ratio(int(MODEL_BITS_DEFAULT // FP32_BITS))
+    from repro.core.experiment import model_bits_for
+    ratio = wire_ratio(int(model_bits_for(CFG) // FP32_BITS))
     print(f"compressed gossip: int8 + error feedback, "
           f"{ratio:.2f}x fewer wire bits, comm time / {ratio:.2f}")
     print(f"{'algo':8s} {'wire':>6s} {'acc':>6s} "
@@ -142,6 +150,36 @@ def scenarios_study(fused: bool = False):
         print(f"{robust:>10s} {h.final_accuracy:6.3f}")
 
 
+def pytree_study(fused: bool = False):
+    """Registry pytree models under DFL (core/modelspec.py): a tiny
+    dense transformer LM and a tiny xLSTM train under fedhp with a
+    per-leaf codec map on the gossip wire, under 10% churn — the
+    engines never see the model family, only its ModelAdapter."""
+    from repro.core import compression, modelspec
+
+    leafmap = "leafmap:embed=randk:0.05,ln=none,default=int8"
+    print("registry pytree models under fedhp + churn "
+          "(accuracy = exp(-loss), random-token baseline shown)")
+    print(f"{'model':24s} {'params':>7s} {'wire':>6s} {'base':>6s} "
+          f"{'acc':>6s} {'total(s)':>9s}")
+    # tiny dims: fedhp replans every round and each distinct plan shape
+    # costs one jit of the whole transformer/xLSTM
+    for model in ("dense:d=16,layers=1,ff=32,vocab=32,seq=8",
+                  "xlstm:d=16,ff=32,vocab=32,seq=8"):
+        cfg = replace(CFG, model=model, compress=leafmap, lr=0.25,
+                      tau_init=6, rounds=25, churn_rate=0.1)
+        adapter = modelspec.get_adapter(cfg.model)
+        lcodec = compression.parse_mode(leafmap).compile(
+            adapter.leaf_offsets())
+        h = run_algorithm("fedhp", cfg, non_iid_p=0.4, spread=3.0,
+                          time_budget=BUDGET, fused=fused)
+        print(f"{model.partition(':')[0]:24s} {adapter.param_count:7d} "
+              f"{lcodec.wire_ratio():5.1f}x "
+              f"{1.0 / adapter.cfg.vocab_size:6.4f} "
+              f"{h.final_accuracy:6.4f} "
+              f"{h.records[-1].cumulative_time:9.1f}")
+
+
 def adpsgd_study():
     """Asynchronous engines head to head: reference event loop vs fused
     event scan, uncompressed vs int8 compensated pairwise exchange."""
@@ -172,6 +210,9 @@ def main():
     ap.add_argument("--scenarios", action="store_true",
                     help="run the scenario-axis study (complex-network "
                          "topologies, rack outages, Byzantine workers)")
+    ap.add_argument("--pytree", action="store_true",
+                    help="run registry pytree models (dense / xlstm LMs) "
+                         "under fedhp with a per-leaf codec map")
     ap.add_argument("--fused", action="store_true",
                     help="run the algorithms on the fused scan engines")
     args = ap.parse_args()
@@ -181,6 +222,8 @@ def main():
         scenarios_study(fused=args.fused)
     elif args.compressed:
         compressed_study(fused=args.fused)
+    elif args.pytree:
+        pytree_study(fused=args.fused)
     elif args.adpsgd:
         adpsgd_study()
     else:

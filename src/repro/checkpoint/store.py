@@ -8,6 +8,11 @@ Design (DESIGN.md §6):
 - Elastic restore N -> N': worker replicas are re-seeded by cyclic
   assignment of survivor replicas (any DFL worker's model is a valid
   model; gossip re-mixes them within a few rounds).
+- Dtype fidelity: npz only understands native numpy dtypes, so
+  accelerator dtypes (bfloat16, float8_*, ... from ml_dtypes) are stored
+  as same-width uint views with the true dtype names recorded in
+  meta.json (`_leaf_dtypes`); load restores the view, so nested model
+  pytrees round-trip bit-exactly with dtype AND shape preserved.
 - Retention: keep the most recent `keep` checkpoints.
 """
 from __future__ import annotations
@@ -36,6 +41,23 @@ def _path_str(p) -> str:
     return str(p)
 
 
+def _is_native(dtype: np.dtype) -> bool:
+    """True when npz can store this dtype as-is (bool/int/uint/float/
+    complex); ml_dtypes extension types (bfloat16, float8_*) report
+    kind 'V' and need the uint-view detour."""
+    return np.dtype(dtype).kind in "biufc"
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    """Dtype from its recorded name, reaching into ml_dtypes for the
+    accelerator types plain numpy does not know."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
 def _unflatten_into(template, flat: dict[str, np.ndarray]):
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
@@ -44,6 +66,21 @@ def _unflatten_into(template, flat: dict[str, np.ndarray]):
         if key not in flat:
             raise KeyError(f"checkpoint missing leaf {key!r}")
         arr = flat[key]
+        tshape = getattr(leaf, "shape", None)
+        if tshape is not None:
+            # elastic restore re-shards the leading (worker) dim, so
+            # only the per-replica trailing shape must agree
+            if (len(arr.shape) != len(tshape)
+                    or tuple(arr.shape[1:]) != tuple(tshape[1:])):
+                raise ValueError(
+                    f"checkpoint leaf {key!r} has shape {arr.shape}, "
+                    f"template expects {tuple(tshape)} "
+                    "(trailing dims must match)")
+        tdtype = getattr(leaf, "dtype", None)
+        if tdtype is not None and np.dtype(tdtype) != arr.dtype:
+            raise ValueError(
+                f"checkpoint leaf {key!r} has dtype {arr.dtype}, "
+                f"template expects {np.dtype(tdtype)}")
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
@@ -58,10 +95,14 @@ def save_checkpoint(directory: str, step: int, state, *,
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     flat = _flatten(state)
-    np.savez(os.path.join(tmp, "state.npz"),
-             **{k: v for k, v in flat.items()})
+    dtypes = {k: v.dtype.name for k, v in flat.items()}
+    payload = {k: (v if _is_native(v.dtype)
+                   else v.view(np.dtype(f"uint{8 * v.dtype.itemsize}")))
+               for k, v in flat.items()}
+    np.savez(os.path.join(tmp, "state.npz"), **payload)
     with open(os.path.join(tmp, "meta.json"), "w") as f:
-        json.dump({"step": step, **(meta or {})}, f)
+        json.dump({"step": step, "_leaf_dtypes": dtypes,
+                   **(meta or {})}, f)
     with open(os.path.join(tmp, "meta.json")) as f:
         os.fsync(f.fileno())
     if os.path.exists(final):
@@ -83,6 +124,9 @@ def load_checkpoint(directory: str, template, step: int | None = None):
         flat = {k: z[k] for k in z.files}
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
+    for key, name in meta.pop("_leaf_dtypes", {}).items():
+        if key in flat and flat[key].dtype.name != name:
+            flat[key] = flat[key].view(_resolve_dtype(name))
     return _unflatten_into(template, flat), meta
 
 

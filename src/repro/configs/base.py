@@ -169,6 +169,12 @@ class FedHPConfig:
     base_topology: str = "full"      # full | ring | erdos:<p>
     algorithm: str = "fedhp"         # fedhp | dpsgd | adpsgd | ldsgd | pens
     seed: int = 0
+    # what each worker trains (core/modelspec.py): "mlp" is the paper's
+    # synthetic classifier; "<family>[:key=val,...]" (dense / moe /
+    # hybrid / xlstm) trains a tiny registry LM from models/registry.py
+    # on the Markov token corpus — e.g. "dense:layers=2,d=32". The
+    # engines build the matching ModelAdapter via modelspec.adapter_for.
+    model: str = "mlp"
     # fused engine (core/fused.py): adaptive strategies replan every this
     # many rounds; 1 == reference behavior (replan each round), larger
     # segments freeze (A^h, tau^h) between replans for throughput.

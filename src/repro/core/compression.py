@@ -73,8 +73,10 @@ from repro.kernels.quantize_block import (BLOCK_COLS, BLOCK_ROWS,
                                           quantize_block_2d)
 from repro.kernels.sparsify_block import sparsify_block_2d
 
-COMPRESS_MODES = ("none", "int8", "topk:<k>", "randk:<k>")
+COMPRESS_MODES = ("none", "int8", "topk:<k>", "randk:<k>",
+                  "leafmap:<pat>=<codec>,...")
 SPARSE_KINDS = ("topk", "randk")
+UNIFORM_KINDS = ("none", "int8", "topk", "randk")
 
 FP32_BITS = 32
 INT8_BITS = 8
@@ -145,17 +147,22 @@ class Codec:
         return FP32_BITS * num_params / self.wire_bits(num_params)
 
 
-def parse_mode(mode) -> Codec:
+def parse_mode(mode) -> "Codec | LeafmapCodec":
     """Parse a ``cfg.compress`` value (or pass a ``Codec`` through).
 
     Accepts ``"none"``, ``"int8"``, ``"topk:<k>"`` and ``"randk:<k>"``
-    with k a positive fraction (< 1, of P) or absolute count (>= 1).
+    with k a positive fraction (< 1, of P) or absolute count (>= 1),
+    plus the per-leaf map ``"leafmap:<pat>=<codec>,...,default=<codec>"``
+    (``parse_leafmap``) — e.g.
+    ``"leafmap:embed=randk:0.05,ln=none,default=int8"``.
     """
-    if isinstance(mode, Codec):
+    if isinstance(mode, (Codec, LeafmapCodec)):
         return mode
     if mode in ("none", "int8"):
         return Codec(str(mode))
     kind, sep, arg = str(mode).partition(":")
+    if kind == "leafmap" and sep:
+        return parse_leafmap(arg)
     if kind in SPARSE_KINDS and sep:
         try:
             k = float(arg)
@@ -173,6 +180,264 @@ def validate_mode(mode: str) -> str:
     (raises ValueError) and return it unchanged."""
     parse_mode(mode)
     return mode
+
+
+# ---------------------------------------------------------------------------
+# per-leaf codec maps ("leafmap:..."): heterogeneous codecs over one model
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LeafSegment:
+    """One contiguous run ``flat[:, start:stop]`` of the wire vector that
+    a single uniform ``Codec`` applies to. Built by
+    ``LeafmapCodec.compile`` from the adapter's leaf-offset table
+    (adjacent leaves with the same codec merge into one segment; sparse
+    k fractions resolve against the MERGED segment length)."""
+
+    start: int
+    stop: int
+    codec: Codec
+    k_abs: int = 0
+
+    @property
+    def size(self) -> int:
+        """Segment length in parameters."""
+        return self.stop - self.start
+
+
+@dataclass(frozen=True)
+class LeafmapCodec:
+    """A per-leaf codec map: each model leaf gossips under its own wire
+    codec (embeddings rand-k hard, layernorms uncompressed, the rest
+    int8 — the heterogeneous-codec direction for edge devices with
+    wildly different link budgets).
+
+    ``rules`` are (substring-pattern, Codec) pairs matched against the
+    adapter's leaf path names in order (first match wins, case-
+    insensitive); ``default`` covers unmatched leaves. The parsed form
+    is layout-free; engines call ``compile(adapter.leaf_offsets())`` to
+    bind it to a concrete flat layout, producing the ``segments`` table
+    every payload/wire computation runs over. Frozen + tuple-valued, so
+    a compiled map is hashable and rides ``jax.jit`` as a static
+    argument.
+
+    Wire accounting is the exact per-segment sum: each segment
+    contributes its own codec's ``wire_bits(segment length)`` (int8
+    tiling, top-k value+index pairs, rand-k values+seed, raw f32), and
+    ``wire_ratio`` divides the uncompressed total by that sum. A
+    leafmap is never ``is_sparse`` — the planner's k-tightening
+    scheduler only refines uniform sparse codecs."""
+
+    rules: tuple
+    default: Codec
+    segments: tuple = ()
+    kind: str = "leafmap"
+
+    @property
+    def is_sparse(self) -> bool:
+        """False: k-tightening applies to uniform sparse codecs only."""
+        return False
+
+    @property
+    def compiled(self) -> bool:
+        """Whether ``compile`` has bound this map to a leaf layout."""
+        return bool(self.segments)
+
+    @property
+    def mode(self) -> str:
+        """The ``cfg.compress`` string this map round-trips to."""
+        body = ",".join(f"{pat}={c.mode}" for pat, c in self.rules)
+        sep = "," if body else ""
+        return f"leafmap:{body}{sep}default={self.default.mode}"
+
+    def codec_for(self, leaf_name: str) -> Codec:
+        """The codec a leaf path maps to (first matching rule wins)."""
+        name = leaf_name.lower()
+        for pat, codec in self.rules:
+            if pat in name:
+                return codec
+        return self.default
+
+    def compile(self, leaves) -> "LeafmapCodec":
+        """Bind to an adapter's leaf-offset table (objects with
+        ``name``/``start``/``stop`` attributes, contiguous from 0).
+        Adjacent same-codec leaves merge into one segment; sparse k
+        specs resolve to absolute counts per merged segment."""
+        runs: list[list] = []
+        for leaf in leaves:
+            codec = self.codec_for(leaf.name)
+            if runs and runs[-1][2] == codec and runs[-1][1] == leaf.start:
+                runs[-1][1] = leaf.stop
+            else:
+                runs.append([leaf.start, leaf.stop, codec])
+        segs = tuple(
+            LeafSegment(a, b, c, c.resolve_k(b - a)) for a, b, c in runs)
+        return LeafmapCodec(self.rules, self.default, segs)
+
+    def _require_compiled(self):
+        if not self.segments:
+            raise ValueError(
+                "LeafmapCodec must be compiled against a model's leaf "
+                "layout (adapter.leaf_offsets()) before wire accounting "
+                "or payload encoding — engines do this automatically")
+
+    def resolve_k(self, num_params: int) -> int:
+        """Per-segment k is already resolved at compile time; the
+        engines' uniform-codec k slot is unused (0)."""
+        return 0
+
+    def wire_bits(self, num_params: int = 0) -> int:
+        """Exact bits on the wire for one model transfer: the sum of
+        each segment's own codec accounting (``num_params`` is ignored —
+        the compiled segment table fixes the payload)."""
+        self._require_compiled()
+        return sum(s.codec.wire_bits(s.size) for s in self.segments)
+
+    def wire_ratio(self, num_params: int = 0) -> float:
+        """Uncompressed / compressed wire bits, from the segment table
+        (the Eq. 10 comm divisor; ``num_params`` ignored, see
+        ``wire_bits``)."""
+        self._require_compiled()
+        total = self.segments[-1].stop
+        return FP32_BITS * total / self.wire_bits()
+
+
+def parse_leafmap(body: str) -> LeafmapCodec:
+    """Parse the body of ``"leafmap:<pat>=<codec>,...,default=<codec>"``.
+
+    Each comma-separated item maps a leaf-path substring pattern to a
+    uniform codec string (``none`` / ``int8`` / ``topk:<k>`` /
+    ``randk:<k>``); the reserved pattern ``default`` sets the codec for
+    unmatched leaves (``none`` if absent)."""
+    rules: list[tuple[str, Codec]] = []
+    default = Codec("none")
+    for item in body.split(","):
+        if not item.strip():
+            continue
+        pat, sep, codec_str = item.partition("=")
+        if not sep:
+            raise ValueError(
+                f"leafmap item {item!r} is not <pattern>=<codec>")
+        codec = parse_mode(codec_str.strip())
+        if not isinstance(codec, Codec):
+            raise ValueError("leafmap entries must be uniform codecs, "
+                             f"got {codec_str!r}")
+        if pat.strip().lower() == "default":
+            default = codec
+        else:
+            rules.append((pat.strip().lower(), codec))
+    return LeafmapCodec(tuple(rules), default)
+
+
+def leafmap_carries_state(lcodec: LeafmapCodec, error_feedback: bool) -> bool:
+    """Whether any segment evolves the [W, P] codec-state buffer (the
+    buffer is fleet-shaped either way; segments interpret their own
+    slice — int8 residual, top-k public copy x̂, or dead zeros)."""
+    return any(carries_state(s.codec.kind, error_feedback)
+               for s in lcodec.segments)
+
+
+def leafmap_state_init(flat, lcodec: LeafmapCodec, error_feedback: bool):
+    """Per-segment ``state_init`` on [..., W, P]: x̂ segments start at
+    the (globally known) initial params, the rest at zero."""
+    lcodec._require_compiled()
+    parts = [state_init(flat[..., s.start:s.stop], s.codec.kind,
+                        error_feedback) for s in lcodec.segments]
+    return jnp.concatenate(parts, axis=-1)
+
+
+def leafmap_state_after_join(err, keep_col, flat, lcodec: LeafmapCodec,
+                             error_feedback: bool):
+    """Per-segment ``state_after_join``: joined rows re-anchor x̂
+    segments at the blended row and zero the residual segments."""
+    parts = [state_after_join(err[..., s.start:s.stop], keep_col,
+                              flat[..., s.start:s.stop], s.codec.kind,
+                              error_feedback) for s in lcodec.segments]
+    return jnp.concatenate(parts, axis=-1)
+
+
+def leafmap_gamma_mask(lcodec: LeafmapCodec,
+                       error_feedback: bool) -> "np.ndarray":
+    """[P] f32 mask, 1.0 on coordinates whose segment mixes through the
+    damped x̂-tracked top-k consensus step (where ``sparse_gamma``
+    applies), 0.0 elsewhere. Static per compiled map."""
+    import numpy as np
+    lcodec._require_compiled()
+    mask = np.zeros(lcodec.segments[-1].stop, np.float32)
+    for s in lcodec.segments:
+        if s.codec.kind == "topk" and error_feedback:
+            mask[s.start:s.stop] = 1.0
+    return mask
+
+
+def leafmap_payload(flat, err, lcodec: LeafmapCodec, *,
+                    error_feedback: bool = True, key=None, step=None):
+    """Per-segment wire round trip on [W, P] -> (payload, new_state).
+
+    Each segment applies its own codec exactly as the uniform paths do:
+    ``none`` ships raw values, int8 the EF-compensated round trip
+    ŷ = C(x + e), top-k (EF on) advances the tracked public copy x̂ by
+    the top-k innovation (the payload IS x̂' — its mixing delta is
+    damped by ``sparse_gamma`` via ``leafmap_gamma_mask``), rand-k the
+    segment's shared seeded mask (keys folded on the segment start so
+    segments draw independent masks). The returned state concatenates
+    each segment's own state semantics back into one [W, P] buffer."""
+    lcodec._require_compiled()
+    pays, states = [], []
+    for s in lcodec.segments:
+        x = flat[..., s.start:s.stop]
+        e = err[..., s.start:s.stop]
+        c = s.codec
+        if c.kind == "none":
+            pays.append(x)
+            states.append(e)
+        elif c.kind == "topk" and error_feedback:
+            q = sparsify_rows(x - e, "topk", s.k_abs)
+            xhat = e + q
+            pays.append(xhat)
+            states.append(xhat)
+        elif c.kind == "randk":
+            skey = jax.random.fold_in(key, s.start)
+            pays.append(sparsify_rows(x, "randk", s.k_abs, key=skey,
+                                      step=step))
+            states.append(e)
+        else:                       # int8 (EF or naive), naive top-k
+            ef_seg = carries_state(c.kind, error_feedback) \
+                and c.kind != "topk"
+            z = x + e if ef_seg else x
+            yhat = encode_rows(z, c.kind, s.k_abs, key=key, step=step)
+            pays.append(yhat)
+            states.append(z - yhat if ef_seg else e)
+    return (jnp.concatenate(pays, axis=-1),
+            jnp.concatenate(states, axis=-1))
+
+
+def leafmap_gossip_ref(flat, err, mix, lcodec: LeafmapCodec, *,
+                       error_feedback: bool = True, key=None, step=None,
+                       gamma: float = 1.0, edges=None):
+    """One leafmap-compressed gossip round on the flattened [W, P]
+    params — ``compressed_gossip_ref``'s per-leaf twin, shared verbatim
+    by the reference and fused engines (so their leafmap trajectories
+    are bit-identical by construction).
+
+    Mixing is column-independent, so applying the combined per-segment
+    payload through ONE mixing delta is exactly per-segment mixing:
+
+        x' = x + g ⊙ (W @ payload - payload)
+
+    with g the per-coordinate step size — ``sparse_gamma`` on x̂-tracked
+    top-k segments, 1 elsewhere. ``edges=(src, dst, w)`` selects the
+    sparse edge-list delta (``edge_mix_delta``) like the uniform path."""
+    payload, new_err = leafmap_payload(flat, err, lcodec,
+                                       error_feedback=error_feedback,
+                                       key=key, step=step)
+    if edges is not None:
+        delta = edge_mix_delta(payload, *edges, flat.shape[0])
+    else:
+        delta = jnp.tensordot(mix, payload, axes=1) - payload
+    gmask = jnp.asarray(leafmap_gamma_mask(lcodec, error_feedback))
+    gvec = gmask * gamma + (1.0 - gmask)
+    return flat + gvec[None, :] * delta, new_err
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.configs.base import FedHPConfig
 from repro.core import compression
+from repro.core import modelspec
 from repro.core import robust as robust_agg
 from repro.core import topology as topo
 from repro.core.algorithms import Strategy
@@ -39,7 +40,6 @@ from repro.core.consensus import pairwise_distances
 from repro.kernels import ref as kernel_ref
 from repro.data.synthetic import Dataset
 from repro.simulation.cluster import SimCluster
-from repro.simulation.model import accuracy, classifier_loss, init_classifier
 
 
 @dataclass
@@ -68,9 +68,13 @@ class History:
     """Per-round trajectory of one run — the common result type of all
     three engines (reference, fused, AD-PSGD), so paper metrics
     (completion time to target accuracy, Fig. 3; average waiting time,
-    Fig. 7) compare across engines and algorithms."""
+    Fig. 7) compare across engines and algorithms. ``final_params`` is
+    the last [W, ...] worker-stacked parameter pytree (set by every
+    engine; feeds ``checkpoint/store.py`` save -> resume — not a
+    per-round field, so ``as_arrays`` ignores it)."""
 
     records: list[RoundRecord] = field(default_factory=list)
+    final_params: object = None
 
     def completion_time(self, target_acc: float) -> float | None:
         """Paper metric: total time until the average model reaches
@@ -102,27 +106,31 @@ class History:
 # jit'd worker math (vmapped over the worker dimension)
 # ---------------------------------------------------------------------------
 
-def _sgd_worker(params, bx, by, tau, lr, tau_max: int):
-    """tau-masked local SGD for ONE worker (Eq. 3). Shared with the fused
-    engine (core/fused.py) — the equivalence guarantee rests on both
-    engines running this exact step."""
+def _sgd_worker(adapter, params, bx, by, tau, lr, tau_max: int):
+    """tau-masked local SGD for ONE worker (Eq. 3) under ``adapter``'s
+    loss. Shared with the fused engine (core/fused.py) — the equivalence
+    guarantee rests on both engines running this exact step."""
 
     def step(p, xs):
         k, (x, y) = xs
-        g = jax.grad(classifier_loss)(p, {"x": x, "y": y})
+        g = jax.grad(adapter.loss)(p, {"x": x, "y": y})
         mask = (k < tau).astype(jnp.float32)
-        return jax.tree.map(lambda w, gg: w - lr * mask * gg, p, g), None
+        return jax.tree.map(
+            lambda w, gg: (w - lr * mask * gg.astype(jnp.float32)
+                           ).astype(w.dtype), p, g), None
 
     ks = jnp.arange(tau_max)
     out, _ = jax.lax.scan(step, params, (ks, (bx, by)))
     return out
 
 
-@partial(jax.jit, static_argnames=("tau_max",))
-def _local_train(stacked, batches_x, batches_y, taus, lr, tau_max: int):
+@partial(jax.jit, static_argnames=("adapter", "tau_max"))
+def _local_train(adapter, stacked, batches_x, batches_y, taus, lr,
+                 tau_max: int):
     """tau_i masked local SGD. stacked: [W,...] pytree; batches: [W,T,B,*]."""
     return jax.vmap(
-        lambda p, bx, by, tau: _sgd_worker(p, bx, by, tau, lr, tau_max))(
+        lambda p, bx, by, tau: _sgd_worker(adapter, p, bx, by, tau, lr,
+                                           tau_max))(
             stacked, batches_x, batches_y, taus)
 
 
@@ -235,53 +243,77 @@ def _gossip_compressed(flat, err, mix, key, step, gamma, *, kind: str,
         key=key, step=step, gamma=gamma)
 
 
-def _measure_worker(p, q, eval_x, eval_y, probe_x, probe_y):
+@partial(jax.jit, static_argnames=("lcodec", "error_feedback"))
+def _gossip_leafmap(flat, err, mix, key, step, gamma, *, lcodec,
+                    error_feedback: bool):
+    """Per-leaf-codec Eq. 5 on the flattened [W, P] matrix: each leaf
+    segment ships under its own codec (``compression.LeafmapCodec``,
+    compiled against the adapter's leaf-offset table), one mixing delta
+    on the combined payload, the top-k consensus damping applied only on
+    the coordinates whose segment tracks x̂."""
+    return compression.leafmap_gossip_ref(
+        flat, err, mix, lcodec, error_feedback=error_feedback, key=key,
+        step=step, gamma=gamma)
+
+
+@partial(jax.jit, static_argnames=("lcodec", "error_feedback"))
+def _gossip_leafmap_edges(flat, err, src, dst, w, key, step, gamma, *,
+                          lcodec, error_feedback: bool):
+    """``_gossip_leafmap`` with the mixing delta computed from directed
+    edges instead of a dense matrix (``cfg.gossip == "sparse"``)."""
+    return compression.leafmap_gossip_ref(
+        flat, err, None, lcodec, error_feedback=error_feedback, key=key,
+        step=step, gamma=gamma, edges=(src, dst, w))
+
+
+def _measure_worker(adapter, p, q, eval_x, eval_y, probe_x, probe_y):
     """One worker's Alg. 1 measurements. NOTE the eval/probe tensors are
     the FULL [W, 256] stacks for every worker (historical semantics both
     engines must share — FedHP's decisions were tuned against it)."""
-    loss_p = classifier_loss(p, {"x": eval_x, "y": eval_y})
-    acc = accuracy(p, eval_x, eval_y)
-    g_p = jax.grad(classifier_loss)(p, {"x": eval_x, "y": eval_y})
-    g_q = jax.grad(classifier_loss)(q, {"x": eval_x, "y": eval_y})
+    loss_p = adapter.loss(p, {"x": eval_x, "y": eval_y})
+    acc = adapter.accuracy(p, eval_x, eval_y)
+    g_p = jax.grad(adapter.loss)(p, {"x": eval_x, "y": eval_y})
+    g_q = jax.grad(adapter.loss)(q, {"x": eval_x, "y": eval_y})
     num = jnp.sqrt(sum(jnp.sum(jnp.square(a - b)) for a, b in
                        zip(jax.tree.leaves(g_p), jax.tree.leaves(g_q))))
     den = jnp.sqrt(sum(jnp.sum(jnp.square(a - b)) for a, b in
                        zip(jax.tree.leaves(p), jax.tree.leaves(q))))
     smooth_l = num / jnp.maximum(den, 1e-8)
     # sigma_i: variance of a small-probe gradient vs full-batch gradient
-    g_s = jax.grad(classifier_loss)(p, {"x": probe_x, "y": probe_y})
+    g_s = jax.grad(adapter.loss)(p, {"x": probe_x, "y": probe_y})
     sig2 = sum(jnp.sum(jnp.square(a - b)) for a, b in
                zip(jax.tree.leaves(g_s), jax.tree.leaves(g_p)))
     upd = den
     return loss_p, acc, smooth_l, jnp.sqrt(sig2), upd
 
 
-@jax.jit
-def _measure(stacked, prev_stacked, eval_x, eval_y, probe_x, probe_y):
+@partial(jax.jit, static_argnames=("adapter",))
+def _measure(adapter, stacked, prev_stacked, eval_x, eval_y, probe_x,
+             probe_y):
     """Per-worker loss/acc + Alg. 1 estimates (L_i, sigma_i) + update norms."""
-    return jax.vmap(lambda p, q: _measure_worker(p, q, eval_x, eval_y,
-                                                 probe_x, probe_y))(
+    return jax.vmap(lambda p, q: _measure_worker(adapter, p, q, eval_x,
+                                                 eval_y, probe_x, probe_y))(
         stacked, prev_stacked)
 
 
-@jax.jit
-def _cross_loss_matrix(stacked, xs, ys):
+@partial(jax.jit, static_argnames=("adapter",))
+def _cross_loss_matrix(adapter, stacked, xs, ys):
     """[N,N] loss of worker j's model on worker i's local sample batch."""
 
     def on_data(x, y):
-        return jax.vmap(lambda p: classifier_loss(p, {"x": x, "y": y}))(
+        return jax.vmap(lambda p: adapter.loss(p, {"x": x, "y": y}))(
             stacked)
 
     return jax.vmap(on_data)(xs, ys)          # [data_i, model_j]
 
 
-def _mean_accuracy(stacked, test_x, test_y,
+def _mean_accuracy(adapter, stacked, test_x, test_y,
                    alive: np.ndarray | None = None) -> tuple[float, float]:
     """Fleet-average test accuracy/loss over the alive workers (departed
     workers' frozen models are not part of the deployment)."""
-    accs = jax.vmap(lambda p: accuracy(p, test_x, test_y))(stacked)
+    accs = jax.vmap(lambda p: adapter.accuracy(p, test_x, test_y))(stacked)
     losses = jax.vmap(
-        lambda p: classifier_loss(p, {"x": test_x, "y": test_y}))(stacked)
+        lambda p: adapter.loss(p, {"x": test_x, "y": test_y}))(stacked)
     if alive is not None and not alive.all() and alive.any():
         w = jnp.asarray(alive, jnp.float32)
         w = w / w.sum()
@@ -294,9 +326,11 @@ def _mean_accuracy(stacked, test_x, test_y,
 # ---------------------------------------------------------------------------
 
 def _draw_batches(rng, data: Dataset, shards, taus_cap: int, batch: int):
-    """[W, tau_max, B] index draws from each worker's shard."""
+    """[W, tau_max, B, *feat] index draws from each worker's shard.
+    Shape/dtype follow ``data.x`` ([N, D] f32 classification rows or
+    [N, S] i32 token sequences) so registry models ride the same path."""
     n = len(shards)
-    bx = np.zeros((n, taus_cap, batch, data.x.shape[-1]), np.float32)
+    bx = np.zeros((n, taus_cap, batch) + data.x.shape[1:], data.x.dtype)
     by = np.zeros((n, taus_cap, batch), np.int32)
     for w, shard in enumerate(shards):
         ix = rng.integers(0, len(shard), (taus_cap, batch))
@@ -312,15 +346,29 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
             cfg: FedHPConfig, strategy: Strategy, *, rounds: int | None = None,
             hidden: int = 64, eval_subset: int = 512,
             mixing: str = "uniform",
-            time_budget: float | None = None) -> History:
+            time_budget: float | None = None,
+            adapter: modelspec.ModelAdapter | None = None,
+            init_params=None) -> History:
     """time_budget: stop once the simulated clock passes it — the paper's
-    equal-wall-time comparison (completion time is the metric, Fig. 3)."""
+    equal-wall-time comparison (completion time is the metric, Fig. 3).
+
+    ``adapter`` picks the model (default: built from ``cfg.model`` via
+    ``modelspec.adapter_for`` — the synthetic MLP unless the config names
+    a registry family). ``init_params`` resumes from a [W, ...] stacked
+    pytree (e.g. a prior run's ``History.final_params`` reloaded through
+    ``checkpoint/store.py``) instead of broadcasting ``adapter.init``."""
     rounds = rounds or cfg.rounds
     n = cfg.num_workers
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
-    p0 = init_classifier(key, data.x.shape[-1], hidden, data.num_classes)
-    stacked = jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape), p0)
+    if adapter is None:
+        adapter = modelspec.adapter_for(cfg, data, hidden=hidden)
+    if init_params is None:
+        p0 = adapter.init(key)
+        stacked = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (n,) + l.shape), p0)
+    else:
+        stacked = jax.tree.map(jnp.asarray, init_params)
 
     tx = jnp.asarray(test_x[:eval_subset])
     ty = jnp.asarray(test_y[:eval_subset])
@@ -331,6 +379,12 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
     ex, ey, px, py = map(jnp.asarray, (ex, ey, px, py))
 
     codec0 = compression.parse_mode(cfg.compress)
+    if codec0.kind == "leafmap":
+        # bind the per-leaf map to THIS adapter's leaf layout; the
+        # strategy re-parses cfg.compress and hands back an uncompiled
+        # copy in plan.codec — the round loop substitutes this one
+        codec0 = codec0.compile(adapter.leaf_offsets())
+    leafmap = codec0.kind == "leafmap"
     compress = codec0.kind != "none"
     # Byzantine scenario axis (core/robust.py): attackers corrupt the
     # wire copy, robust modes replace the weighted mix with a trimmed /
@@ -351,15 +405,22 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
     # (int8+scales or k sparse values instead of raw f32); the adaptive
     # strategy may tighten a sparse codec's k per round via plan.codec.
     # The residual matrix is the per-worker error-feedback state (zeros
-    # when EF is off — the naive compressed mode)
-    p_wire = int(cluster.model_bits // compression.FP32_BITS)
-    p_model = _param_count(stacked)
+    # when EF is off — the naive compressed mode). Wire math uses the
+    # adapter's true P — ``cluster.model_bits`` prices the link (beta),
+    # the ratio prices the codec.
+    p_model = adapter.param_count
     skey = compression.sparsify_base_key(cfg.seed)  # rand-k mask stream
     # codec state: int8 residual (zeros) or top-k public copy x̂ (the
-    # globally known initial params)
-    err = (compression.state_init(_flatten_workers(stacked), codec0.kind,
-                                  cfg.error_feedback)
-           if compress else None)
+    # globally known initial params); leafmap states are per-segment
+    # slices of the same [W, P] buffer
+    if compress:
+        f0 = _flatten_workers(stacked)
+        err = (compression.leafmap_state_init(f0, codec0,
+                                              cfg.error_feedback)
+               if leafmap else
+               compression.state_init(f0, codec0.kind, cfg.error_feedback))
+    else:
+        err = None
 
     hist = History()
     clock = 0.0
@@ -383,16 +444,22 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
                     # model's last transmission: residual resets to zero,
                     # the top-k public copy to the (deterministic, hence
                     # shared-knowledge) blended row
-                    err = compression.state_after_join(
-                        err, jnp.asarray(joined)[:, None],
-                        _flatten_workers(stacked), codec0.kind,
-                        cfg.error_feedback)
+                    fj = _flatten_workers(stacked)
+                    kc = jnp.asarray(joined)[:, None]
+                    err = (compression.leafmap_state_after_join(
+                               err, kc, fj, codec0, cfg.error_feedback)
+                           if leafmap else
+                           compression.state_after_join(
+                               err, kc, fj, codec0.kind,
+                               cfg.error_feedback))
         mu = cluster.sample_mu()
         beta = cluster.sample_beta()
 
         plan = strategy.plan(h, alive=alive)
         rcodec = plan.codec if plan.codec is not None else codec0
-        comm_ratio = rcodec.wire_ratio(p_wire) if compress else 1.0
+        if leafmap and rcodec.kind == "leafmap":
+            rcodec = codec0           # the compiled copy (see above)
+        comm_ratio = rcodec.wire_ratio(p_model) if compress else 1.0
         adj = plan.adj.copy()
         adj[~alive, :] = 0
         adj[:, ~alive] = 0
@@ -414,7 +481,7 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
                                shards.shards_at(h) if drifting else shards,
                                tau_cap, cfg.batch_size)
         prev = stacked
-        stacked = _local_train(stacked, bx, by, jnp.asarray(taus),
+        stacked = _local_train(adapter, stacked, bx, by, jnp.asarray(taus),
                                jnp.float32(lr), tau_cap)
 
         # --- clock (Eq. 10-11) ---
@@ -483,7 +550,12 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
                 ew = topo.edge_mixing_weights(e, n, mixing)
                 src, dst, ws = map(jnp.asarray, topo.directed_edges(e, ew))
                 flat = _flatten_workers(stacked)
-                if compress:
+                if leafmap:
+                    mixed, err = _gossip_leafmap_edges(
+                        flat, err, src, dst, ws, skey, jnp.int32(h),
+                        jnp.float32(cfg.sparse_gamma), lcodec=rcodec,
+                        error_feedback=cfg.error_feedback)
+                elif compress:
                     mixed, err = _gossip_compressed_edges(
                         flat, err, src, dst, ws, skey, jnp.int32(h),
                         jnp.float32(cfg.sparse_gamma),
@@ -497,7 +569,14 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
                          if mixing == "metropolis"
                          else topo.mixing_matrix_uniform)
                 mix = jnp.asarray(mixfn(adj), jnp.float32)
-                if compress:
+                if leafmap:
+                    flat = _flatten_workers(stacked)
+                    mixed, err = _gossip_leafmap(
+                        flat, err, mix, skey, jnp.int32(h),
+                        jnp.float32(cfg.sparse_gamma), lcodec=rcodec,
+                        error_feedback=cfg.error_feedback)
+                    stacked = _unflatten(mixed, stacked)
+                elif compress:
                     flat = _flatten_workers(stacked)
                     mixed, err = _gossip_compressed(
                         flat, err, mix, skey, jnp.int32(h),
@@ -513,13 +592,14 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
         # rows are not part of the deployment being measured (their
         # local state is honest but they are adversaries, not clients)
         meas = (alive & ~byz) if has_byz and (alive & ~byz).any() else alive
-        losses, accs, ls, sigs, upds = _measure(stacked, prev, ex, ey, px, py)
+        losses, accs, ls, sigs, upds = _measure(adapter, stacked, prev, ex,
+                                                ey, px, py)
         flat = np.asarray(_flatten_workers(stacked))
         pair = pairwise_distances(flat)
         cross = None
         if needs_cross:
-            cross = np.asarray(_cross_loss_matrix(stacked, ex[:, :64],
-                                                  ey[:, :64]))
+            cross = np.asarray(_cross_loss_matrix(adapter, stacked,
+                                                  ex[:, :64], ey[:, :64]))
         strategy.observe(
             h, adj=adj, mu=mu, beta=beta, edge_dist=pair,
             update_norms=np.asarray(upds)[meas] if meas.any() else [0.0],
@@ -528,7 +608,7 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
             loss=float(np.mean(np.asarray(losses)[meas])),
             cross_loss=cross, alive=alive, wire_ratio=comm_ratio)
 
-        mean_acc, mean_loss = _mean_accuracy(stacked, tx, ty, meas)
+        mean_acc, mean_loss = _mean_accuracy(adapter, stacked, tx, ty, meas)
         fa = flat[meas] if meas.any() else flat
         d_bar = float(np.linalg.norm(fa - fa.mean(0), axis=1).mean())
         hist.records.append(RoundRecord(
@@ -539,6 +619,7 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
             cumulative_time=clock))
         if time_budget is not None and clock >= time_budget:
             break
+    hist.final_params = stacked
     return hist
 
 
@@ -615,7 +696,8 @@ class AdpsgdSchedule:
 
 def adpsgd_schedule(cluster: SimCluster, cfg: FedHPConfig, *,
                     rounds: int | None = None,
-                    time_budget: float | None = None) -> AdpsgdSchedule:
+                    time_budget: float | None = None,
+                    p_model: int | None = None) -> AdpsgdSchedule:
     """Precompute the AD-PSGD event schedule (pure host function).
 
     Replays the event loop's control plane: a heap of per-worker finish
@@ -625,7 +707,11 @@ def adpsgd_schedule(cluster: SimCluster, cfg: FedHPConfig, *,
     events), and per-worker staleness counters. Events of departed
     workers are dropped; joiners are re-admitted with a fresh event.
     Consumes the cluster's RNG exactly once per event (mu, beta draws)
-    plus once per join — the same draws the legacy in-line loop made."""
+    plus once per join — the same draws the legacy in-line loop made.
+
+    ``p_model`` is the adapter's true parameter count for the codec's
+    wire-ratio math (both engines pass it; the ``cluster.model_bits``
+    fallback keeps standalone callers working)."""
     rounds = rounds or cfg.rounds
     n = cfg.num_workers
     rng = np.random.default_rng((cfg.seed, _ADPSGD_STREAM))
@@ -633,8 +719,14 @@ def adpsgd_schedule(cluster: SimCluster, cfg: FedHPConfig, *,
     neighbors = [np.nonzero(ring[i])[0] for i in range(n)]
     tau = cfg.tau_init
     codec = compression.parse_mode(cfg.compress)
+    if codec.kind == "leafmap":
+        raise ValueError(
+            "per-leaf codec maps (compress='leafmap:...') are "
+            "synchronous-engine only; AD-PSGD's pairwise exchange has no "
+            "leafmap form yet")
     comm_ratio = codec.wire_ratio(
-        int(cluster.model_bits // compression.FP32_BITS))
+        p_model if p_model is not None
+        else int(cluster.model_bits // compression.FP32_BITS))
 
     mu0 = cluster.sample_mu()
     q = [(tau * mu0[i], i) for i in range(n)]
@@ -698,8 +790,8 @@ def adpsgd_schedule(cluster: SimCluster, cfg: FedHPConfig, *,
     return AdpsgdSchedule(tuple(out), tau, int(ring.sum() // 2), n)
 
 
-@partial(jax.jit, static_argnames=("tau",))
-def _adpsgd_delta(params, bx, by, lr, tau: int):
+@partial(jax.jit, static_argnames=("adapter", "tau"))
+def _adpsgd_delta(adapter, params, bx, by, lr, tau: int):
     """tau local SGD steps (Eq. 3) computed from a SNAPSHOT; returns the
     delta. AD-PSGD's defining staleness [23]: while a worker computes,
     its live model may be averaged by neighbors, and the (stale) delta is
@@ -707,8 +799,10 @@ def _adpsgd_delta(params, bx, by, lr, tau: int):
     engine — equivalence rests on both running this exact step."""
     def step(p, xs):
         x, y = xs
-        g = jax.grad(classifier_loss)(p, {"x": x, "y": y})
-        return jax.tree.map(lambda w, gg: w - lr * gg, p, g), None
+        g = jax.grad(adapter.loss)(p, {"x": x, "y": y})
+        return jax.tree.map(
+            lambda w, gg: (w - lr * gg.astype(jnp.float32)).astype(w.dtype),
+            p, g), None
     out, _ = jax.lax.scan(step, params, (bx, by))
     return jax.tree.map(lambda a, b: a - b, out, params)
 
@@ -757,7 +851,8 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
                cfg: FedHPConfig, *, rounds: int | None = None,
                hidden: int = 64, eval_subset: int = 512,
                time_budget: float | None = None,
-               schedule: AdpsgdSchedule | None = None) -> History:
+               schedule: AdpsgdSchedule | None = None,
+               adapter: modelspec.ModelAdapter | None = None) -> History:
     """Event-driven AD-PSGD [23]: random pairwise averaging on completion.
 
     One "round" = N worker-finish events (≈ one synchronous round of
@@ -777,10 +872,18 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
             "byzantine/robust gossip is synchronous-engine only; "
             "run_adpsgd's pairwise exchange has no robust form yet")
     codec = compression.parse_mode(cfg.compress)
+    if codec.kind == "leafmap":
+        raise ValueError(
+            "per-leaf codec maps (compress='leafmap:...') are "
+            "synchronous-engine only; AD-PSGD's pairwise exchange has no "
+            "leafmap form yet")
     compress = codec.kind != "none"
+    if adapter is None:
+        adapter = modelspec.adapter_for(cfg, data, hidden=hidden)
     if schedule is None:
         schedule = adpsgd_schedule(cluster, cfg, rounds=rounds,
-                                   time_budget=time_budget)
+                                   time_budget=time_budget,
+                                   p_model=adapter.param_count)
     elif time_budget is not None:
         raise ValueError(
             "time_budget only applies while GENERATING a schedule; an "
@@ -788,7 +891,7 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
             "adpsgd_schedule instead)")
     rng = np.random.default_rng(cfg.seed)       # batch-sampling stream
     key = jax.random.PRNGKey(cfg.seed)
-    p0 = init_classifier(key, data.x.shape[-1], hidden, data.num_classes)
+    p0 = adapter.init(key)
     stacked = jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape), p0)
     tx = jnp.asarray(test_x[:eval_subset])
     ty = jnp.asarray(test_y[:eval_subset])
@@ -796,7 +899,7 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
     err = (compression.state_init(_flatten_workers(stacked), codec.kind,
                                   cfg.error_feedback)
            if compress else None)
-    k_abs = codec.resolve_k(_param_count(stacked))
+    k_abs = codec.resolve_k(adapter.param_count)
     skey = compression.sparsify_base_key(cfg.seed)  # rand-k mask stream
     ev_idx = 0          # global event counter: the rand-k mask step
 
@@ -823,7 +926,7 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
             ix = rng.integers(0, len(shard), (tau, cfg.batch_size))
             bx = jnp.asarray(data.x[shard[ix]])
             by = jnp.asarray(data.y[shard[ix]])
-            delta = _adpsgd_delta(snapshots[i], bx, by,
+            delta = _adpsgd_delta(adapter, snapshots[i], bx, by,
                                   jnp.float32(rnd.lr), tau)
             if compress:
                 stacked, err = _adpsgd_exchange_compressed(
@@ -837,7 +940,7 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
             ev_idx += 1
             snapshots[i] = jax.tree.map(lambda l: l[i], stacked)
         alive = rnd.alive
-        mean_acc, mean_loss = _mean_accuracy(stacked, tx, ty, alive)
+        mean_acc, mean_loss = _mean_accuracy(adapter, stacked, tx, ty, alive)
         flat = np.asarray(_flatten_workers(stacked))
         fa = flat[alive] if alive.any() else flat
         d_bar = float(np.linalg.norm(fa - fa.mean(0), axis=1).mean())
@@ -847,4 +950,5 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
             accuracy=mean_acc, loss=mean_loss, mean_tau=float(tau),
             num_links=schedule.num_links, consensus=d_bar,
             cumulative_time=rnd.clock, staleness=rnd.mean_staleness))
+    hist.final_params = stacked
     return hist

@@ -8,14 +8,21 @@ import numpy as np
 
 from repro.configs.base import FedHPConfig
 from repro.core import engine
+from repro.core import modelspec
 from repro.core.algorithms import make_strategy
 from repro.core.topology import make_base_topology
 from repro.data.partition import DriftingPartition, pskew_partition
-from repro.data.synthetic import make_classification_data
 from repro.simulation.cluster import ChurnSchedule, SimCluster
 
-# MLP stand-in model size (bits) for link-time simulation: ~7k params f32
-MODEL_BITS_DEFAULT = 7.3e3 * 32
+
+def model_bits_for(cfg: FedHPConfig, *, dim: int = 32,
+                   num_classes: int = 10) -> float:
+    """Uncompressed wire payload (bits) of one model transfer for the
+    model ``cfg.model`` names: 32 bits x the adapter's TRUE parameter
+    count (the historical hard-coded 7.3e3*32 synthetic constant is
+    gone — Eq. 10 comm charging now follows the actual model)."""
+    return modelspec.get_adapter(getattr(cfg, "model", "mlp"), dim=dim,
+                                 num_classes=num_classes).model_bits
 
 
 def churn_from_config(cfg: FedHPConfig,
@@ -36,10 +43,17 @@ def setup_experiment(cfg: FedHPConfig, *, non_iid_p: float = 0.1,
                      fail_at: dict | None = None,
                      churn: ChurnSchedule | None = None,
                      rounds: int | None = None):
-    """Build (data, test split, shards, cluster) for one experiment."""
-    data = make_classification_data(num_samples=num_samples, dim=dim,
-                                    num_classes=num_classes, spread=spread,
-                                    seed=cfg.seed)
+    """Build (data, test split, shards, cluster) for one experiment.
+
+    ``cfg.model`` picks the model family (core/modelspec.py), which in
+    turn picks the dataset: Gaussian-blob classification rows for the
+    MLP, the class-labeled Markov token corpus for registry LMs — both
+    carry per-sample labels, so the p-skew / drifting partitions work
+    unchanged. ``SimCluster.model_bits`` comes from the adapter's true
+    parameter count (32 bits per param)."""
+    adapter = modelspec.get_adapter(getattr(cfg, "model", "mlp"), dim=dim,
+                                    num_classes=num_classes)
+    data = adapter.make_data(num_samples, seed=cfg.seed, spread=spread)
     n_test = max(num_samples // 6, 256)
     test_x, test_y = data.x[:n_test], data.y[:n_test]
     train = replace_dataset(data, data.x[n_test:], data.y[n_test:])
@@ -54,7 +68,7 @@ def setup_experiment(cfg: FedHPConfig, *, non_iid_p: float = 0.1,
         shards = pskew_partition(train.y, cfg.num_workers, non_iid_p, rng)
     if churn is None:
         churn = churn_from_config(cfg, rounds)
-    cluster = SimCluster(cfg.num_workers, model_bits=MODEL_BITS_DEFAULT,
+    cluster = SimCluster(cfg.num_workers, model_bits=adapter.model_bits,
                          seed=cfg.seed, fail_at=fail_at or {}, churn=churn)
     return train, test_x, test_y, shards, cluster
 

@@ -63,19 +63,19 @@ import numpy as np
 
 from repro.configs.base import FedHPConfig
 from repro.core import compression
+from repro.core import modelspec
 from repro.core import topology as topo
 from repro.core.algorithms import Strategy
 from repro.core.engine import (AdpsgdSchedule, History, RoundRecord,
                                _adpsgd_delta, _blend_joined,
                                _cross_loss_matrix, _draw_batches,
                                _flatten_row, _flatten_workers,
-                               _measure_worker, _param_count, _sgd_worker,
+                               _measure_worker, _sgd_worker,
                                _unflatten, _unflatten_row, adpsgd_schedule)
 from repro.data.synthetic import Dataset
 from repro.kernels.gossip_edges import gossip_edges
 from repro.kernels.gossip_mix import gossip_mix_2d
 from repro.simulation.cluster import SimCluster
-from repro.simulation.model import accuracy, classifier_loss, init_classifier
 
 # static-plan strategies would otherwise stage the whole horizon's batch
 # tensors host-side at once ([S, K, W, tau, B, D] f32); chunking the scan
@@ -92,23 +92,28 @@ ADPSGD_FUSE_ROUNDS = 32
 # device code: one scan over the rounds of a segment
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("tau_cap", "measure", "needs_cross",
-                                   "interpret", "kind", "k", "ef",
-                                   "sparse"))
+@partial(jax.jit, static_argnames=("adapter", "tau_cap", "measure",
+                                   "needs_cross", "interpret", "kind", "k",
+                                   "ef", "sparse", "lcodec"))
 def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
                   esrc, edst, ewt, comms, ew, cw, keep, rw, hs, skey,
-                  gamma, tx, ty, *, tau_cap: int, measure: bool,
+                  gamma, tx, ty, *, adapter, tau_cap: int, measure: bool,
                   needs_cross: bool, interpret: bool, kind: str, k: int,
-                  ef: bool, sparse: bool):
+                  ef: bool, sparse: bool, lcodec=None):
     """Run K rounds on device. Batched over a leading seed axis S on
     (stacked, err, bx, by, ex, ey, px, py); control inputs (taus .. rw
     plus the round indices ``hs``, all [K]-leading), the rand-k mask key
-    ``skey`` and the test set are shared across seeds.
+    ``skey`` and the test set are shared across seeds. ``adapter`` (a
+    hashable ``modelspec.ModelAdapter``) supplies loss/accuracy — the
+    scan itself only sees the flattened [W, P] layout.
 
     ``err`` is the [S, W, P] error-feedback residual carried as scan
     state on compressed runs (untouched otherwise); ``kind``/``k`` name
     the segment's wire codec ("none" uncompressed — a frozen adaptive
-    plan fixes the codec for the whole segment).
+    plan fixes the codec for the whole segment). ``lcodec`` is the
+    segment's compiled per-leaf codec map when ``kind == "leafmap"``
+    (None otherwise) — its shared oracle payload keeps reference and
+    fused leafmap trajectories bit-identical by construction.
 
     ``sparse`` selects the edge-list gossip path: the round topology
     arrives as directed edge arrays (``esrc``/``edst``/``ewt``,
@@ -121,7 +126,8 @@ def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
     Returns ((stacked', err'), outs) where outs is a dict of [S, K, ...]
     metric trajectories.
     """
-    compress = kind != "none"
+    leafmap = lcodec is not None
+    compress = kind != "none" and not leafmap
     # which codecs evolve the state buffer (int8 residual / top-k x̂) —
     # rand-k carries nothing; mirrors compression.carries_state so the
     # scan state matches the reference engine bit for bit
@@ -157,17 +163,35 @@ def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
                 err_c = compression.state_after_join(
                     err_c, keep_h[:, None], _flatten_workers(carry),
                     kind, ef)
+            elif leafmap:
+                err_c = compression.leafmap_state_after_join(
+                    err_c, keep_h[:, None], _flatten_workers(carry),
+                    lcodec, ef)
             prev = carry
 
             # --- local updating (Eq. 3), masked to tau_i — the SAME
             # per-worker step function the reference engine vmaps ---
             carry = jax.vmap(
-                lambda p, bxw, byw, tau: _sgd_worker(p, bxw, byw, tau,
-                                                     lr_h, tau_cap))(
+                lambda p, bxw, byw, tau: _sgd_worker(adapter, p, bxw, byw,
+                                                     tau, lr_h, tau_cap))(
                 carry, bxh, byh, tau_h)
 
             flat = _flatten_workers(carry)
-            if kind == "topk" and ef:
+            if leafmap:
+                # --- per-leaf codec map: the SAME shared payload round
+                # trip as the reference (compression.leafmap_payload),
+                # one mixing delta on the combined payload, per-segment
+                # gamma damping, comm_h gating both params and codec
+                # state to an exact no-op on no-communication rounds ---
+                payload, new_err = compression.leafmap_payload(
+                    flat, err_c, lcodec, error_feedback=ef, key=skey,
+                    step=h_h)
+                err_c = jnp.where(comm_h > 0, new_err, err_c)
+                gmask = jnp.asarray(
+                    compression.leafmap_gamma_mask(lcodec, ef))
+                gvec = gmask * gamma + (1.0 - gmask)
+                y_flat = flat + comm_h * gvec[None, :] * mix_delta(payload)
+            elif kind == "topk" and ef:
                 # --- x̂-tracked top-k (ChocoSGD form, the same update as
                 # compression.compressed_gossip_ref): the wire carries
                 # the top-k innovation against the tracked public copy,
@@ -220,9 +244,9 @@ def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
 
             # --- per-round metrics: fleet accuracy/loss over alive
             # workers + consensus distance to the alive mean ---
-            accs = jax.vmap(lambda p: accuracy(p, tx, ty))(carry)
+            accs = jax.vmap(lambda p: adapter.accuracy(p, tx, ty))(carry)
             tloss = jax.vmap(
-                lambda p: classifier_loss(p, {"x": tx, "y": ty}))(carry)
+                lambda p: adapter.loss(p, {"x": tx, "y": ty}))(carry)
             dmean = jnp.tensordot(cw_h, y_flat, axes=1)
             dists = jnp.sqrt(jnp.sum((y_flat - dmean[None]) ** 2, axis=1))
             outs = {"acc": jnp.dot(ew_h, accs),
@@ -234,8 +258,8 @@ def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
                 # function as the reference engine's _measure (eval/probe
                 # tensors passed whole, only params vmapped) ---
                 losses, _, ls, sigs, upds = jax.vmap(
-                    lambda p, q: _measure_worker(p, q, ex, ey, px, py))(
-                    carry, prev)
+                    lambda p, q: _measure_worker(adapter, p, q, ex, ey, px,
+                                                 py))(carry, prev)
                 # consensus.pairwise_distances' f32 gram trick, including
                 # its cancellation noise floor for near-identical models —
                 # that floor feeds FedHP's tracker, so it is part of the
@@ -249,7 +273,7 @@ def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
                             edge=jnp.sqrt(d2))
                 if needs_cross:
                     outs["cross"] = _cross_loss_matrix(
-                        carry, ex[:, :64], ey[:, :64])
+                        adapter, carry, ex[:, :64], ey[:, :64])
             return (carry, err_c), outs
 
         return jax.lax.scan(body, (stacked, err),
@@ -268,7 +292,7 @@ def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
 @dataclass
 class _Segment:
     """Per-round control inputs + host-side record fields for K rounds."""
-    bx: np.ndarray            # [S, K, W, T, B, D]
+    bx: np.ndarray            # [S, K, W, T, B, *feat] (data.x dtype)
     by: np.ndarray            # [S, K, W, T, B]
     taus: np.ndarray          # [K, W] i32
     lrs: np.ndarray           # [K] f32
@@ -303,7 +327,7 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
                         strategy: Strategy, cfg: FedHPConfig, rngs, data,
                         shards, mixfn, clock: float,
                         time_budget: float | None, adaptive: bool,
-                        codec0, p_wire: int, sparse: bool = False,
+                        codec0, p_model: int, sparse: bool = False,
                         mixing: str = "uniform"):
     """Advance cluster/strategy/batch RNG streams for rounds h0..h0+K-1 in
     the exact order ``run_dfl`` would, and pack the device inputs.
@@ -312,8 +336,11 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
     round; static strategies re-plan every round (observation-free, so
     this is exactly the reference behavior). The frozen plan also fixes
     the segment's wire codec (``plan.codec`` falling back to ``codec0``,
-    the parsed ``cfg.compress``), whose ``wire_ratio(p_wire)`` divides
-    the Eq. 10 comm term exactly like the reference engine's clock.
+    the parsed ``cfg.compress``; an uncompiled leafmap in the plan is
+    replaced by the driver's compiled ``codec0``), whose
+    ``wire_ratio(p_model)`` — the adapter's true parameter count —
+    divides the Eq. 10 comm term exactly like the reference engine's
+    clock.
     """
     n = cfg.num_workers
     compress = codec0.kind != "none"
@@ -331,7 +358,9 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
         if plan is None or not adaptive:
             plan = strategy.plan(h, alive=alive)
         rcodec = plan.codec if plan.codec is not None else codec0
-        comm_ratio = rcodec.wire_ratio(p_wire) if compress else 1.0
+        if codec0.kind == "leafmap" and rcodec.kind == "leafmap":
+            rcodec = codec0           # the compiled copy
+        comm_ratio = rcodec.wire_ratio(p_model) if compress else 1.0
         adj = plan.adj.copy()
         adj[~alive, :] = 0
         adj[:, ~alive] = 0
@@ -432,7 +461,7 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
         edst[t, :ne] = p["dst"]
         ewt_a[t, :ne] = p["wts"]
     seg = _Segment(
-        bx=bx.astype(np.float32), by=by.astype(np.int32),
+        bx=bx, by=by.astype(np.int32),
         taus=np.stack([p["taus"] for p in per]).astype(np.int32),
         lrs=np.array([p["lr"] for p in per], np.float32),
         mixes=np.stack([p["mix"] for p in per]).astype(np.float32),
@@ -465,7 +494,9 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
                   *, rounds: int | None = None, hidden: int = 64,
                   eval_subset: int = 512, mixing: str = "uniform",
                   time_budget: float | None = None, seeds=None,
-                  interpret: bool | None = None):
+                  interpret: bool | None = None,
+                  adapter: modelspec.ModelAdapter | None = None,
+                  init_params=None):
     """Drop-in fused replacement for ``engine.run_dfl``.
 
     With ``seeds=None`` runs one experiment from ``cfg.seed`` and returns
@@ -473,7 +504,9 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
     array of ``seeds`` returns ``list[History]``, one per seed, batched
     through a single vmapped scan: each lane uses its seed for the model
     init PRNGKey and the batch-sampling RNG while sharing the data split,
-    cluster and (static) plans.
+    cluster and (static) plans. ``adapter``/``init_params`` mirror
+    ``run_dfl`` (``init_params`` resumes a single run — incompatible with
+    batched ``seeds``).
     """
     rounds = rounds or cfg.rounds
     n = cfg.num_workers
@@ -490,11 +523,18 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
         return run_dfl(data, test_x, test_y, shards, cluster, cfg,
                        strategy, rounds=rounds, hidden=hidden,
                        eval_subset=eval_subset, mixing=mixing,
-                       time_budget=time_budget)
+                       time_budget=time_budget, adapter=adapter,
+                       init_params=init_params)
     adaptive = getattr(strategy, "adaptive", False)
     batched = seeds is not None
+    if init_params is not None and batched:
+        raise ValueError(
+            "init_params resumes ONE run's stacked params; it does not "
+            "compose with a batched seeds axis")
     seed_list = ([int(s) for s in np.asarray(seeds).reshape(-1)]
                  if batched else [int(cfg.seed)])
+    if adapter is None:
+        adapter = modelspec.adapter_for(cfg, data, hidden=hidden)
     if adaptive and len(seed_list) > 1:
         raise ValueError(
             f"strategy {strategy.name!r} adapts its plan to per-round "
@@ -508,33 +548,43 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
     rngs = [np.random.default_rng(s) for s in seed_list]
     stacked0, exs, eys = [], [], []
     for s, rng in zip(seed_list, rngs):
-        key = jax.random.PRNGKey(s)
-        p0 = init_classifier(key, data.x.shape[-1], hidden, data.num_classes)
-        stacked0.append(jax.tree.map(
-            lambda l: jnp.broadcast_to(l, (n,) + l.shape), p0))
+        if init_params is not None:
+            stacked0.append(jax.tree.map(jnp.asarray, init_params))
+        else:
+            key = jax.random.PRNGKey(s)
+            p0 = adapter.init(key)
+            stacked0.append(jax.tree.map(
+                lambda l: jnp.broadcast_to(l, (n,) + l.shape), p0))
         exs.append(np.stack([data.x[sh[rng.integers(0, len(sh), 256)]]
                              for sh in shards]))
         eys.append(np.stack([data.y[sh[rng.integers(0, len(sh), 256)]]
                              for sh in shards]))
     stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *stacked0)
     codec0 = compression.parse_mode(cfg.compress)
+    if codec0.kind == "leafmap":
+        codec0 = codec0.compile(adapter.leaf_offsets())
+    leafmap = codec0.kind == "leafmap"
     compress = codec0.kind != "none"
-    p_wire = int(cluster.model_bits // compression.FP32_BITS)
-    p_model = _param_count(stacked0[0])
+    p_model = adapter.param_count
     # rand-k mask stream: derived from cfg.seed (not the lane seeds) so
     # vmapped lanes share the masks like they share the rest of the
     # host-side control plane
     skey = compression.sparsify_base_key(cfg.seed)
-    # per-seed codec state (int8 residual / top-k x̂), carried across
-    # segments; a [S, W, 1] dummy keeps the carry structure static for
-    # stateless runs (uncompressed, rand-k, EF off) without hauling a
-    # dead fleet-sized buffer through the scan
-    err = (compression.state_init(
-        jnp.stack([_flatten_workers(s) for s in stacked0]),
-        codec0.kind, cfg.error_feedback)
-        if compress and compression.carries_state(codec0.kind,
-                                                  cfg.error_feedback)
-        else jnp.zeros((len(seed_list), n, 1), jnp.float32))
+    # per-seed codec state (int8 residual / top-k x̂ / leafmap segment
+    # buffer), carried across segments; a [S, W, 1] dummy keeps the carry
+    # structure static for stateless runs (uncompressed, rand-k, EF off)
+    # without hauling a dead fleet-sized buffer through the scan
+    if leafmap:
+        err = compression.leafmap_state_init(
+            jnp.stack([_flatten_workers(s) for s in stacked0]),
+            codec0, cfg.error_feedback)
+    elif compress and compression.carries_state(codec0.kind,
+                                                cfg.error_feedback):
+        err = compression.state_init(
+            jnp.stack([_flatten_workers(s) for s in stacked0]),
+            codec0.kind, cfg.error_feedback)
+    else:
+        err = jnp.zeros((len(seed_list), n, 1), jnp.float32)
     ex = jnp.asarray(np.stack(exs))
     ey = jnp.asarray(np.stack(eys))
     px, py = ex[:, :, :32], ey[:, :, :32]
@@ -556,7 +606,7 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
                    else min(rounds - h, MAX_FUSE_ROUNDS))
         seg, clock, stop = _precompute_segment(
             h, seg_len, cluster, strategy, cfg, rngs, data, shards, mixfn,
-            clock, time_budget, adaptive, codec0, p_wire, sparse=sparse,
+            clock, time_budget, adaptive, codec0, p_model, sparse=sparse,
             mixing=mixing)
         (stacked, err), outs = _scan_segment(
             stacked, err, jnp.asarray(seg.bx), jnp.asarray(seg.by), ex, ey,
@@ -567,11 +617,12 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
             jnp.asarray(seg.ew), jnp.asarray(seg.cw),
             jnp.asarray(seg.keep), jnp.asarray(seg.rw),
             jnp.asarray(seg.hs), skey, jnp.float32(cfg.sparse_gamma),
-            tx, ty, tau_cap=seg.tau_cap, measure=adaptive,
+            tx, ty, adapter=adapter, tau_cap=seg.tau_cap, measure=adaptive,
             needs_cross=needs_cross, interpret=interp,
             kind=seg.codec.kind,
             k=seg.codec.resolve_k(p_model),
-            ef=cfg.error_feedback, sparse=sparse)
+            ef=cfg.error_feedback, sparse=sparse,
+            lcodec=seg.codec if leafmap else None)
         outs = {k: np.asarray(v) for k, v in outs.items()}
 
         for t in range(len(seg)):
@@ -598,6 +649,8 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
                     if needs_cross else None,
                     alive=a, wire_ratio=seg.wire_ratio[t])
         h += len(seg)
+    for si, hist in enumerate(hists):
+        hist.final_params = jax.tree.map(lambda l, si=si: l[si], stacked)
     return hists if batched else hists[0]
 
 
@@ -605,10 +658,11 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
 # Fused event-driven AD-PSGD
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("tau", "interpret", "kind", "k", "ef"))
+@partial(jax.jit, static_argnames=("adapter", "tau", "interpret", "kind",
+                                   "k", "ef"))
 def _adpsgd_scan(stacked, snap, err, stale, bx, by, iidx, jidx, eidx, lrs,
-                 keep, rw, ew, cw, skey, gamma, tx, ty, *, tau: int,
-                 interpret: bool, kind: str, k: int, ef: bool):
+                 keep, rw, ew, cw, skey, gamma, tx, ty, *, adapter,
+                 tau: int, interpret: bool, kind: str, k: int, ef: bool):
     """Run K AD-PSGD rounds (K*N events) on device in one nested scan.
 
     The outer scan walks rounds, the inner scan the round's N events;
@@ -650,7 +704,7 @@ def _adpsgd_scan(stacked, snap, err, stale, bx, by, iidx, jidx, eidx, lrs,
             flat, snapf, err, stale = carry
             i, j, bxe, bye, e_h, lr_h = xs
             p_snap = _unflatten_row(snapf[i], template)
-            delta = _adpsgd_delta(p_snap, bxe, bye, lr_h, tau)
+            delta = _adpsgd_delta(adapter, p_snap, bxe, bye, lr_h, tau)
             xi = flat[i] + _flatten_row(delta)
             xj = flat[j]
             if compress:
@@ -701,10 +755,10 @@ def _adpsgd_scan(stacked, snap, err, stale, bx, by, iidx, jidx, eidx, lrs,
                 (i_h, j_h, bxh, byh, e_h, lrs_ev))
 
             carry_tree = _unflatten(flat, stacked)
-            accs = jax.vmap(lambda p: accuracy(p, tx, ty))(carry_tree)
-            tloss = jax.vmap(
-                lambda p: classifier_loss(p, {"x": tx, "y": ty}))(
+            accs = jax.vmap(lambda p: adapter.accuracy(p, tx, ty))(
                 carry_tree)
+            tloss = jax.vmap(
+                lambda p: adapter.loss(p, {"x": tx, "y": ty}))(carry_tree)
             dmean = jnp.tensordot(cw_h, flat, axes=1)
             dists = jnp.sqrt(jnp.sum((flat - dmean[None]) ** 2, axis=1))
             outs = {"acc": jnp.dot(ew_h, accs),
@@ -729,7 +783,8 @@ def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
                      eval_subset: int = 512,
                      time_budget: float | None = None, seeds=None,
                      interpret: bool | None = None,
-                     schedule: AdpsgdSchedule | None = None):
+                     schedule: AdpsgdSchedule | None = None,
+                     adapter: modelspec.ModelAdapter | None = None):
     """Drop-in fused replacement for ``engine.run_adpsgd``.
 
     The event-driven loop lowers to one ``jax.lax.scan`` per segment of
@@ -764,11 +819,19 @@ def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
     interp = (jax.default_backend() == "cpu") if interpret is None \
         else interpret
     codec = compression.parse_mode(cfg.compress)
+    if codec.kind == "leafmap":
+        raise ValueError(
+            "per-leaf codec maps (compress='leafmap:...') are "
+            "synchronous-engine only; AD-PSGD's pairwise exchange has no "
+            "leafmap form yet")
     compress = codec.kind != "none"
+    if adapter is None:
+        adapter = modelspec.adapter_for(cfg, data, hidden=hidden)
     skey = compression.sparsify_base_key(cfg.seed)  # rand-k mask stream
     if schedule is None:
         schedule = adpsgd_schedule(cluster, cfg, rounds=rounds,
-                                   time_budget=time_budget)
+                                   time_budget=time_budget,
+                                   p_model=adapter.param_count)
     elif time_budget is not None:
         raise ValueError(
             "time_budget only applies while GENERATING a schedule; an "
@@ -780,13 +843,12 @@ def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
     stacked0 = []
     for s in seed_list:
         key = jax.random.PRNGKey(s)
-        p0 = init_classifier(key, data.x.shape[-1], hidden, data.num_classes)
+        p0 = adapter.init(key)
         stacked0.append(jax.tree.map(
             lambda l: jnp.broadcast_to(l, (n,) + l.shape), p0))
     stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *stacked0)
     snap = stacked                       # snapshots start at the init rows
-    p_total = _param_count(stacked0[0])
-    k_abs = codec.resolve_k(p_total)
+    k_abs = codec.resolve_k(adapter.param_count)
     # codec state rows, or a [S, W, 1] dummy for stateless runs (see
     # run_dfl_fused) — the stateless pair exchange returns its state
     # rows untouched, so the dummy shape survives the event scan
@@ -831,8 +893,8 @@ def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
             cw.append(a / a.sum() if a.any() else np.full(n, 1.0 / n))
         # per-seed batch tensors in event order, replaying the reference
         # loop's batch-stream consumption draw for draw
-        bx = np.zeros((len(seed_list), len(seg), n_ev, tau, cfg.batch_size,
-                       data.x.shape[-1]), np.float32)
+        bx = np.zeros((len(seed_list), len(seg), n_ev, tau,
+                       cfg.batch_size) + data.x.shape[1:], data.x.dtype)
         by = np.zeros((len(seed_list), len(seg), n_ev, tau,
                        cfg.batch_size), np.int32)
         for si, rng in enumerate(rngs):
@@ -851,8 +913,8 @@ def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
             jnp.asarray(lrs), jnp.asarray(keep), jnp.asarray(rw),
             jnp.asarray(np.stack(ew), dtype=jnp.float32),
             jnp.asarray(np.stack(cw), dtype=jnp.float32),
-            skey, jnp.float32(cfg.sparse_gamma), tx, ty, tau=tau,
-            interpret=interp, kind=codec.kind, k=k_abs,
+            skey, jnp.float32(cfg.sparse_gamma), tx, ty, adapter=adapter,
+            tau=tau, interpret=interp, kind=codec.kind, k=k_abs,
             ef=cfg.error_feedback)
         outs = {k: np.asarray(v) for k, v in outs.items()}
         # the scan carries its own staleness counters; they must agree
@@ -876,4 +938,6 @@ def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
                     cumulative_time=r.clock,
                     staleness=r.mean_staleness))
         done += len(seg)
+    for si, hist in enumerate(hists):
+        hist.final_params = jax.tree.map(lambda l, si=si: l[si], stacked)
     return hists if batched else hists[0]

@@ -1,0 +1,363 @@
+"""ModelAdapter: the bridge between the DFL engines and any model.
+
+The engines (``core/engine.py``, ``core/fused.py``) operate on two
+representations of the fleet's parameters — per-worker pytrees for the
+SGD/measurement math and the flat ``[W, P]`` f32 matrix for
+gossip/compression — and historically hard-coded the synthetic MLP from
+``simulation/model.py`` as the only model. A ``ModelAdapter`` owns
+everything model-specific:
+
+  - ``init(key)``: one worker's parameter pytree;
+  - ``loss(params, batch)`` with the engines' uniform ``{"x", "y"}``
+    batch contract (features/tokens in ``x``, labels in ``y``);
+  - ``accuracy(params, x, y)``: the scalar the paper's completion-time
+    metric tracks (classification accuracy for the MLP; the bounded
+    inverse per-token perplexity ``exp(-loss)`` for LM families);
+  - ``flatten_one`` / ``unflatten_one``: the ravel/unravel pair with a
+    STATIC leaf layout (``jax.tree`` leaf order, row-major per leaf,
+    cast to f32) — identical to the engines' ``_flatten_row`` /
+    ``_flatten_workers``, so the Pallas gossip/quantize/sparsify kernels
+    keep operating on the same ``[W, P]`` matrix untouched;
+  - ``leaf_offsets()``: the (name, start, size, shape, dtype) table of
+    that layout — the ground truth ``core/compression.py``'s per-leaf
+    codec maps (``compress="leafmap:..."``) compile against;
+  - ``param_count`` / ``model_bits``: the true payload size Eq. 10 comm
+    charging and ``SimCluster.model_bits`` derive from (no more 7.3k
+    synthetic constant);
+  - ``make_data(...)``: the synthetic dataset family the model trains on
+    (Gaussian blobs for the MLP, the class-structured Markov LM corpus
+    for registry families).
+
+Adapters are value objects: ``__eq__``/``__hash__`` key on the canonical
+spec string, so they serve as ``jax.jit`` static arguments with cache
+hits across runs, engines, and tests.
+
+Spec syntax (``FedHPConfig.model``):
+
+  - ``"mlp"`` / ``"mlp:<hidden>"`` — the synthetic classifier
+    (``simulation/model.py``); data dims come from the dataset.
+  - ``"<family>:key=val,..."`` — a registry model
+    (``models/registry.py``), token families only (dense / moe /
+    hybrid / xlstm; encdec and vlm need modality inputs the DFL batch
+    pipeline does not carry). Keys: ``d`` (d_model), ``layers``,
+    ``heads``, ``kv`` (kv heads), ``ff`` (d_ff), ``vocab``, ``seq``
+    (sequence length of the training corpus), ``experts`` /
+    ``experts_per_token`` (moe), ``classes`` (document classes in the
+    synthetic corpus). Example: ``"dense:d=32,layers=2,heads=2,ff=64,
+    vocab=64,seq=16"``. Registry DFL models default to float32 leaves
+    (the flat gossip path is f32 exact).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data import synthetic
+from repro.simulation import model as _mlp
+
+FP32_BITS = 32
+
+# token-stream families the DFL batch pipeline can feed ({"tokens",
+# "labels"} built from an [N, S] int corpus); encdec needs audio frames
+# and vlm patch embeddings — neither fits the engines' batch contract
+DFL_FAMILIES = ("dense", "moe", "hybrid", "xlstm")
+
+_SPEC_KEYS = {
+    "d": "d_model", "d_model": "d_model",
+    "layers": "num_layers", "l": "num_layers",
+    "heads": "num_heads", "kv": "num_kv_heads",
+    "ff": "d_ff", "d_ff": "d_ff",
+    "vocab": "vocab_size",
+    "experts": "num_experts",
+    "experts_per_token": "experts_per_token",
+    "slstm_every": "slstm_every",
+    "ssm_every": "ssm_every",
+    "ssm_state": "ssm_state",
+}
+
+
+@dataclass(frozen=True)
+class LeafInfo:
+    """One leaf of the adapter's flat layout: ``flat[start:start+size]``
+    holds ``name``'s row-major values (f32 on the wire; ``dtype`` is the
+    pytree-side storage dtype the unflatten casts back to)."""
+
+    name: str
+    start: int
+    size: int
+    shape: tuple[int, ...]
+    dtype: str
+
+    @property
+    def stop(self) -> int:
+        """End offset (exclusive) of this leaf in the flat vector."""
+        return self.start + self.size
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+class ModelAdapter:
+    """Uniform model interface for the DFL engines (see module doc).
+
+    Construct via ``get_adapter`` / ``adapter_for`` (cached) rather than
+    directly; equality and hashing key on the canonical ``spec`` string
+    so adapters behave as jit static arguments.
+    """
+
+    def __init__(self, spec: str):
+        self.spec = spec
+
+    # --- identity: spec-keyed so jit caches hit across instances ---
+    def __eq__(self, other):
+        return isinstance(other, ModelAdapter) and self.spec == other.spec
+
+    def __hash__(self):
+        return hash((type(self).__name__, self.spec))
+
+    def __repr__(self):
+        return f"{type(self).__name__}({self.spec!r})"
+
+    # --- model math (overridden per adapter family) ---
+    def init(self, key):
+        """One worker's parameter pytree from a PRNGKey."""
+        raise NotImplementedError
+
+    def loss(self, params, batch):
+        """Scalar training loss for a ``{"x", "y"}`` batch."""
+        raise NotImplementedError
+
+    def accuracy(self, params, x, y):
+        """Scalar [0, 1] quality metric on an eval batch."""
+        raise NotImplementedError
+
+    def make_data(self, num_samples: int, *, seed: int = 0,
+                  spread: float = 1.0) -> synthetic.Dataset:
+        """The synthetic dataset family this model trains on."""
+        raise NotImplementedError
+
+    # --- static layout (shared implementation) ---
+    @property
+    def template(self):
+        """ShapeDtypeStruct pytree of ``init``'s output (no compute)."""
+        if not hasattr(self, "_template"):
+            self._template = jax.eval_shape(
+                lambda: self.init(jax.random.PRNGKey(0)))
+        return self._template
+
+    def leaf_offsets(self) -> tuple[LeafInfo, ...]:
+        """The flat layout's leaf-offset table, in ``jax.tree`` leaf
+        order — the order ``flatten_one`` concatenates (and
+        ``jax.flatten_util.ravel_pytree`` flattens) in."""
+        if not hasattr(self, "_leaves"):
+            infos, off = [], 0
+            pairs = jax.tree_util.tree_flatten_with_path(self.template)[0]
+            for path, leaf in pairs:
+                size = int(np.prod(leaf.shape)) if leaf.shape else 1
+                infos.append(LeafInfo(_leaf_name(path), off, size,
+                                      tuple(leaf.shape),
+                                      str(leaf.dtype)))
+                off += size
+            self._leaves = tuple(infos)
+        return self._leaves
+
+    @property
+    def param_count(self) -> int:
+        """P: exact number of scalar parameters (flat vector length)."""
+        return sum(l.size for l in self.leaf_offsets())
+
+    @property
+    def model_bits(self) -> float:
+        """Uncompressed wire payload of one model transfer (Eq. 10):
+        32 bits per parameter — the value ``SimCluster.model_bits`` and
+        the engines' ``p_wire`` derive from."""
+        return float(FP32_BITS * self.param_count)
+
+    def flatten_one(self, params):
+        """ONE worker's pytree -> [P] f32 vector (leaf order, row-major
+        per leaf) — identical to ``engine._flatten_row``."""
+        return jnp.concatenate(
+            [l.reshape(-1).astype(jnp.float32)
+             for l in jax.tree.leaves(params)])
+
+    def unflatten_one(self, vec):
+        """Inverse of ``flatten_one``: [P] -> pytree, casting each leaf
+        back to its storage dtype."""
+        leaves = []
+        for info in self.leaf_offsets():
+            leaves.append(vec[info.start:info.stop]
+                          .reshape(info.shape).astype(info.dtype))
+        return jax.tree.unflatten(jax.tree.structure(self.template),
+                                  leaves)
+
+
+class MlpAdapter(ModelAdapter):
+    """The synthetic 3-layer classifier (``simulation/model.py``) as
+    just another adapter — numerically identical to the engines'
+    historical hard-coded path, keeping every existing test meaningful."""
+
+    def __init__(self, dim: int, hidden: int, num_classes: int):
+        super().__init__(f"mlp:dim={dim},hidden={hidden},"
+                         f"classes={num_classes}")
+        self.dim = dim
+        self.hidden = hidden
+        self.num_classes = num_classes
+
+    def init(self, key):
+        """The exact ``init_classifier`` pytree (w1/b1/w2/b2/w3/b3)."""
+        return _mlp.init_classifier(key, self.dim, self.hidden,
+                                    self.num_classes)
+
+    def loss(self, params, batch):
+        """Softmax cross-entropy of the classifier."""
+        return _mlp.classifier_loss(params, batch)
+
+    def accuracy(self, params, x, y):
+        """Top-1 classification accuracy."""
+        return _mlp.accuracy(params, x, y)
+
+    def make_data(self, num_samples: int, *, seed: int = 0,
+                  spread: float = 1.0) -> synthetic.Dataset:
+        """Gaussian-mixture blobs (``make_classification_data``)."""
+        return synthetic.make_classification_data(
+            num_samples=num_samples, dim=self.dim,
+            num_classes=self.num_classes, spread=spread, seed=seed)
+
+
+class RegistryAdapter(ModelAdapter):
+    """A ``models/registry.py`` family behind the adapter interface.
+
+    The engines' batch ``x`` is an ``[B, S]`` int32 token block from the
+    class-structured Markov corpus (``make_token_data``); the LM loss
+    trains next-token prediction on ``x`` itself (``y`` — the document
+    class — only drives the non-IID partition). ``accuracy`` is the
+    bounded inverse per-token perplexity ``exp(-loss)`` so completion-
+    time targets stay in [0, 1] across model families."""
+
+    def __init__(self, cfg: ModelConfig, seq_len: int, num_classes: int,
+                 spec: str):
+        super().__init__(spec)
+        self.cfg = cfg
+        self.seq_len = seq_len
+        self.num_classes = num_classes
+
+    def init(self, key):
+        """The registry family's nested parameter pytree."""
+        from repro.models import registry
+        return registry.init_params(self.cfg, key)
+
+    def loss(self, params, batch):
+        """Next-token LM loss: ``x[..., :-1]`` predicts ``x[..., 1:]``.
+
+        Leading batch dims collapse to one ([..., S] -> [B', S]): the
+        engines' Alg. 1 measurements evaluate each worker on the full
+        [W, 256, S] eval stack, and the mean token loss is invariant to
+        the reshape."""
+        from repro.models import registry
+        tokens = batch["x"].astype(jnp.int32)
+        tokens = tokens.reshape((-1, tokens.shape[-1]))
+        loss, _ = registry.loss_fn(self.cfg, params,
+                                   {"tokens": tokens[:, :-1],
+                                    "labels": tokens[:, 1:]})
+        return loss
+
+    def accuracy(self, params, x, y):
+        """Inverse per-token perplexity exp(-loss) in [0, 1]."""
+        return jnp.exp(-self.loss(params, {"x": x, "y": y}))
+
+    def make_data(self, num_samples: int, *, seed: int = 0,
+                  spread: float = 1.0) -> synthetic.Dataset:
+        """Class-structured Markov-chain LM corpus (p-skew friendly)."""
+        return synthetic.make_token_data(
+            num_sequences=num_samples, seq_len=self.seq_len,
+            vocab_size=self.cfg.vocab_size,
+            num_classes=self.num_classes, seed=seed)
+
+
+def _parse_kv(body: str) -> dict[str, int]:
+    out = {}
+    if not body:
+        return out
+    for item in body.split(","):
+        key, sep, val = item.partition("=")
+        if not sep:
+            raise ValueError(f"model spec item {item!r} is not key=val")
+        out[key.strip()] = int(val)
+    return out
+
+
+@lru_cache(maxsize=64)
+def get_adapter(spec: str, *, dim: int = 32, hidden: int = 64,
+                num_classes: int = 10) -> ModelAdapter:
+    """Parse a ``cfg.model`` spec into a (cached) adapter.
+
+    ``dim``/``hidden``/``num_classes`` apply to the MLP family only
+    (its shapes come from the classification dataset); registry specs
+    carry their own dims. Raises ValueError for non-token registry
+    families (encdec / vlm) — their batches need modality inputs the
+    DFL pipeline does not carry."""
+    family, _, body = str(spec).partition(":")
+    family = family.strip() or "mlp"
+    if family == "mlp":
+        if body:
+            hidden = int(body)
+        return MlpAdapter(dim, hidden, num_classes)
+    if family not in DFL_FAMILIES:
+        raise ValueError(
+            f"model family {family!r} cannot train under DFL: supported "
+            f"families are ('mlp',) + {DFL_FAMILIES} (encdec/vlm need "
+            "modality inputs the engines' batch pipeline does not carry)")
+    kv = _parse_kv(body)
+    seq_len = kv.pop("seq", 16)
+    n_classes = kv.pop("classes", 8)
+    fields = {_SPEC_KEYS[k]: v for k, v in kv.items() if k in _SPEC_KEYS}
+    unknown = [k for k in kv if k not in _SPEC_KEYS]
+    if unknown:
+        raise ValueError(f"unknown model spec keys {unknown}; "
+                         f"known: {sorted(set(_SPEC_KEYS))} + seq, classes")
+    base = dict(name=f"dfl-{family}", family=family, num_layers=2,
+                d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                vocab_size=64, dtype="float32", remat="none")
+    if family == "moe":
+        base.update(num_experts=4, experts_per_token=2)
+    if family == "hybrid":
+        base.update(ssm_state=16, ssm_every=2)
+    if family == "xlstm":
+        base.update(slstm_every=2)
+    base.update(fields)
+    cfg = ModelConfig(**base)
+    # canonical spec: sorted resolved fields, so equivalent key spellings
+    # ("d=32" vs "d_model=32") hash to the same jit cache entry
+    canon = (f"{family}:" + ",".join(
+        f"{k}={v}" for k, v in sorted(
+            dataclasses.asdict(cfg).items())
+        if not isinstance(v, (tuple, str)) and v)
+        + f",seq={seq_len},classes={n_classes}")
+    return RegistryAdapter(cfg, seq_len, n_classes, canon)
+
+
+def adapter_for(cfg, data=None, hidden: int = 64) -> ModelAdapter:
+    """The adapter a run's ``FedHPConfig`` names, with MLP shape dims
+    taken from ``data`` (the engines' call pattern; defaults reproduce
+    the historical hard-coded classifier exactly)."""
+    spec = getattr(cfg, "model", "mlp")
+    if data is not None and str(spec).partition(":")[0] in ("mlp", ""):
+        return get_adapter(spec, dim=int(data.x.shape[-1]),
+                           hidden=hidden,
+                           num_classes=int(data.num_classes))
+    return get_adapter(spec, hidden=hidden)

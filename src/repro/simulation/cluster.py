@@ -216,7 +216,13 @@ class SimCluster:
     time draws (device profiles + fluctuating bandwidth) plus dynamic
     membership — ``advance_round`` replays the ``ChurnSchedule`` (and the
     legacy ``fail_at``/``recover_at`` hooks) into the alive mask the
-    engines consume."""
+    engines consume.
+
+    ``model_bits`` is the uncompressed per-transfer payload in bits —
+    32 x the model's TRUE parameter count, taken from the run's
+    ``ModelAdapter.model_bits`` (core/modelspec.py) by
+    ``experiment.setup_experiment``; Eq. 10 comm times (``sample_beta``)
+    follow whatever model actually trains, not a hard-coded constant."""
 
     num_workers: int
     model_bits: float                    # per-transfer payload (bits)

@@ -27,6 +27,7 @@ DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
 AUDITED_MODULES = [
     "src/repro/core/engine.py",
     "src/repro/core/fused.py",
+    "src/repro/core/modelspec.py",
     "src/repro/core/compression.py",
     "src/repro/core/topology.py",
     "src/repro/core/controller.py",
