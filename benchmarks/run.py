@@ -17,6 +17,11 @@
            [W, W] matrix: small-W accuracy parity (<= 0.1%) plus a
            W=2048 ring leg the dense engine cannot reach (CI-gated via
            --smoke: wall-clock + memory budgets)
+  sharded  sharded [W, P] execution (mesh=...) vs the single-device
+           oracle: small-W accuracy parity (<= 0.1%) plus a W=4096
+           sparse-ring leg with per-shard memory strictly below the
+           whole-array footprint (CI-gated via --smoke on a forced
+           8-device CPU)
   adpsgd   fused event-driven AD-PSGD vs the reference event loop:
            events/sec + accuracy parity (CI-gated via --smoke: >= 5x)
 
@@ -458,6 +463,113 @@ def bench_adpsgd(rows, full):
                         f"from the reference event loop")
 
 
+def bench_sharded(rows, full):
+    """Sharded [W, P] execution (``run_algorithm(mesh=...)``) vs the
+    single-device oracle: (1) a small-W parity leg — the sharded fused
+    engine must match the unsharded run to <= 0.1% final accuracy (the
+    two paths differ only by the routed delta's summation order);
+    (2) a W=4096 ring sparse-gossip leg run ONLY sharded, recording
+    rounds/sec and peak RSS, with the per-round trajectory persisted to
+    ``BENCH_sharded.json`` (the CI artifact). The large leg also checks
+    the point of sharding: every final-params leaf must keep one shard
+    per device, so the bytes addressed by a single device stay strictly
+    below the whole-array footprint. Needs >= 2 devices (CI exports
+    XLA_FLAGS=--xla_force_host_platform_device_count=8); on one device
+    the bench emits a skip row (fatal in --smoke mode, where the lane
+    guarantees the devices)."""
+    import json
+    import resource
+
+    import jax
+
+    from repro.core.experiment import run_algorithm
+    from repro.launch.mesh import make_worker_mesh
+
+    ndev = jax.device_count()
+    if ndev < 2:
+        emit(rows, "sharded", "skipped[devices]", ndev)
+        if SMOKE:
+            FAILURES.append(
+                "sharded bench needs >= 2 devices (export XLA_FLAGS="
+                "--xla_force_host_platform_device_count=8)")
+        return
+    n_shards = 4 if ndev >= 4 else 2
+    mesh = make_worker_mesh(n_shards)
+    emit(rows, "sharded", "n_shards", n_shards)
+
+    # ---- small-W parity: sharded fused vs single-device fused ------------
+    cfg = base_cfg(full)
+    rounds = 30 if SMOKE else (60 if not full else 150)
+    if SMOKE:
+        cfg = replace(cfg, num_workers=8)
+    cfg = replace(cfg, base_topology="ring", gossip="sparse")
+    hs = {}
+    for leg, m in (("oracle", None), ("sharded", mesh)):
+        hs[leg] = run_algorithm("dpsgd", cfg, non_iid_p=0.4, rounds=rounds,
+                                spread=SPREAD, fused=True, mesh=m)
+        emit(rows, "sharded", f"final_acc[{leg}]",
+             round(hs[leg].final_accuracy, 4))
+    drift = abs(hs["sharded"].final_accuracy - hs["oracle"].final_accuracy)
+    emit(rows, "sharded", "acc_drift_vs_oracle", round(drift, 5))
+
+    # ---- large-W scaling: W=4096 sparse ring, sharded only ---------------
+    big_w = 4096 if (SMOKE or full) else 1024
+    big_rounds = 3
+    big = FedHPConfig(num_workers=big_w, rounds=big_rounds, tau_init=2,
+                      tau_max=4, lr=0.1, batch_size=16, seed=5,
+                      base_topology="ring", gossip="sparse")
+    t0 = time.perf_counter()
+    h_big = run_algorithm("dpsgd", big, non_iid_p=0.1, rounds=big_rounds,
+                          fused=True, mesh=mesh, num_samples=32 * big_w)
+    wall = time.perf_counter() - t0
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    emit(rows, "sharded", "big_w", big_w)
+    emit(rows, "sharded", "big_rounds_per_s",
+         round(big_rounds / wall, 3))
+    emit(rows, "sharded", "big_peak_rss_mb", round(rss_mb, 0))
+    emit(rows, "sharded", "big_final_acc", round(h_big.final_accuracy, 4))
+
+    # big_w divides n_shards, so unpad is an identity and the final
+    # params stay sharded: each device must address a strict subset
+    leaf = jax.tree.leaves(h_big.final_params)[0]
+    shard_bytes = max(s.data.nbytes for s in leaf.addressable_shards)
+    emit(rows, "sharded", "big_param_bytes", leaf.nbytes)
+    emit(rows, "sharded", "big_per_shard_bytes", shard_bytes)
+
+    a = h_big.as_arrays()
+    with open("BENCH_sharded.json", "w") as f:
+        json.dump({"mode": "smoke" if SMOKE else
+                   ("full" if full else "quick"),
+                   "n_shards": n_shards, "small_w": cfg.num_workers,
+                   "small_drift": drift, "big_w": big_w,
+                   "big_rounds_per_s": round(big_rounds / wall, 3),
+                   "big_peak_rss_mb": round(rss_mb, 0),
+                   "per_shard_bytes": shard_bytes,
+                   "param_bytes": leaf.nbytes,
+                   "trajectory": {k: a[k].tolist() for k in
+                                  ("round", "accuracy", "loss", "consensus",
+                                   "cumulative_time")}}, f)
+    emit(rows, "sharded", "trajectory_file", "BENCH_sharded.json")
+
+    if SMOKE:
+        if drift > 1e-3:
+            FAILURES.append(
+                f"sharded accuracy drift {drift:.4f} > 0.1% vs the "
+                "single-device oracle")
+        if shard_bytes >= leaf.nbytes:
+            FAILURES.append(
+                f"sharded W={big_w} params not actually sharded: one "
+                f"device addresses {shard_bytes} of {leaf.nbytes} bytes")
+        if wall / big_rounds > 120.0:
+            FAILURES.append(
+                f"sharded W={big_w} at {wall / big_rounds:.1f} s/round "
+                "> 120 s budget")
+        if h_big.final_accuracy < 0.5:
+            FAILURES.append(
+                f"sharded W={big_w} failed to learn "
+                f"(acc {h_big.final_accuracy:.3f})")
+
+
 def bench_scenarios(rows, full):
     """Scenario-diversity benchmark: (1) FedHP's adaptive topology vs
     fixed complex-network graphs (BA / WS / geo) under correlated rack
@@ -678,6 +790,7 @@ BENCHES = {
     "compressed": bench_compressed,
     "sparse": bench_sparse,
     "sparse_gossip": bench_sparse_gossip,
+    "sharded": bench_sharded,
     "adpsgd": bench_adpsgd,
     "scenarios": bench_scenarios,
     "pytree": bench_pytree,

@@ -41,6 +41,14 @@ gossip wire, under 10% churn:
 
     PYTHONPATH=src python examples/heterogeneity_study.py --pytree
 
+``--sharded`` runs the sharded-execution study instead: the [W, P]
+worker matrix split across the host's devices over a worker mesh
+(runtime/shardexec), sharded vs single-device trajectories side by
+side — force a multi-device CPU first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python examples/heterogeneity_study.py --sharded
+
 ``--scenarios`` runs the scenario-axis study instead: FedHP's adaptive
 topology vs fixed complex-network graphs (Barabási–Albert,
 Watts–Strogatz, geo/racks) under correlated rack outages, then 20%
@@ -180,6 +188,40 @@ def pytree_study(fused: bool = False):
               f"{h.records[-1].cumulative_time:9.1f}")
 
 
+def sharded_study(fused: bool = False):
+    """Sharded [W, P] execution: the fleet's worker matrix split across
+    the host's devices (one shard_map program per round / segment,
+    cross-shard gossip over lax.ppermute) next to the single-device run
+    it must reproduce — host clock fields identical, accuracy to
+    summation-order drift."""
+    import jax
+
+    from repro.launch.mesh import make_worker_mesh
+
+    ndev = jax.device_count()
+    if ndev < 2:
+        print("sharded study needs a multi-device host; run with\n"
+              "  XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        return
+    n_shards = 4 if ndev >= 4 else 2
+    mesh = make_worker_mesh(n_shards)
+    cfg = replace(CFG, rounds=40, gossip="sparse",
+                  num_workers=(CFG.num_workers + n_shards - 1)
+                  // n_shards * n_shards + 2)   # exercise padding too
+    print(f"sharded execution: W={cfg.num_workers} over {n_shards} "
+          f"device shards ({ndev} devices visible)")
+    print(f"{'algo':8s} {'path':>8s} {'acc':>6s} {'total(s)':>9s} "
+          f"{'wait':>6s}")
+    for algo in ("fedhp", "dpsgd"):
+        for m in (None, mesh):
+            h = run_algorithm(algo, cfg, non_iid_p=0.4, spread=3.0,
+                              time_budget=BUDGET, fused=fused, mesh=m)
+            path = "sharded" if m is not None else "1-dev"
+            print(f"{algo:8s} {path:>8s} {h.final_accuracy:6.3f} "
+                  f"{h.records[-1].cumulative_time:9.1f} "
+                  f"{h.avg_waiting:6.2f}")
+
+
 def adpsgd_study():
     """Asynchronous engines head to head: reference event loop vs fused
     event scan, uncompressed vs int8 compensated pairwise exchange."""
@@ -213,6 +255,9 @@ def main():
     ap.add_argument("--pytree", action="store_true",
                     help="run registry pytree models (dense / xlstm LMs) "
                          "under fedhp with a per-leaf codec map")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run the sharded [W, P] study (needs a multi-"
+                         "device host; see XLA_FLAGS in the docstring)")
     ap.add_argument("--fused", action="store_true",
                     help="run the algorithms on the fused scan engines")
     args = ap.parse_args()
@@ -224,6 +269,8 @@ def main():
         compressed_study(fused=args.fused)
     elif args.pytree:
         pytree_study(fused=args.fused)
+    elif args.sharded:
+        sharded_study(fused=args.fused)
     elif args.adpsgd:
         adpsgd_study()
     else:

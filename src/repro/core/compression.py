@@ -666,7 +666,8 @@ def compressed_gossip_ref(flat, err, mix, *, error_feedback: bool = True,
                           kind: str = "int8", k: int = 0, key=None,
                           step=None, gamma: float = 1.0,
                           use_kernel: bool = False,
-                          interpret: bool = False, edges=None):
+                          interpret: bool = False, edges=None,
+                          mix_delta_fn=None):
     """One compressed gossip round on the flattened [W, P] params — the
     jnp reference the engines and tests share, for any codec.
 
@@ -696,8 +697,15 @@ def compressed_gossip_ref(flat, err, mix, *, error_feedback: bool = True,
     ``edges=(src, dst, w)`` switches the mixing delta to the sparse
     edge-list form (``edge_mix_delta``; pass ``mix=None``) — the same
     compensated update, O(E P) instead of O(W^2 P).
+
+    ``mix_delta_fn`` overrides the delta entirely (pass ``mix=None``):
+    the sharded path (``runtime/collectives``) injects its ppermute-routed
+    per-shard delta here so the payload/state/update formulas stay this
+    single implementation, with only the routing swapped.
     """
     def mix_delta(v):
+        if mix_delta_fn is not None:
+            return mix_delta_fn(v)
         if edges is not None:
             return edge_mix_delta(v, *edges, flat.shape[0])
         return jnp.tensordot(mix, v, axes=1) - v

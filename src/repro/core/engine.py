@@ -348,7 +348,7 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
             mixing: str = "uniform",
             time_budget: float | None = None,
             adapter: modelspec.ModelAdapter | None = None,
-            init_params=None) -> History:
+            init_params=None, mesh=None) -> History:
     """time_budget: stop once the simulated clock passes it — the paper's
     equal-wall-time comparison (completion time is the metric, Fig. 3).
 
@@ -356,19 +356,35 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
     ``modelspec.adapter_for`` — the synthetic MLP unless the config names
     a registry family). ``init_params`` resumes from a [W, ...] stacked
     pytree (e.g. a prior run's ``History.final_params`` reloaded through
-    ``checkpoint/store.py``) instead of broadcasting ``adapter.init``."""
+    ``checkpoint/store.py``) instead of broadcasting ``adapter.init``.
+
+    ``mesh`` (or ``cfg.sharded``) activates the sharded path: the worker
+    dim splits over the mesh's axes (``runtime/shardexec``), local SGD
+    and the join blend run per-slice under shard_map, and gossip always
+    takes the edge-list form routed cross-shard by ppermute — the
+    per-edge weights are bit-identical to the dense off-diagonals, so
+    dense-config runs stay within the differential harness tolerances.
+    The host control plane (churn, plans, Eq. 10 clock) is untouched:
+    host-side record fields match the single-device oracle exactly."""
     rounds = rounds or cfg.rounds
     n = cfg.num_workers
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
     if adapter is None:
         adapter = modelspec.adapter_for(cfg, data, hidden=hidden)
+    shard = None
+    if mesh is not None or getattr(cfg, "sharded", False):
+        from repro.runtime import shardexec
+        shard = shardexec.WorkerShardPlan(
+            mesh if mesh is not None else shardexec.default_worker_mesh(), n)
     if init_params is None:
         p0 = adapter.init(key)
         stacked = jax.tree.map(
             lambda l: jnp.broadcast_to(l, (n,) + l.shape), p0)
     else:
         stacked = jax.tree.map(jnp.asarray, init_params)
+    if shard is not None:
+        stacked = shard.put_stacked(stacked)
 
     tx = jnp.asarray(test_x[:eval_subset])
     ty = jnp.asarray(test_y[:eval_subset])
@@ -426,6 +442,19 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
     clock = 0.0
     needs_cross = strategy.name == "pens"
     sparse_gossip = cfg.gossip == "sparse"
+    if shard is not None:
+        if robust_active:
+            raise ValueError(
+                "the sharded path does not compose with cfg.byzantine / "
+                "cfg.robust (data-dependent sorts are single-device-only)")
+        if leafmap:
+            raise ValueError(
+                "the sharded path does not support leafmap codecs yet "
+                "(per-leaf payloads need per-segment routing)")
+        if needs_cross:
+            raise ValueError(
+                "pens needs the [W, W] cross-loss matrix every round; "
+                "run it on the single-device path")
     # time-varying non-IID drift: a DriftingPartition swaps shard lists
     # on its schedule; static lists pass through untouched. The batch
     # RNG consumption is shape-identical either way, so both engines
@@ -437,15 +466,19 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
         if joined.any():
             donors = alive & ~joined
             if donors.any():
-                stacked = _reinit_joined(stacked, jnp.asarray(joined),
-                                         jnp.asarray(donors))
+                if shard is not None:
+                    stacked = shard.reinit_joined(stacked, joined, donors)
+                else:
+                    stacked = _reinit_joined(stacked, jnp.asarray(joined),
+                                             jnp.asarray(donors))
                 if compress:
                     # the blended model owes nothing from the departed
                     # model's last transmission: residual resets to zero,
                     # the top-k public copy to the (deterministic, hence
                     # shared-knowledge) blended row
                     fj = _flatten_workers(stacked)
-                    kc = jnp.asarray(joined)[:, None]
+                    kc = jnp.asarray(joined if shard is None else
+                                     shard.pad_host(joined, False))[:, None]
                     err = (compression.leafmap_state_after_join(
                                err, kc, fj, codec0, cfg.error_feedback)
                            if leafmap else
@@ -481,8 +514,15 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
                                shards.shards_at(h) if drifting else shards,
                                tau_cap, cfg.batch_size)
         prev = stacked
-        stacked = _local_train(adapter, stacked, bx, by, jnp.asarray(taus),
-                               jnp.float32(lr), tau_cap)
+        if shard is not None:
+            stacked = shard.local_train(
+                adapter, stacked, shard.pad_host(bx), shard.pad_host(by),
+                jnp.asarray(shard.pad_host(taus, 0)), jnp.float32(lr),
+                tau_cap)
+        else:
+            stacked = _local_train(adapter, stacked, bx, by,
+                                   jnp.asarray(taus), jnp.float32(lr),
+                                   tau_cap)
 
         # --- clock (Eq. 10-11) ---
         comm = np.where(adj.sum(1) > 0,
@@ -501,7 +541,26 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
         clock += t_round
 
         # --- gossip aggregation (Eq. 5-6), optionally compressed ---
-        if adj.sum() > 0 and robust_active:
+        if adj.sum() > 0 and shard is not None:
+            # sharded gossip always takes the edge-list form: per-edge
+            # weights are bit-identical to the dense off-diagonals
+            # (topology.edge_mixing_weights), the routing is one ppermute
+            # per distinct shard offset (runtime/collectives); padding
+            # rows have no edges and contribute exactly nothing
+            e = topo.edges_from_adj(adj)
+            ew = topo.edge_mixing_weights(e, n, mixing)
+            src, dst, ws = topo.directed_edges(e, ew)
+            flat = _flatten_workers(stacked)
+            if compress:
+                mixed, err = shard.gossip_compressed_edges(
+                    flat, err, src, dst, ws, skey, jnp.int32(h),
+                    jnp.float32(cfg.sparse_gamma), kind=rcodec.kind,
+                    k=rcodec.resolve_k(p_model),
+                    error_feedback=cfg.error_feedback)
+            else:
+                mixed = shard.gossip_edges(flat, src, dst, ws)
+            stacked = _unflatten(mixed, stacked)
+        elif adj.sum() > 0 and robust_active:
             # Byzantine / robust path (core/robust.py): byzantine rows
             # lie on the wire; robust modes aggregate the closed
             # neighborhood coordinate-wise instead of the weighted mix.
@@ -594,7 +653,12 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
         meas = (alive & ~byz) if has_byz and (alive & ~byz).any() else alive
         losses, accs, ls, sigs, upds = _measure(adapter, stacked, prev, ex,
                                                 ey, px, py)
-        flat = np.asarray(_flatten_workers(stacked))
+        if shard is not None:
+            # padding rows are not part of the fleet: every per-worker
+            # vector leaves the device sliced back to the real W
+            losses, accs, ls, sigs, upds = (
+                v[:n] for v in (losses, accs, ls, sigs, upds))
+        flat = np.asarray(_flatten_workers(stacked))[:n]
         pair = pairwise_distances(flat)
         cross = None
         if needs_cross:
@@ -608,7 +672,9 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
             loss=float(np.mean(np.asarray(losses)[meas])),
             cross_loss=cross, alive=alive, wire_ratio=comm_ratio)
 
-        mean_acc, mean_loss = _mean_accuracy(adapter, stacked, tx, ty, meas)
+        mean_acc, mean_loss = _mean_accuracy(
+            adapter, stacked, tx, ty,
+            meas if shard is None else shard.pad_host(meas, False))
         fa = flat[meas] if meas.any() else flat
         d_bar = float(np.linalg.norm(fa - fa.mean(0), axis=1).mean())
         hist.records.append(RoundRecord(
@@ -619,7 +685,7 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
             cumulative_time=clock))
         if time_budget is not None and clock >= time_budget:
             break
-    hist.final_params = stacked
+    hist.final_params = stacked if shard is None else shard.unpad(stacked)
     return hist
 
 

@@ -84,7 +84,7 @@ def run_algorithm(algorithm: str, cfg: FedHPConfig, *, non_iid_p: float = 0.1,
                   churn: ChurnSchedule | None = None,
                   time_budget: float | None = None,
                   fused: bool = False, seeds=None,
-                  num_samples: int = 6000):
+                  num_samples: int = 6000, mesh=None):
     """Run one (algorithm, non-IID level) cell and return its History.
 
     ``fused=True`` routes the run through the scan-based engines
@@ -95,14 +95,25 @@ def run_algorithm(algorithm: str, cfg: FedHPConfig, *, non_iid_p: float = 0.1,
     returns ``list[History]``. ``num_samples`` sizes the synthetic
     dataset — raise it for large-W runs so every worker shard stays
     non-empty.
+
+    ``mesh`` (or ``cfg.sharded``) runs the synchronous engines on the
+    sharded path (``runtime/shardexec``): the [W, P] worker matrix
+    splits over the mesh's worker axis, cross-shard gossip rides
+    ppermute-routed edge tables. Not available for AD-PSGD.
     """
     if seeds is not None and not fused:
         raise ValueError("seeds batching requires fused=True")
     cfg = replace(cfg, algorithm=algorithm)
+    if mesh is not None:
+        cfg = replace(cfg, sharded=True)
     train, tx, ty, shards, cluster = setup_experiment(
         cfg, non_iid_p=non_iid_p, fail_at=fail_at, spread=spread,
         churn=churn, rounds=rounds, num_samples=num_samples)
     if algorithm == "adpsgd":
+        if mesh is not None or cfg.sharded:
+            raise ValueError("the sharded path covers the synchronous "
+                             "engines only (AD-PSGD's event loop scatters "
+                             "single rows — shard-hostile by design)")
         if fused:
             from repro.core.fused import run_adpsgd_fused
             return run_adpsgd_fused(train, tx, ty, shards, cluster, cfg,
@@ -116,7 +127,8 @@ def run_algorithm(algorithm: str, cfg: FedHPConfig, *, non_iid_p: float = 0.1,
         from repro.core.fused import run_dfl_fused
         return run_dfl_fused(train, tx, ty, shards, cluster, cfg, strategy,
                              rounds=rounds, mixing=mixing,
-                             time_budget=time_budget, seeds=seeds)
+                             time_budget=time_budget, seeds=seeds,
+                             mesh=mesh)
     return engine.run_dfl(train, tx, ty, shards, cluster, cfg, strategy,
                           rounds=rounds, mixing=mixing,
-                          time_budget=time_budget)
+                          time_budget=time_budget, mesh=mesh)

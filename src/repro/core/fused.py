@@ -60,6 +60,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import FedHPConfig
 from repro.core import compression
@@ -75,6 +76,9 @@ from repro.core.engine import (AdpsgdSchedule, History, RoundRecord,
 from repro.data.synthetic import Dataset
 from repro.kernels.gossip_edges import gossip_edges
 from repro.kernels.gossip_mix import gossip_mix_2d
+from repro.runtime.collectives import (_shard_map, edge_shard_tables,
+                                       routed_mix_delta)
+from repro.runtime.sharding import worker_stack_pspecs, worker_stack_spec
 from repro.simulation.cluster import SimCluster
 
 # static-plan strategies would otherwise stage the whole horizon's batch
@@ -286,6 +290,172 @@ def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
 
 
 # ---------------------------------------------------------------------------
+# device code: the sharded twin — shard_map around the whole segment scan
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("adapter", "tau_cap", "measure", "kind",
+                                   "k", "ef", "mesh", "axes", "offsets",
+                                   "n_shards"))
+def _scan_segment_sharded(stacked, err, bx, by, ex, ey, px, py, taus, lrs,
+                          esl, edl, ewl, comms, ew, cw, keep, rw, hs, skey,
+                          gamma, tx, ty, *, adapter, tau_cap: int,
+                          measure: bool, kind: str, k: int, ef: bool,
+                          mesh, axes, offsets, n_shards: int):
+    """``_scan_segment`` with the [W, P] worker matrix sharded over the
+    ``axes`` of ``mesh`` (the ``runtime/shardexec`` layout): the WHOLE
+    K-round ``lax.scan`` runs inside one ``shard_map``, so per-round
+    device work stays on each shard's ``rows = w_pad / n_shards`` block
+    and only the cross-shard gossip contributions move — one ``ppermute``
+    per distinct shard offset, via ``runtime/collectives.
+    routed_mix_delta`` on the per-round [D, n_shards, width] edge tables
+    ``esl``/``edl``/``ewl`` (built by the driver against the static
+    ``offsets`` so every round of the segment shares one specialization).
+
+    Differences from the unsharded scan, none of them behavioral:
+
+    - no seed axis: the driver runs S=1 and re-adds the axis host-side
+      (a batched ``seeds`` sweep stays unsharded);
+    - gossip is ALWAYS the edge-list form (per-edge weights bit-identical
+      to the dense off-diagonals) and the codecs run the
+      ``use_kernel=False`` oracle row path (bit-identical to the Pallas
+      kernels by the kernel differential tests) — payloads are row-local,
+      so each shard compresses its own block and only the routed mixing
+      delta crosses shards;
+    - fleet scalars (join-blend mean, acc/loss/consensus dots) are psums
+      of per-shard partials; the measure-mode [W, W] edge-distance gram
+      ``all_gather``s the flat matrix (FedHP's tracker consumes the full
+      gram — a measurement cost at segment boundaries, not a per-round
+      training cost);
+    - inputs arrive PADDED to ``w_pad`` rows (inert rows: zero params,
+      tau 0, no edges, zero metric weights — exact no-ops end to end);
+      the driver slices [W]-shaped outputs back to the real fleet.
+
+    Returns ((stacked', err'), outs) with NO leading seed axis.
+    """
+    compress = kind != "none"
+    stateful = compress and compression.carries_state(kind, ef)
+    lead = axes if len(axes) > 1 else axes[0]
+
+    def xspec(ndim):
+        # [K, w_pad, ...] per-round control input: worker axis second
+        return P(*([None, lead] + [None] * (ndim - 2)))
+
+    def rspec(ndim):
+        # fully replicated (eval tensors, scalars, [K] vectors)
+        return P(*([None] * ndim))
+
+    def scanned(stacked, err, bx, by, ex, ey, px, py, taus, lrs, esl, edl,
+                ewl, comms, ew, cw, keep, rw, hs, skey, gamma, tx, ty):
+
+        def body(carry, xs):
+            carry, err_c = carry
+            (bxh, byh, tau_h, lr_h, sl_h, dl_h, wl_h, comm_h, ew_h, cw_h,
+             keep_h, rw_h, h_h) = xs
+
+            def mix_delta(v):
+                return routed_mix_delta(v, sl_h, dl_h, wl_h, offsets, axes,
+                                        n_shards)
+
+            # --- join re-init: _blend_joined with the fleet mean as a
+            # psum of per-shard partial tensordots (rw_h is zero outside
+            # the donor rows, so partials just add up) ---
+            def blend(l):
+                part = jnp.tensordot(rw_h, l.astype(jnp.float32), axes=1)
+                mean = jax.lax.psum(part, axes)
+                kk = keep_h.reshape((-1,) + (1,) * (l.ndim - 1))
+                return jnp.where(kk, mean[None].astype(l.dtype), l)
+
+            carry = jax.tree.map(blend, carry)
+            if stateful:
+                err_c = compression.state_after_join(
+                    err_c, keep_h[:, None], _flatten_workers(carry), kind,
+                    ef)
+            prev = carry
+
+            # --- local updating (Eq. 3): row-local, the same vmapped
+            # per-worker step on each shard's block ---
+            carry = jax.vmap(
+                lambda p, bxw, byw, tau: _sgd_worker(adapter, p, bxw, byw,
+                                                     tau, lr_h, tau_cap))(
+                carry, bxh, byh, tau_h)
+
+            flat = _flatten_workers(carry)
+            if kind == "topk" and ef:
+                # x̂-tracked top-k: identical update to the unsharded
+                # scan; the oracle sparsify is per-row, so each shard
+                # compresses its own rows
+                q = compression.sparsify_rows(flat - err_c, "topk", k,
+                                              use_kernel=False)
+                xhat = err_c + q
+                err_c = jnp.where(comm_h > 0, xhat, err_c)
+                y_flat = flat + comm_h * gamma * mix_delta(xhat)
+            elif compress:
+                # int8 / rand-k / naive top-k round trip per shard block
+                # (rand-k's mask is recomputed identically on every shard
+                # from the shared key + step), then the routed delta
+                z = flat + err_c if stateful else flat
+                yhat = compression.encode_rows(z, kind, k, key=skey,
+                                               step=h_h, use_kernel=False)
+                if stateful:
+                    err_c = jnp.where(comm_h > 0, z - yhat, err_c)
+                y_flat = flat + comm_h * mix_delta(yhat)
+            else:
+                # sparse gossip (Eq. 5-6): zero-weight padding edges make
+                # no-comm rounds exact no-ops, same contract as the edge
+                # kernel
+                y_flat = flat + mix_delta(flat)
+            carry = _unflatten(y_flat, carry)
+
+            # --- per-round fleet metrics: per-shard partial dots, psum'd
+            # (metric weights are zero on the inert padding rows) ---
+            accs = jax.vmap(lambda p: adapter.accuracy(p, tx, ty))(carry)
+            tloss = jax.vmap(
+                lambda p: adapter.loss(p, {"x": tx, "y": ty}))(carry)
+            dmean = jax.lax.psum(jnp.tensordot(cw_h, y_flat, axes=1), axes)
+            dists = jnp.sqrt(jnp.sum((y_flat - dmean[None]) ** 2, axis=1))
+            outs = {"acc": jax.lax.psum(jnp.dot(ew_h, accs), axes),
+                    "loss": jax.lax.psum(jnp.dot(ew_h, tloss), axes),
+                    "consensus": jax.lax.psum(jnp.dot(cw_h, dists), axes)}
+
+            if measure:
+                # per-worker measurements are row-local (the eval/probe
+                # stacks are replicated — historical full-stack
+                # semantics); the [W, W] gram needs every row, so the
+                # flat matrix is all_gathered once per measured round
+                losses, _, ls, sigs, upds = jax.vmap(
+                    lambda p, q: _measure_worker(adapter, p, q, ex, ey, px,
+                                                 py))(carry, prev)
+                yg = jax.lax.all_gather(y_flat, axes, axis=0, tiled=True)
+                sq = jnp.sum(yg * yg, axis=1)
+                d2 = jnp.maximum(
+                    sq[:, None] + sq[None, :] - 2.0 * (yg @ yg.T), 0.0)
+                d2 = d2 * (1.0 - jnp.eye(d2.shape[0]))
+                outs.update(losses=losses, ls=ls, sigs=sigs, upds=upds,
+                            edge=jnp.sqrt(d2))
+            return (carry, err_c), outs
+
+        return jax.lax.scan(body, (stacked, err),
+                            (bx, by, taus, lrs, esl, edl, ewl, comms, ew,
+                             cw, keep, rw, hs))
+
+    s_specs = worker_stack_pspecs(stacked, axes)
+    e_spec = worker_stack_spec(err.ndim, axes)
+    t_spec = P(None, None, lead, None)
+    in_specs = (s_specs, e_spec, xspec(bx.ndim), xspec(by.ndim),
+                rspec(ex.ndim), rspec(ey.ndim), rspec(px.ndim),
+                rspec(py.ndim), xspec(2), P(None), t_spec, t_spec, t_spec,
+                P(None), xspec(2), xspec(2), xspec(2), xspec(2), P(None),
+                rspec(jnp.ndim(skey)), P(), rspec(tx.ndim), rspec(ty.ndim))
+    outs_spec = {"acc": P(None), "loss": P(None), "consensus": P(None)}
+    if measure:
+        outs_spec.update(losses=xspec(2), ls=xspec(2), sigs=xspec(2),
+                         upds=xspec(2), edge=rspec(3))
+    fn = _shard_map(scanned, mesh, in_specs, ((s_specs, e_spec), outs_spec))
+    return fn(stacked, err, bx, by, ex, ey, px, py, taus, lrs, esl, edl,
+              ewl, comms, ew, cw, keep, rw, hs, skey, gamma, tx, ty)
+
+
+# ---------------------------------------------------------------------------
 # host code: segment precompute replaying the reference engine's streams
 # ---------------------------------------------------------------------------
 
@@ -485,6 +655,47 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
     return seg, clock, stop
 
 
+def _pad_rows(a, pad: int, axis: int = 1, fill=0):
+    """Pad ``a``'s worker ``axis`` with ``pad`` inert rows (host numpy)."""
+    if pad == 0:
+        return np.asarray(a)
+    widths = [(0, 0)] * np.ndim(a)
+    widths[axis] = (0, pad)
+    return np.pad(a, widths, constant_values=fill)
+
+
+def _sharded_edge_tables(seg: "_Segment", plan):
+    """Per-round routed edge tables for one segment, unioned to a single
+    static (offsets, width) so all K rounds share one ``shard_map``
+    specialization: [K, D, n_shards, width] arrays whose zero-weight
+    padding slots contribute exactly 0 to the routed delta."""
+    rows = plan.rows
+    offs = {0}      # padding edges (src=dst=0) always land in offset 0
+    for t in range(seg.esrc.shape[0]):
+        src, dst = seg.esrc[t], seg.edst[t]
+        offs.update(int(d) for d in np.unique(
+            (dst // rows - src // rows) % plan.n_shards))
+    offsets = tuple(sorted(offs))
+    per = []
+    for t in range(seg.esrc.shape[0]):
+        _, sl, dl, wl = edge_shard_tables(
+            seg.esrc[t], seg.edst[t], seg.ewt[t], plan.w_pad,
+            plan.n_shards, offsets=offsets)
+        per.append((sl, dl, wl))
+    # bucket the per-(offset, dest-shard) slot width to the next power of
+    # two so adaptive topologies trigger ~log2(E) specializations
+    width = max(max(sl.shape[2] for sl, _, _ in per), 8)
+    width = 1 << (width - 1).bit_length()
+
+    def padw(a):
+        return np.pad(a, ((0, 0), (0, 0), (0, width - a.shape[2])))
+
+    esl = np.stack([padw(sl) for sl, _, _ in per])
+    edl = np.stack([padw(dl) for _, dl, _ in per])
+    ewl = np.stack([padw(wl) for _, _, wl in per])
+    return offsets, esl, edl, ewl
+
+
 # ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
@@ -496,7 +707,7 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
                   time_budget: float | None = None, seeds=None,
                   interpret: bool | None = None,
                   adapter: modelspec.ModelAdapter | None = None,
-                  init_params=None):
+                  init_params=None, mesh=None):
     """Drop-in fused replacement for ``engine.run_dfl``.
 
     With ``seeds=None`` runs one experiment from ``cfg.seed`` and returns
@@ -507,14 +718,23 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
     cluster and (static) plans. ``adapter``/``init_params`` mirror
     ``run_dfl`` (``init_params`` resumes a single run — incompatible with
     batched ``seeds``).
+
+    ``mesh`` (or ``cfg.sharded``) runs the scan through
+    ``_scan_segment_sharded``: the [W, P] worker matrix splits over the
+    mesh's worker axis, gossip takes the ppermute-routed edge-list form,
+    and the host control plane is byte-identical to the unsharded run.
+    Single lane only (no batched ``seeds``); PENS and per-leaf codec
+    maps are excluded (see ``engine.run_dfl``'s sharded contract).
     """
     rounds = rounds or cfg.rounds
     n = cfg.num_workers
+    sharded = mesh is not None or getattr(cfg, "sharded", False)
     if cfg.byzantine or cfg.robust != "none":
         # robust modes are reference-path only: the trimmed /
         # median aggregations are data-dependent sorts that do not yet
         # have a fused scan lowering, so the driver delegates — same
-        # History, one engine of truth
+        # History, one engine of truth (run_dfl itself rejects
+        # robust + sharded)
         if seeds is not None:
             raise ValueError(
                 "byzantine/robust runs delegate to the reference engine "
@@ -524,9 +744,19 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
                        strategy, rounds=rounds, hidden=hidden,
                        eval_subset=eval_subset, mixing=mixing,
                        time_budget=time_budget, adapter=adapter,
-                       init_params=init_params)
+                       init_params=init_params, mesh=mesh)
     adaptive = getattr(strategy, "adaptive", False)
     batched = seeds is not None
+    if sharded:
+        if batched:
+            raise ValueError(
+                "the sharded fused scan runs one lane (S=1); a batched "
+                "seeds axis would stack S copies of the sharded fleet — "
+                "run seeds sequentially or drop the mesh")
+        if strategy.name == "pens":
+            raise ValueError(
+                "pens needs the [W, W] cross-loss matrix every round; "
+                "the sharded path excludes it (engine.run_dfl contract)")
     if init_params is not None and batched:
         raise ValueError(
             "init_params resumes ONE run's stacked params; it does not "
@@ -559,11 +789,26 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
                              for sh in shards]))
         eys.append(np.stack([data.y[sh[rng.integers(0, len(sh), 256)]]
                              for sh in shards]))
-    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *stacked0)
+    plan = None
+    if sharded:
+        from repro.runtime import shardexec
+        plan = shardexec.WorkerShardPlan(
+            mesh if mesh is not None else shardexec.default_worker_mesh(),
+            n)
+        # one lane, padded to w_pad inert rows and committed to the mesh
+        # (no leading seed axis — the scan runs S=1)
+        stacked = plan.put_stacked(stacked0[0])
+    else:
+        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *stacked0)
     codec0 = compression.parse_mode(cfg.compress)
     if codec0.kind == "leafmap":
         codec0 = codec0.compile(adapter.leaf_offsets())
     leafmap = codec0.kind == "leafmap"
+    if sharded and leafmap:
+        raise ValueError(
+            "per-leaf codec maps are single-device only: their shared "
+            "payload spans leaf segments, which would need per-segment "
+            "routing tables on the sharded path")
     compress = codec0.kind != "none"
     p_model = adapter.param_count
     # rand-k mask stream: derived from cfg.seed (not the lane seeds) so
@@ -580,9 +825,16 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
             codec0, cfg.error_feedback)
     elif compress and compression.carries_state(codec0.kind,
                                                 cfg.error_feedback):
-        err = compression.state_init(
-            jnp.stack([_flatten_workers(s) for s in stacked0]),
-            codec0.kind, cfg.error_feedback)
+        # sharded: state rows follow the padded [w_pad, P] layout (the
+        # inert rows' zero params give zero residual / zero x̂)
+        err = (compression.state_init(_flatten_workers(stacked),
+                                      codec0.kind, cfg.error_feedback)
+               if plan is not None else
+               compression.state_init(
+                   jnp.stack([_flatten_workers(s) for s in stacked0]),
+                   codec0.kind, cfg.error_feedback))
+    elif plan is not None:
+        err = jnp.zeros((plan.w_pad, 1), jnp.float32)
     else:
         err = jnp.zeros((len(seed_list), n, 1), jnp.float32)
     ex = jnp.asarray(np.stack(exs))
@@ -595,7 +847,10 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
              else topo.mixing_matrix_uniform)
     needs_cross = strategy.name == "pens"
     replan = max(int(getattr(cfg, "replan_every", 1)), 1)
-    sparse = cfg.gossip == "sparse"
+    # the sharded scan always routes gossip through the edge-list form
+    # (weights bit-identical to the dense off-diagonals), so the segment
+    # precompute builds edge arrays instead of [K, W, W] mixing matrices
+    sparse = cfg.gossip == "sparse" or plan is not None
 
     hists = [History() for _ in seed_list]
     clock = 0.0
@@ -608,22 +863,56 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
             h, seg_len, cluster, strategy, cfg, rngs, data, shards, mixfn,
             clock, time_budget, adaptive, codec0, p_model, sparse=sparse,
             mixing=mixing)
-        (stacked, err), outs = _scan_segment(
-            stacked, err, jnp.asarray(seg.bx), jnp.asarray(seg.by), ex, ey,
-            px, py, jnp.asarray(seg.taus), jnp.asarray(seg.lrs),
-            jnp.asarray(seg.mixes), jnp.asarray(seg.esrc),
-            jnp.asarray(seg.edst), jnp.asarray(seg.ewt),
-            jnp.asarray(seg.comms),
-            jnp.asarray(seg.ew), jnp.asarray(seg.cw),
-            jnp.asarray(seg.keep), jnp.asarray(seg.rw),
-            jnp.asarray(seg.hs), skey, jnp.float32(cfg.sparse_gamma),
-            tx, ty, adapter=adapter, tau_cap=seg.tau_cap, measure=adaptive,
-            needs_cross=needs_cross, interpret=interp,
-            kind=seg.codec.kind,
-            k=seg.codec.resolve_k(p_model),
-            ef=cfg.error_feedback, sparse=sparse,
-            lcodec=seg.codec if leafmap else None)
-        outs = {k: np.asarray(v) for k, v in outs.items()}
+        if plan is not None:
+            offsets, esl, edl, ewl = _sharded_edge_tables(seg, plan)
+            pd = plan.pad
+            (stacked, err), outs = _scan_segment_sharded(
+                stacked, err,
+                jnp.asarray(_pad_rows(seg.bx[0], pd)),
+                jnp.asarray(_pad_rows(seg.by[0], pd)),
+                ex[0], ey[0], px[0], py[0],
+                jnp.asarray(_pad_rows(seg.taus, pd)),
+                jnp.asarray(seg.lrs),
+                jnp.asarray(esl), jnp.asarray(edl), jnp.asarray(ewl),
+                jnp.asarray(seg.comms),
+                jnp.asarray(_pad_rows(seg.ew, pd)),
+                jnp.asarray(_pad_rows(seg.cw, pd)),
+                jnp.asarray(_pad_rows(seg.keep, pd)),
+                jnp.asarray(_pad_rows(seg.rw, pd)),
+                jnp.asarray(seg.hs), skey, jnp.float32(cfg.sparse_gamma),
+                tx, ty, adapter=adapter, tau_cap=seg.tau_cap,
+                measure=adaptive, kind=seg.codec.kind,
+                k=seg.codec.resolve_k(p_model), ef=cfg.error_feedback,
+                mesh=plan.mesh, axes=plan.axes, offsets=offsets,
+                n_shards=plan.n_shards)
+            outs = {k2: np.asarray(v) for k2, v in outs.items()}
+            # slice the inert padding rows off, then re-add the S=1 seed
+            # axis the record/observe loops below index with si=0
+            for k2 in ("losses", "ls", "sigs", "upds"):
+                if k2 in outs:
+                    outs[k2] = outs[k2][:, :n]
+            if "edge" in outs:
+                outs["edge"] = outs["edge"][:, :n, :n]
+            outs = {k2: v[None] for k2, v in outs.items()}
+        else:
+            (stacked, err), outs = _scan_segment(
+                stacked, err, jnp.asarray(seg.bx), jnp.asarray(seg.by),
+                ex, ey,
+                px, py, jnp.asarray(seg.taus), jnp.asarray(seg.lrs),
+                jnp.asarray(seg.mixes), jnp.asarray(seg.esrc),
+                jnp.asarray(seg.edst), jnp.asarray(seg.ewt),
+                jnp.asarray(seg.comms),
+                jnp.asarray(seg.ew), jnp.asarray(seg.cw),
+                jnp.asarray(seg.keep), jnp.asarray(seg.rw),
+                jnp.asarray(seg.hs), skey, jnp.float32(cfg.sparse_gamma),
+                tx, ty, adapter=adapter, tau_cap=seg.tau_cap,
+                measure=adaptive,
+                needs_cross=needs_cross, interpret=interp,
+                kind=seg.codec.kind,
+                k=seg.codec.resolve_k(p_model),
+                ef=cfg.error_feedback, sparse=sparse,
+                lcodec=seg.codec if leafmap else None)
+            outs = {k: np.asarray(v) for k, v in outs.items()}
 
         for t in range(len(seg)):
             hh = h + t
@@ -650,7 +939,10 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
                     alive=a, wire_ratio=seg.wire_ratio[t])
         h += len(seg)
     for si, hist in enumerate(hists):
-        hist.final_params = jax.tree.map(lambda l, si=si: l[si], stacked)
+        # sharded: one lane, no seed axis — hand back the real W rows
+        # (still device-sharded when W divides the shard count)
+        hist.final_params = (plan.unpad(stacked) if plan is not None else
+                             jax.tree.map(lambda l, si=si: l[si], stacked))
     return hists if batched else hists[0]
 
 

@@ -5,6 +5,9 @@ touches jax device state.
 """
 from __future__ import annotations
 
+import math
+import warnings
+
 import jax
 
 
@@ -15,7 +18,58 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+def make_debug_mesh(shape=(2, 2), axes=("data", "model"), *,
+                    shrink: bool = False):
     """Small mesh for CPU tests (requires xla_force_host_platform_device_count
-    set before jax init)."""
-    return jax.make_mesh(shape, axes)
+    set before jax init).
+
+    The host must expose at least ``prod(shape)`` devices: ``jax.make_mesh``
+    would otherwise silently build a mesh over however many devices exist,
+    and every shard_map downstream would compute with the wrong worker
+    extent. With ``shrink=False`` (default) a too-small host raises
+    ``ValueError``; with ``shrink=True`` axis sizes are halved
+    deterministically (leftmost even axis first, then forced to 1) until
+    the mesh fits, with a ``UserWarning`` naming the final shape.
+    """
+    ndev = len(jax.devices())
+    need = math.prod(shape)
+    if need > ndev:
+        if not shrink:
+            raise ValueError(
+                f"make_debug_mesh{tuple(shape)} needs {need} devices but the "
+                f"host exposes {ndev}; set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+                f"before importing jax, or pass shrink=True")
+        sizes = list(shape)
+        while math.prod(sizes) > ndev:
+            for i, s in enumerate(sizes):
+                if s > 1 and s % 2 == 0:
+                    sizes[i] = s // 2
+                    break
+            else:
+                for i, s in enumerate(sizes):
+                    if s > 1:
+                        sizes[i] = 1
+                        break
+        shape = tuple(sizes)
+        warnings.warn(
+            f"make_debug_mesh: host has {ndev} devices; shrank mesh to "
+            f"{shape} over axes {tuple(axes)}", UserWarning, stacklevel=2)
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_worker_mesh(num_shards: int | None = None, axis: str = "workers"):
+    """1-D mesh over ``num_shards`` local devices (default: all of them).
+
+    This is the mesh the sharded DFL path expects: a single named axis
+    along which the flat ``[W, P]`` worker matrix is split row-wise
+    (``core/engine.run_dfl(mesh=...)`` / ``cfg.sharded``).
+    """
+    ndev = len(jax.devices())
+    if num_shards is None:
+        num_shards = ndev
+    if num_shards < 1 or num_shards > ndev:
+        raise ValueError(
+            f"make_worker_mesh: num_shards={num_shards} out of range for a "
+            f"host with {ndev} devices")
+    return jax.sharding.Mesh(jax.devices()[:num_shards], (axis,))

@@ -226,28 +226,31 @@ def gossip_compressed_fn(mesh: Mesh, worker_axes: tuple[str, ...],
                       (param_specs, param_specs))
 
 
-def gossip_edges_sharded_fn(mesh: Mesh, worker_axes: tuple[str, ...],
-                            src: np.ndarray, dst: np.ndarray,
-                            w: np.ndarray, num_workers: int):
-    """Sparse edge-list gossip over a worker-sharded [W, P] stack.
-
-    The dense path above pays one ppermute per *matching* (O(degree) of
-    them). Here the directed edge list (``topology.directed_edges``) is
-    grouped host-side by shard offset delta = shard(dst) - shard(src)
-    mod n_shards; each distinct delta costs exactly ONE ppermute of the
-    local [W/n_shards, P] block, and every edge in the group lands via a
-    per-shard segment_sum on local row indices — so wire cost scales with
-    the number of distinct shard offsets the topology touches, not E.
-    Per-shard edge tables are zero-weight padded to the group max so every
-    shard runs the same static shapes (padding rows add w*(x0-x0)=0).
-
-    Returns a jit-able f(x: [W, P]) -> mixed [W, P] with
-    y_i = x_i + sum_{e: dst_e=i} w_e (x_{src_e} - x_i); x is sharded
-    P(worker_axes, None). Requires W divisible by the worker-axes extent.
-    """
-    n_shards = 1
+def worker_shard_extent(mesh: Mesh, worker_axes: tuple[str, ...]) -> int:
+    """Number of row-shards the worker dim splits into over ``worker_axes``."""
+    n = 1
     for a in worker_axes:
-        n_shards *= mesh.shape[a]
+        n *= mesh.shape[a]
+    return n
+
+
+def edge_shard_tables(src, dst, w, num_workers: int, n_shards: int, *,
+                      offsets: tuple[int, ...] | None = None,
+                      width: int | None = None):
+    """Group a directed edge list by shard-offset delta, host-side.
+
+    Edges are grouped by ``delta = shard(dst) - shard(src) mod n_shards``
+    (contiguous row sharding, ``rows = W / n_shards`` per shard); within
+    a group they are bucketed by destination shard and zero-weight padded
+    to a common width so every shard runs the same static shapes (padding
+    rows land on local row 0 with weight 0 and add exactly nothing).
+
+    Returns ``(offsets, sl, dl, wl)``: the sorted tuple of distinct
+    deltas, and ``[D, n_shards, width]`` tables of local source rows,
+    local destination rows and edge weights. Pass ``offsets``/``width``
+    to force a shape shared across rounds (the fused scan stacks one
+    table per round); a delta outside the forced ``offsets`` raises.
+    """
     if num_workers % n_shards != 0:
         raise ValueError(f"W={num_workers} not divisible by "
                          f"worker-shard extent {n_shards}")
@@ -256,45 +259,147 @@ def gossip_edges_sharded_fn(mesh: Mesh, worker_axes: tuple[str, ...],
     dst = np.asarray(dst, np.int64)
     w = np.asarray(w, np.float32)
     deltas = (dst // rows - src // rows) % n_shards
-    groups = []
-    for delta in sorted(set(deltas.tolist())):
+    present = sorted(set(deltas.tolist()))
+    if offsets is None:
+        offsets = tuple(int(d) for d in present)
+    else:
+        extra = set(present) - set(offsets)
+        if extra:
+            raise ValueError(f"edge deltas {sorted(extra)} not in the "
+                             f"forced offsets {offsets}")
+    need = 1
+    for delta in offsets:
+        sel = deltas == delta
+        if sel.any():
+            need = max(need, int(np.bincount(dst[sel] // rows,
+                                             minlength=n_shards).max()))
+    if width is None:
+        width = need
+    elif width < need:
+        raise ValueError(f"forced width {width} < required {need}")
+    sl = np.zeros((len(offsets), n_shards, width), np.int32)
+    dl = np.zeros((len(offsets), n_shards, width), np.int32)
+    wl = np.zeros((len(offsets), n_shards, width), np.float32)
+    for gi, delta in enumerate(offsets):
         sel = deltas == delta
         es, ed, ew = src[sel], dst[sel], w[sel]
-        # bucket edges by destination shard, pad to the widest shard
         dshard = ed // rows
-        width = max(1, int(np.bincount(dshard, minlength=n_shards).max()))
-        sl = np.zeros((n_shards, width), np.int32)
-        dl = np.zeros((n_shards, width), np.int32)
-        wl = np.zeros((n_shards, width), np.float32)
         for k in range(n_shards):
             m = dshard == k
             c = int(m.sum())
-            sl[k, :c] = es[m] % rows
-            dl[k, :c] = ed[m] % rows
-            wl[k, :c] = ew[m]
-        groups.append((int(delta),
-                       jnp.asarray(sl), jnp.asarray(dl), jnp.asarray(wl)))
-    tables = tuple((g[1], g[2], g[3]) for g in groups)
-    offsets = tuple(g[0] for g in groups)
+            sl[gi, k, :c] = es[m] % rows
+            dl[gi, k, :c] = ed[m] % rows
+            wl[gi, k, :c] = ew[m]
+    return offsets, sl, dl, wl
 
-    def body(x, tabs):
+
+def routed_mix_delta(v, sl, dl, wl, offsets: tuple[int, ...],
+                     worker_axes: tuple[str, ...], n_shards: int):
+    """The per-shard slice of ``compression.edge_mix_delta``: one
+    ``lax.ppermute`` of the local ``[rows, P]`` block per distinct shard
+    offset, then a local ``segment_sum`` over the group's edge table.
+    Runs inside ``shard_map``; ``sl/dl/wl`` are the LOCAL ``[D, 1, width]``
+    slices of :func:`edge_shard_tables` output."""
+    acc = jnp.zeros(v.shape, jnp.float32)
+    rows = v.shape[0]
+    for gi, delta in enumerate(offsets):
+        if delta == 0:
+            recv = v
+        else:
+            perm = [(s, (s + delta) % n_shards) for s in range(n_shards)]
+            recv = jax.lax.ppermute(v, worker_axes, perm=perm)
+        contrib = wl[gi, 0][:, None] * (recv[sl[gi, 0]] - v[dl[gi, 0]])
+        acc = acc + jax.ops.segment_sum(contrib, dl[gi, 0],
+                                        num_segments=rows)
+    return acc
+
+
+def _edge_table_specs(worker_axes):
+    spec = P(None, worker_axes, None)           # [D, n_shards, width]
+    return (spec, spec, spec)
+
+
+def gossip_edges_sharded_fn(mesh: Mesh, worker_axes: tuple[str, ...],
+                            src: np.ndarray, dst: np.ndarray,
+                            w: np.ndarray, num_workers: int):
+    """Sparse edge-list gossip over a worker-sharded [W, P] stack.
+
+    The dense path above pays one ppermute per *matching* (O(degree) of
+    them). Here the directed edge list (``topology.directed_edges``) is
+    grouped host-side by shard offset delta = shard(dst) - shard(src)
+    mod n_shards (``edge_shard_tables``); each distinct delta costs
+    exactly ONE ppermute of the local [W/n_shards, P] block, and every
+    edge in the group lands via a per-shard segment_sum on local row
+    indices — so wire cost scales with the number of distinct shard
+    offsets the topology touches, not E.
+
+    Returns a jit-able f(x: [W, P]) -> mixed [W, P] with
+    y_i = x_i + sum_{e: dst_e=i} w_e (x_{src_e} - x_i); x is sharded
+    P(worker_axes, None). Requires W divisible by the worker-axes extent.
+    """
+    n_shards = worker_shard_extent(mesh, worker_axes)
+    offsets, sl, dl, wl = edge_shard_tables(src, dst, w, num_workers,
+                                            n_shards)
+    tables = (jnp.asarray(sl), jnp.asarray(dl), jnp.asarray(wl))
+
+    def body(x, sl, dl, wl):
         xf = x.astype(jnp.float32)
-        acc = xf
-        for delta, (sl, dl, wl) in zip(offsets, tabs):
-            if delta == 0:
-                recv = xf
-            else:
-                perm = [(k, (k + delta) % n_shards) for k in range(n_shards)]
-                recv = jax.lax.ppermute(xf, worker_axes, perm=perm)
-            contrib = wl[0][:, None] * (recv[sl[0]] - xf[dl[0]])
-            acc = acc + jax.ops.segment_sum(contrib, dl[0],
-                                            num_segments=rows)
-        return acc.astype(x.dtype)
+        delta = routed_mix_delta(xf, sl, dl, wl, offsets, worker_axes,
+                                 n_shards)
+        return (xf + delta).astype(x.dtype)
 
     spec = P(worker_axes, None)
-    tab_specs = tuple((spec, spec, spec) for _ in tables)
-    mapped = _shard_map(body, mesh, (spec, tab_specs), spec)
-    return lambda x: mapped(x, tables)
+    mapped = _shard_map(body, mesh, (spec,) + _edge_table_specs(worker_axes),
+                        spec)
+    return lambda x: mapped(x, *tables)
+
+
+def gossip_edges_compressed_sharded_fn(mesh: Mesh,
+                                       worker_axes: tuple[str, ...],
+                                       src: np.ndarray, dst: np.ndarray,
+                                       w: np.ndarray, num_workers: int, *,
+                                       kind: str = "int8", k: int = 0,
+                                       error_feedback: bool = True,
+                                       seed: int = 0, gamma: float = 1.0):
+    """Compressed edge-list gossip over a worker-sharded [W, P] stack.
+
+    Every codec payload is row-local — int8 quantizes per row on the
+    shared wire layout, top-k thresholds per row, rand-k recomputes the
+    one shared mask from ``(seed, step)`` on every shard — so each shard
+    compresses its own rows and only the mixing delta crosses shards,
+    via the same ppermute-by-offset routing as
+    :func:`gossip_edges_sharded_fn`. The payload/state/update formulas
+    are ``compression.compressed_gossip_ref`` itself with the routed
+    delta injected (``mix_delta_fn``), so the sharded trajectory matches
+    the single-device engines to summation-order tolerance.
+
+    Returns f(x [W, P], err [W, P], step) -> (mixed, new_err); ``err``
+    follows ``compression.state_init`` / ``carries_state`` semantics
+    (top-k+EF tracks x̂, int8 the residual, rand-k nothing).
+    """
+    codec = compression.parse_mode(kind) if ":" in kind else None
+    if codec is not None:
+        kind, k = codec.kind, 0     # resolved below against P
+    n_shards = worker_shard_extent(mesh, worker_axes)
+    offsets, sl, dl, wl = edge_shard_tables(src, dst, w, num_workers,
+                                            n_shards)
+    tables = (jnp.asarray(sl), jnp.asarray(dl), jnp.asarray(wl))
+    skey = compression.sparsify_base_key(seed)
+
+    def body(x, err, step, sl, dl, wl):
+        kk = codec.resolve_k(x.shape[1]) if codec is not None else k
+        route = lambda v: routed_mix_delta(v, sl, dl, wl, offsets,   # noqa: E731
+                                           worker_axes, n_shards)
+        return compression.compressed_gossip_ref(
+            x.astype(jnp.float32), err, None,
+            error_feedback=error_feedback, kind=kind, k=kk, key=skey,
+            step=step, gamma=gamma, use_kernel=False, mix_delta_fn=route)
+
+    spec = P(worker_axes, None)
+    mapped = _shard_map(
+        body, mesh,
+        (spec, spec, P()) + _edge_table_specs(worker_axes), (spec, spec))
+    return lambda x, err, step: mapped(x, err, step, *tables)
 
 
 def ring_allreduce_mean_fn(mesh: Mesh, worker_axes: tuple[str, ...],

@@ -1,0 +1,209 @@
+"""Sharded execution of the flat ``[W, P]`` worker matrix (cfg.sharded).
+
+The DFL engines keep every worker's replica as one row block of a
+worker-stacked pytree (flattened to ``[W, P]`` for gossip). Past a few
+thousand workers that matrix no longer fits one device — FedHP's actual
+regime is thousands-to-millions of edge devices. This module splits the
+worker dim over the worker axis of a mesh (``launch/mesh.make_worker_mesh``
+or any mesh whose axes the caller names):
+
+- local SGD and the join re-init blend run per-slice under ``shard_map``
+  (the blend's fleet average is a ``psum`` of per-shard partial sums);
+- gossip always takes the edge-list form, routed cross-shard by
+  ``runtime/collectives``' ppermute-by-shard-offset tables
+  (``edge_shard_tables`` / ``routed_mix_delta``);
+- compressed gossip reuses ``compression.compressed_gossip_ref``
+  verbatim with the routed delta injected (codec payloads are row-local,
+  so each shard compresses its own rows);
+- when W does not divide the shard count, the fleet is padded with inert
+  rows (zero params, tau 0, no edges, zero metric weight) that provably
+  contribute nothing, and sliced off before anything reaches the host.
+
+``WorkerShardPlan`` is the per-run handle ``core/engine.run_dfl`` (and
+``core/fused.run_dfl_fused``) build when a mesh is passed; it caches the
+jitted shard_map callables per (shape, codec, topology-table) key.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.core import compression
+from repro.runtime import sharding
+from repro.runtime.collectives import (_shard_map, edge_shard_tables,
+                                       routed_mix_delta, worker_shard_extent)
+
+
+def default_worker_mesh() -> Mesh:
+    """The mesh ``cfg.sharded=True`` uses when no mesh is passed: one
+    ``workers`` axis over every local device (a single-device host still
+    runs the full shard_map machinery with one shard)."""
+    from repro.launch.mesh import make_worker_mesh
+    return make_worker_mesh()
+
+
+class WorkerShardPlan:
+    """Per-run sharding plan: mesh + worker axes + padding + fn caches.
+
+    ``num_workers`` is the REAL fleet size W; internally every device
+    array carries ``w_pad = ceil(W / n_shards) * n_shards`` rows so each
+    shard holds the same ``rows = w_pad / n_shards`` block.
+    """
+
+    def __init__(self, mesh: Mesh, num_workers: int, axes=None):
+        self.mesh = mesh
+        self.axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+        self.n_shards = worker_shard_extent(mesh, self.axes)
+        self.num_workers = num_workers
+        self.w_pad = -(-num_workers // self.n_shards) * self.n_shards
+        self.pad = self.w_pad - num_workers
+        self.rows = self.w_pad // self.n_shards
+        self._cache: dict = {}
+
+    # -- layout helpers ----------------------------------------------------
+
+    def spec(self, ndim: int) -> P:
+        """P(worker_axes, None, ...) for one worker-stacked array."""
+        return sharding.worker_stack_spec(ndim, self.axes)
+
+    def table_spec(self) -> P:
+        """Spec for a [D, n_shards, width] edge table (middle dim over
+        the worker axes)."""
+        lead = self.axes if len(self.axes) > 1 else self.axes[0]
+        return P(None, lead, None)
+
+    def pad_host(self, a, fill=0):
+        """Pad a host array's leading (worker) dim from W to w_pad."""
+        a = np.asarray(a)
+        if self.pad == 0:
+            return a
+        widths = [(0, self.pad)] + [(0, 0)] * (a.ndim - 1)
+        return np.pad(a, widths, constant_values=fill)
+
+    def put_stacked(self, tree):
+        """Pad a [W, ...] pytree to [w_pad, ...] (zero rows) and commit it
+        to the mesh with the worker-stacked sharding."""
+        if self.pad:
+            tree = jax.tree.map(
+                lambda l: jnp.concatenate(
+                    [l, jnp.zeros((self.pad,) + l.shape[1:], l.dtype)]),
+                tree)
+        return jax.device_put(
+            tree, sharding.worker_stack_shardings(self.mesh, tree,
+                                                  self.axes))
+
+    def unpad(self, tree):
+        """Slice padded device arrays back to the real W rows (identity —
+        preserving the sharded arrays — when no padding was needed)."""
+        if self.pad == 0:
+            return tree
+        return jax.tree.map(lambda l: l[:self.num_workers], tree)
+
+    # -- sharded round ops -------------------------------------------------
+
+    def local_train(self, adapter, stacked, bx, by, taus, lr, tau_cap: int):
+        """shard_map(vmap(_sgd_worker)): each shard trains its own row
+        block. ``bx``/``by``/``taus`` must already be padded to w_pad
+        (tau 0 makes the padding rows' SGD an exact no-op)."""
+        from repro.core.engine import _sgd_worker
+        key = ("train", adapter, tau_cap, bx.shape[1:],
+               jax.tree.structure(stacked))
+        fn = self._cache.get(key)
+        if fn is None:
+            s_specs = sharding.worker_stack_pspecs(stacked, self.axes)
+
+            def body(st, bx, by, taus, lr):
+                return jax.vmap(
+                    lambda p, x, y, t: _sgd_worker(adapter, p, x, y, t, lr,
+                                                   tau_cap))(st, bx, by,
+                                                             taus)
+
+            fn = jax.jit(_shard_map(
+                body, self.mesh,
+                (s_specs, self.spec(np.ndim(bx)), self.spec(np.ndim(by)),
+                 self.spec(1), P()), s_specs))
+            self._cache[key] = fn
+        return fn(stacked, bx, by, taus, lr)
+
+    def reinit_joined(self, stacked, joined, donors):
+        """``engine._reinit_joined`` with the fleet average as a psum of
+        per-shard partial tensordots. ``joined``/``donors`` are host
+        [W] masks (padded here)."""
+        w = donors.astype(np.float32)
+        w = w / max(w.sum(), 1.0)
+        keep = jnp.asarray(self.pad_host(joined, False))
+        rw = jnp.asarray(self.pad_host(w, 0.0))
+        key = ("blend", jax.tree.structure(stacked))
+        fn = self._cache.get(key)
+        if fn is None:
+            s_specs = sharding.worker_stack_pspecs(stacked, self.axes)
+
+            def body(st, keep, rw):
+                def leaf(l):
+                    part = jnp.tensordot(rw, l.astype(jnp.float32), axes=1)
+                    mean = jax.lax.psum(part, self.axes)
+                    kk = keep.reshape((-1,) + (1,) * (l.ndim - 1))
+                    return jnp.where(kk, mean[None].astype(l.dtype), l)
+                return jax.tree.map(leaf, st)
+
+            fn = jax.jit(_shard_map(
+                body, self.mesh, (s_specs, self.spec(1), self.spec(1)),
+                s_specs))
+            self._cache[key] = fn
+        return fn(stacked, keep, rw)
+
+    def _tables(self, src, dst, w):
+        offsets, sl, dl, wl = edge_shard_tables(src, dst, w, self.w_pad,
+                                                self.n_shards)
+        return offsets, jnp.asarray(sl), jnp.asarray(dl), jnp.asarray(wl)
+
+    def gossip_edges(self, flat, src, dst, w):
+        """Sparse Eq. 5 on the sharded [w_pad, P] matrix — the per-shard
+        twin of ``kernels/ref.gossip_edges_ref`` (one ppermute per
+        distinct shard offset)."""
+        offsets, sl, dl, wl = self._tables(src, dst, w)
+        key = ("ge", offsets, sl.shape)
+        fn = self._cache.get(key)
+        if fn is None:
+            spec, tspec = self.spec(2), self.table_spec()
+
+            def body(x, sl, dl, wl):
+                xf = x.astype(jnp.float32)
+                delta = routed_mix_delta(xf, sl, dl, wl, offsets, self.axes,
+                                         self.n_shards)
+                return (xf + delta).astype(x.dtype)
+
+            fn = jax.jit(_shard_map(body, self.mesh,
+                                    (spec, tspec, tspec, tspec), spec))
+            self._cache[key] = fn
+        return fn(flat, sl, dl, wl)
+
+    def gossip_compressed_edges(self, flat, err, src, dst, w, skey, step,
+                                gamma, *, kind: str, k: int,
+                                error_feedback: bool):
+        """Compressed sparse Eq. 5: ``compression.compressed_gossip_ref``
+        per shard with the routed mixing delta injected — codec payloads
+        are row-local, so only the delta crosses shards."""
+        offsets, sl, dl, wl = self._tables(src, dst, w)
+        key = ("gce", offsets, sl.shape, kind, k, error_feedback)
+        fn = self._cache.get(key)
+        if fn is None:
+            spec, tspec = self.spec(2), self.table_spec()
+
+            def body(x, e, skey, step, gamma, sl, dl, wl):
+                route = lambda v: routed_mix_delta(   # noqa: E731
+                    v, sl, dl, wl, offsets, self.axes, self.n_shards)
+                return compression.compressed_gossip_ref(
+                    x, e, None, error_feedback=error_feedback, kind=kind,
+                    k=k, key=skey, step=step, gamma=gamma,
+                    use_kernel=False, mix_delta_fn=route)
+
+            fn = jax.jit(_shard_map(
+                body, self.mesh,
+                (spec, spec, P(None), P(), P(), tspec, tspec, tspec),
+                (spec, spec)))
+            self._cache[key] = fn
+        return fn(flat, err, skey, step, gamma, sl, dl, wl)

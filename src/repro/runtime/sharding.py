@@ -127,10 +127,12 @@ def _present(axes, mesh: Mesh):
 
 
 def worker_axes_in_mesh(cfg: ModelConfig, mesh: Mesh) -> tuple[str, ...]:
+    """The subset of cfg.worker_axes actually present in the mesh."""
     return tuple(a for a in cfg.worker_axes if a in mesh.shape)
 
 
 def num_workers(cfg: ModelConfig, mesh: Mesh) -> int:
+    """DFL worker count = product of the mesh's worker-axis sizes."""
     n = 1
     for a in worker_axes_in_mesh(cfg, mesh):
         n *= mesh.shape[a]
@@ -189,6 +191,7 @@ def train_batch_spec(cfg: ModelConfig, mesh: Mesh, name: str,
 
 
 def train_batch_shardings(cfg: ModelConfig, mesh: Mesh, batch_shapes: dict):
+    """NamedSharding per batch field, from train_batch_spec's rules."""
     out = {}
     for name, sds in batch_shapes.items():
         out[name] = NamedSharding(mesh,
@@ -269,6 +272,7 @@ def cache_spec(cfg: ModelConfig, mesh: Mesh, path, leaf_shape,
 
 
 def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_shapes, batch: int):
+    """NamedSharding tree for a serving KV cache (cache_spec per leaf)."""
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: NamedSharding(
             mesh, cache_spec(cfg, mesh, path, leaf.shape, batch)
@@ -280,3 +284,36 @@ def stack_worker_dim(shapes_tree, w: int):
     """Add a leading worker dim to every ShapeDtypeStruct leaf."""
     return jax.tree.map(
         lambda s: jax.ShapeDtypeStruct((w,) + s.shape, s.dtype), shapes_tree)
+
+
+# ---------------------------------------------------------------------------
+# Flat DFL worker sharding (core/engine + core/fused sharded path)
+# ---------------------------------------------------------------------------
+
+def worker_stack_spec(ndim: int, axes) -> P:
+    """Spec for one worker-stacked leaf: leading dim over ``axes``, rest
+    replicated. The flat DFL engines keep every within-worker dim dense
+    (the whole replica lives on its worker's shard), so this is the only
+    spec shape the sharded path needs."""
+    axes = tuple(axes)
+    lead = axes if len(axes) > 1 else axes[0]
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def worker_stack_pspecs(tree, axes):
+    """Pytree of :func:`worker_stack_spec` specs matching ``tree``."""
+    return jax.tree.map(lambda l: worker_stack_spec(l.ndim, axes), tree)
+
+
+def worker_stack_shardings(mesh: Mesh, tree, axes):
+    """Pytree of NamedSharding for worker-stacked arrays (device_put)."""
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, worker_stack_spec(l.ndim, axes)), tree)
+
+
+def worker_shard_extent(mesh: Mesh, axes) -> int:
+    """Number of row-shards the worker dim is split into over ``axes``."""
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

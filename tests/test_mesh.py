@@ -1,0 +1,65 @@
+"""Mesh construction guards (launch/mesh.py).
+
+``make_debug_mesh`` used to hand the shape straight to ``jax.make_mesh``,
+which on a too-small host silently builds a mesh over however many
+devices exist — every shard_map downstream then computes with the wrong
+worker extent. These tests pin the fixed contract: raise by default,
+shrink deterministically (with a warning) on request. They run at ANY
+device count — the oversubscribed shape is derived from the live count —
+so they belong to tier 1 directly, no subprocess needed.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import pytest
+
+from repro.launch.mesh import make_debug_mesh, make_worker_mesh
+
+NDEV = len(jax.devices())
+
+
+def test_debug_mesh_fits_host():
+    mesh = make_debug_mesh((NDEV, 1), ("data", "model"))
+    assert mesh.shape == {"data": NDEV, "model": 1}
+
+
+def test_debug_mesh_raises_when_oversubscribed():
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        make_debug_mesh((2 * NDEV, 2), ("data", "model"))
+
+
+def test_debug_mesh_shrinks_deterministically():
+    with pytest.warns(UserWarning, match="shrank mesh"):
+        mesh = make_debug_mesh((2 * NDEV, 2), ("data", "model"),
+                               shrink=True)
+    sizes = [mesh.shape[a] for a in ("data", "model")]
+    assert math.prod(sizes) <= NDEV
+    # halving the leftmost even axis first: the doubled axis comes back
+    # down before the trailing one is touched
+    assert sizes[0] <= 2 * NDEV
+    with pytest.warns(UserWarning):
+        again = make_debug_mesh((2 * NDEV, 2), ("data", "model"),
+                                shrink=True)
+    assert [again.shape[a] for a in ("data", "model")] == sizes
+
+
+def test_debug_mesh_shrink_handles_odd_axes():
+    with pytest.warns(UserWarning):
+        mesh = make_debug_mesh((3 * NDEV, 1), ("data", "model"),
+                               shrink=True)
+    assert math.prod(mesh.shape[a] for a in ("data", "model")) <= NDEV
+
+
+def test_worker_mesh_defaults_to_all_devices():
+    mesh = make_worker_mesh()
+    assert mesh.axis_names == ("workers",)
+    assert mesh.shape["workers"] == NDEV
+
+
+def test_worker_mesh_validates_range():
+    with pytest.raises(ValueError, match="out of range"):
+        make_worker_mesh(NDEV + 1)
+    with pytest.raises(ValueError, match="out of range"):
+        make_worker_mesh(0)

@@ -11,15 +11,40 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# pytest files that skip themselves below 8 devices; the launchers here
+# run them with the device count forced so they execute under tier 1.
+# The CI multi-device lane runs the same files directly (it exports
+# XLA_FLAGS itself), so keep this list in sync with .github/workflows.
+MULTI_DEVICE_TEST_FILES = ["test_collectives.py", "test_sharded_engine.py"]
+
+
+def _run_in_8dev_subprocess(cmd, timeout):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          timeout=timeout, cwd=REPO)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-2000:])
+    return proc
+
 
 @pytest.mark.slow
 def test_runtime_multi_device_checks():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    proc = subprocess.run(
+    proc = _run_in_8dev_subprocess(
         [sys.executable, os.path.join(REPO, "tests", "_runtime_checks.py")],
-        capture_output=True, text=True, env=env, timeout=1200)
-    sys.stdout.write(proc.stdout)
-    sys.stderr.write(proc.stderr[-2000:])
+        timeout=1200)
     assert proc.returncode == 0, "runtime checks failed (see output)"
     assert "FAIL" not in proc.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("fname", MULTI_DEVICE_TEST_FILES)
+def test_multi_device_pytest_files(fname):
+    """Launch the skipif-guarded multi-device pytest files on a forced
+    8-device CPU subprocess (collectives parity + the sharded-engine
+    differential matrix)."""
+    proc = _run_in_8dev_subprocess(
+        [sys.executable, "-m", "pytest", "-q",
+         os.path.join(REPO, "tests", fname)], timeout=3000)
+    assert proc.returncode == 0, f"{fname} failed under 8 devices"

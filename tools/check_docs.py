@@ -36,6 +36,10 @@ AUDITED_MODULES = [
     "src/repro/core/robust.py",
     "src/repro/data/partition.py",
     "src/repro/simulation/cluster.py",
+    "src/repro/runtime/collectives.py",
+    "src/repro/runtime/sharding.py",
+    "src/repro/runtime/shardexec.py",
+    "src/repro/launch/mesh.py",
     "src/repro/kernels/sparsify_block.py",
     "src/repro/kernels/quantize_block.py",
     "src/repro/kernels/gossip_edges.py",
