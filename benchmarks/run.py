@@ -579,10 +579,13 @@ def bench_scenarios(rows, full):
     metrics are emitted as CSV rows and the full per-round trajectories
     are persisted to ``BENCH_scenarios.json`` (the CI artifact).
 
-    In --smoke mode the Byzantine leg is gated: with 20% sign-flip
+    In --smoke mode the Byzantine legs are gated: with 20% sign-flip
     attackers, trimmed-mean gossip must reach >= 90% of the clean run's
-    final accuracy while plain uniform mixing must degrade measurably
-    below clean — both failures exit 1."""
+    final accuracy through BOTH the reference engine and the fused
+    scan's gather-sort-trim kernel, plain uniform mixing must degrade
+    measurably below clean, and AD-PSGD accept/reject screening
+    (robust="screen:<z>") must recover >= 85% of its clean run — any
+    failure exits 1."""
     import json
 
     from repro.core.experiment import run_algorithm
@@ -628,14 +631,19 @@ def bench_scenarios(rows, full):
     byz_rounds = 30 if SMOKE else rounds
     bcfg = replace(cfg, num_workers=nb, tau_init=4,
                    byzantine_attack="signflip")
-    legs = {"clean": replace(bcfg, byzantine=(), robust="none"),
-            "byz_plain": replace(bcfg, byzantine=byz, robust="none"),
-            "byz_trimmed": replace(bcfg, byzantine=byz,
-                                   robust=f"trimmed:{len(byz)}")}
+    trimmed_cfg = replace(bcfg, byzantine=byz,
+                          robust=f"trimmed:{len(byz)}")
+    legs = {"clean": (replace(bcfg, byzantine=(), robust="none"), False),
+            "byz_plain": (replace(bcfg, byzantine=byz, robust="none"),
+                          False),
+            "byz_trimmed": (trimmed_cfg, False),
+            # the LOWERED path: trimmed-mean through the fused scan's
+            # gather-sort-trim kernel, not the reference mix
+            "byz_trimmed_fused": (trimmed_cfg, True)}
     accs = {}
-    for name, c in legs.items():
+    for name, (c, fus) in legs.items():
         h = run_algorithm("dpsgd", c, non_iid_p=0.4, rounds=byz_rounds,
-                          spread=SPREAD)
+                          spread=SPREAD, fused=fus)
         accs[name] = h.final_accuracy
         emit(rows, "scenarios", f"acc_byz[{name}]",
              round(h.final_accuracy, 4))
@@ -643,6 +651,30 @@ def bench_scenarios(rows, full):
     emit(rows, "scenarios", "byz_fraction", round(len(byz) / nb, 2))
     emit(rows, "scenarios", "trimmed_recovery",
          round(accs["byz_trimmed"] / max(accs["clean"], 1e-9), 3))
+    emit(rows, "scenarios", "trimmed_fused_recovery",
+         round(accs["byz_trimmed_fused"] / max(accs["clean"], 1e-9), 3))
+
+    # ---- (2b) AD-PSGD lying wire: clean vs plain vs screened -------------
+    # same 20% sign-flip fleet through the event-driven engine; the
+    # defense is per-event accept/reject screening (robust="screen:<z>")
+    # rather than a trim window (a pairwise exchange has only 2 samples)
+    alegs = {"adpsgd_clean": replace(bcfg, byzantine=(), robust="none"),
+             "adpsgd_byz": replace(bcfg, byzantine=byz, robust="none"),
+             "adpsgd_screen": replace(bcfg, byzantine=byz,
+                                      robust="screen:8")}
+    for name, c in alegs.items():
+        h = run_algorithm("adpsgd", c, non_iid_p=0.4, rounds=byz_rounds,
+                          spread=SPREAD, fused=True)
+        accs[name] = h.final_accuracy
+        emit(rows, "scenarios", f"acc_byz[{name}]",
+             round(h.final_accuracy, 4))
+        record(f"byz[{name}]", h)
+        if h.screen_rejects is not None:
+            emit(rows, "scenarios", "screen_rejects",
+                 int(sum(h.screen_rejects)))
+    emit(rows, "scenarios", "screen_recovery",
+         round(accs["adpsgd_screen"] / max(accs["adpsgd_clean"], 1e-9),
+               3))
 
     # ---- (3) time-varying non-IID drift ----------------------------------
     for name, c in (("static", cfg),
@@ -671,6 +703,16 @@ def bench_scenarios(rows, full):
                 f"plain uniform mixing under attack should degrade "
                 f"measurably; clean {accs['clean']:.3f} vs attacked "
                 f"{accs['byz_plain']:.3f}")
+        if accs["byz_trimmed_fused"] < 0.9 * accs["clean"]:
+            FAILURES.append(
+                f"FUSED trimmed-mean gossip under 20% sign-flip "
+                f"attackers reached {accs['byz_trimmed_fused']:.3f} "
+                f"< 90% of clean ({accs['clean']:.3f})")
+        if accs["adpsgd_screen"] < 0.85 * accs["adpsgd_clean"]:
+            FAILURES.append(
+                f"AD-PSGD screening under 20% sign-flip attackers "
+                f"reached {accs['adpsgd_screen']:.3f} < 85% of clean "
+                f"({accs['adpsgd_clean']:.3f})")
 
 
 def bench_collective(rows, full):

@@ -249,13 +249,17 @@ class FedHPConfig:
     # "trimmed:<b>" drops the b largest + b smallest values per
     # coordinate before averaging the closed neighborhood (b a fraction
     # of the neighborhood when < 1, an absolute count otherwise),
-    # "median" takes the coordinate-wise median. Robust modes replace
-    # the weighted Eq. 5 mix with an unweighted robust average and are
-    # reference-engine only in this PR (the fused driver delegates);
-    # neither composes with cfg.compress.
+    # "median" takes the coordinate-wise median — both replace the
+    # weighted Eq. 5 mix with an unweighted robust average, run in the
+    # reference engine AND the fused scan (kernels/robust_gossip.py),
+    # and are synchronous-only. AD-PSGD instead takes "screen:<z>":
+    # per-event accept/reject of the incoming pairwise payload against
+    # z times the EMA of the receiver's own delta norms (reject keeps
+    # the self-model; counts land in History.screen_rejects). No robust
+    # or byzantine axis composes with cfg.compress or cfg.sharded.
     byzantine: tuple[int, ...] = ()  # worker ids that attack the wire
     byzantine_attack: str = "signflip"
-    robust: str = "none"             # "none" | "trimmed:<b>" | "median"
+    robust: str = "none"  # "none" | "trimmed:<b>" | "median" | "screen:<z>"
     # time-varying non-IID drift (data/partition.DriftingPartition):
     # every drift_every rounds the p-skew class -> worker-group pinning
     # rotates one worker over the fleet, so each worker's local label

@@ -71,10 +71,14 @@ class History:
     Fig. 7) compare across engines and algorithms. ``final_params`` is
     the last [W, ...] worker-stacked parameter pytree (set by every
     engine; feeds ``checkpoint/store.py`` save -> resume — not a
-    per-round field, so ``as_arrays`` ignores it)."""
+    per-round field, so ``as_arrays`` ignores it). ``screen_rejects``
+    is set only by screened AD-PSGD runs (``cfg.robust="screen:<z>"``):
+    per-round counts of rejected pairwise payloads (up to two per
+    event — each endpoint screens independently)."""
 
     records: list[RoundRecord] = field(default_factory=list)
     final_params: object = None
+    screen_rejects: list[int] | None = None
 
     def completion_time(self, target_acc: float) -> float | None:
         """Paper metric: total time until the average model reaches
@@ -410,6 +414,10 @@ def run_dfl(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
     byz = robust_agg.byzantine_mask(cfg.byzantine, n)
     has_byz = bool(byz.any())
     robust_mode, robust_b = robust_agg.parse_robust(cfg.robust)
+    if robust_mode == "screen":
+        raise ValueError(
+            "cfg.robust='screen:<z>' is the AD-PSGD accept/reject rule; "
+            "synchronous engines use 'trimmed:<b>' / 'median'")
     robust_active = has_byz or robust_mode != "none"
     if robust_active and compress:
         raise ValueError(
@@ -790,6 +798,15 @@ def adpsgd_schedule(cluster: SimCluster, cfg: FedHPConfig, *,
             "per-leaf codec maps (compress='leafmap:...') are "
             "synchronous-engine only; AD-PSGD's pairwise exchange has no "
             "leafmap form yet")
+    rmode, _ = robust_agg.parse_robust(cfg.robust)
+    if rmode in ("trimmed", "median"):
+        raise ValueError(
+            "trimmed/median robust gossip is synchronous-engine only "
+            "(a 2-sample pairwise exchange has no trim window); AD-PSGD "
+            "takes cfg.robust='screen:<z>'")
+    if (rmode == "screen" or cfg.byzantine) and codec.kind != "none":
+        raise ValueError(
+            "cfg.byzantine / cfg.robust do not compose with cfg.compress")
     comm_ratio = codec.wire_ratio(
         p_model if p_model is not None
         else int(cluster.model_bits // compression.FP32_BITS))
@@ -913,6 +930,55 @@ def _adpsgd_exchange_compressed(stacked, err, delta, i, j, key, step,
     return stacked, err
 
 
+@partial(jax.jit, static_argnames=("kind", "screen"))
+def _adpsgd_exchange_screened(stacked, hist_h, delta, i, j, byz, atk_scale,
+                              z, *, kind: str, screen: bool):
+    """AD-PSGD pairwise exchange under a lying wire, optionally screened.
+
+    Byzantine endpoints transmit a corrupted copy of their row
+    (``core/robust.attack_row``); with ``screen`` on, each endpoint
+    z-tests the incoming payload against its own-delta-norm EMA
+    (``core/robust.screen_accept``) and keeps its self-model on
+    rejection — otherwise the payload is absorbed unconditionally (the
+    plain-attacked baseline). Worker i folds its fresh delta norm into
+    its history BEFORE testing, so the z-test is live from the very
+    first event. Self-events (i == j, all ring neighbors churned out)
+    have no wire: no attack, no screening, plain average.
+
+    Attack-free, every accept is a half-mix ``0.5 * (x_i + x_j)`` —
+    commutative addition, so both rows and the plain
+    ``_adpsgd_average`` trajectory agree bit-for-bit. Returns
+    ``(stacked, hist_h, num_rejected)`` with num_rejected in {0, 1, 2}
+    (each endpoint screens independently)."""
+    pi = jax.tree.map(lambda l, d: l[i] + d, stacked, delta)
+    pj = jax.tree.map(lambda l: l[j], stacked)
+    xi, xj = _flatten_row(pi), _flatten_row(pj)
+    wire = i != j
+    ti = robust_agg.attack_row(xi, byz[i] & wire, atk_scale, kind=kind)
+    tj = robust_agg.attack_row(xj, byz[j] & wire, atk_scale, kind=kind)
+    if screen:
+        h_i = robust_agg.screen_fold(hist_h[i], _l2_norm(delta))
+        hist_h = hist_h.at[i].set(h_i)
+        acc_i = ~wire | robust_agg.screen_accept(xi, tj, h_i, z)
+        acc_j = ~wire | robust_agg.screen_accept(xj, ti, hist_h[j], z)
+    else:
+        acc_i = acc_j = jnp.bool_(True)
+    row_i = jnp.where(acc_i, 0.5 * (xi + tj), xi)
+    row_j = jnp.where(acc_j, 0.5 * (xj + ti), xj)
+    new_i = _unflatten_row(row_i, pi)
+    new_j = _unflatten_row(row_j, pj)
+    stacked = jax.tree.map(lambda l, a, b: l.at[i].set(a).at[j].set(b),
+                           stacked, new_i, new_j)
+    nrej = (~acc_i).astype(jnp.int32) + (~acc_j).astype(jnp.int32)
+    return stacked, hist_h, nrej
+
+
+def _l2_norm(tree):
+    """L2 norm of a pytree, taken over its f32 flattening (the norm the
+    screening history tracks)."""
+    return jnp.linalg.norm(_flatten_row(tree))
+
+
 def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
                cfg: FedHPConfig, *, rounds: int | None = None,
                hidden: int = 64, eval_subset: int = 512,
@@ -930,13 +996,25 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
     ground truth ``fused.run_adpsgd_fused`` is differentially tested
     against. ``cfg.compress`` ("int8" / "topk:<k>" / "randk:<k>")
     switches the pairwise exchange to the codec's compensated update and
-    charges Eq. 10 event comm time divided by the codec's wire ratio."""
+    charges Eq. 10 event comm time divided by the codec's wire ratio.
+    ``cfg.byzantine`` workers lie on the pairwise wire;
+    ``cfg.robust="screen:<z>"`` turns on per-event accept/reject
+    screening of incoming payloads (``core/robust.py``), with rejected
+    counts in ``History.screen_rejects`` — screening never touches the
+    schedule, so staleness/clock columns match the plain run exactly."""
     rounds = rounds or cfg.rounds
     n = cfg.num_workers
-    if cfg.byzantine or cfg.robust != "none":
+    byz = robust_agg.byzantine_mask(cfg.byzantine, n)
+    has_byz = bool(byz.any())
+    robust_mode, screen_z = robust_agg.parse_robust(cfg.robust)
+    if robust_mode in ("trimmed", "median"):
         raise ValueError(
-            "byzantine/robust gossip is synchronous-engine only; "
-            "run_adpsgd's pairwise exchange has no robust form yet")
+            "trimmed/median robust gossip is synchronous-engine only "
+            "(a 2-sample pairwise exchange has no trim window); AD-PSGD "
+            "takes cfg.robust='screen:<z>'")
+    screen = robust_mode == "screen"
+    atk_kind, atk_scale = (robust_agg.parse_attack(cfg.byzantine_attack)
+                           if has_byz else ("signflip", 1.0))
     codec = compression.parse_mode(cfg.compress)
     if codec.kind == "leafmap":
         raise ValueError(
@@ -944,6 +1022,9 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
             "synchronous-engine only; AD-PSGD's pairwise exchange has no "
             "leafmap form yet")
     compress = codec.kind != "none"
+    if (has_byz or screen) and compress:
+        raise ValueError(
+            "cfg.byzantine / cfg.robust do not compose with cfg.compress")
     if adapter is None:
         adapter = modelspec.adapter_for(cfg, data, hidden=hidden)
     if schedule is None:
@@ -972,7 +1053,12 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
     # per-worker snapshot taken when its computation started
     snapshots = [jax.tree.map(lambda l, i=i: l[i], stacked)
                  for i in range(n)]
+    byz_j = jnp.asarray(byz)
+    screened = screen or has_byz        # lying-wire exchange path
+    hist_h = jnp.zeros(n, jnp.float32)  # own-delta-norm EMA per worker
     hist = History()
+    if screen:
+        hist.screen_rejects = []
     drifting = hasattr(shards, "shards_at")
     for rnd_idx, rnd in enumerate(schedule.rounds):
         round_shards = shards.shards_at(rnd_idx) if drifting else shards
@@ -986,6 +1072,11 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
                     cfg.error_feedback)
             for w in np.nonzero(rnd.keep)[0]:
                 snapshots[w] = jax.tree.map(lambda l, w=w: l[w], stacked)
+            # re-init == fresh history: a joiner's screening EMA restarts
+            # with its first post-join delta (mirrors the schedule's
+            # staleness reset at the same boundary)
+            hist_h = jnp.where(jnp.asarray(rnd.keep), 0.0, hist_h)
+        rnd_rejects = 0
         for ev in rnd.events:
             i, j = ev.worker, ev.partner
             shard = round_shards[i]
@@ -1000,15 +1091,25 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
                     skey, jnp.int32(ev_idx),
                     jnp.float32(cfg.sparse_gamma), kind=codec.kind,
                     k=k_abs, error_feedback=cfg.error_feedback)
+            elif screened:
+                stacked, hist_h, nrej = _adpsgd_exchange_screened(
+                    stacked, hist_h, delta, jnp.int32(i), jnp.int32(j),
+                    byz_j, jnp.float32(atk_scale), jnp.float32(screen_z),
+                    kind=atk_kind, screen=screen)
+                rnd_rejects += int(nrej)
             else:
                 stacked = _adpsgd_average(stacked, delta, jnp.int32(i),
                                           jnp.int32(j))
             ev_idx += 1
             snapshots[i] = jax.tree.map(lambda l: l[i], stacked)
         alive = rnd.alive
-        mean_acc, mean_loss = _mean_accuracy(adapter, stacked, tx, ty, alive)
+        # attackers lie on the wire but train honestly; still, the paper
+        # metrics describe the HONEST fleet, so measurements mask them
+        # out exactly like the synchronous engines do
+        meas = (alive & ~byz) if has_byz and (alive & ~byz).any() else alive
+        mean_acc, mean_loss = _mean_accuracy(adapter, stacked, tx, ty, meas)
         flat = np.asarray(_flatten_workers(stacked))
-        fa = flat[alive] if alive.any() else flat
+        fa = flat[meas] if meas.any() else flat
         d_bar = float(np.linalg.norm(fa - fa.mean(0), axis=1).mean())
         hist.records.append(RoundRecord(
             round=len(hist.records), round_time=0.0,
@@ -1016,5 +1117,7 @@ def run_adpsgd(data: Dataset, test_x, test_y, shards, cluster: SimCluster,
             accuracy=mean_acc, loss=mean_loss, mean_tau=float(tau),
             num_links=schedule.num_links, consensus=d_bar,
             cumulative_time=rnd.clock, staleness=rnd.mean_staleness))
+        if screen:
+            hist.screen_rejects.append(rnd_rejects)
     hist.final_params = stacked
     return hist

@@ -65,6 +65,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import FedHPConfig
 from repro.core import compression
 from repro.core import modelspec
+from repro.core import robust as robust_agg
 from repro.core import topology as topo
 from repro.core.algorithms import Strategy
 from repro.core.engine import (AdpsgdSchedule, History, RoundRecord,
@@ -76,6 +77,7 @@ from repro.core.engine import (AdpsgdSchedule, History, RoundRecord,
 from repro.data.synthetic import Dataset
 from repro.kernels.gossip_edges import gossip_edges
 from repro.kernels.gossip_mix import gossip_mix_2d
+from repro.kernels.robust_gossip import robust_gossip
 from repro.runtime.collectives import (_shard_map, edge_shard_tables,
                                        routed_mix_delta)
 from repro.runtime.sharding import worker_stack_pspecs, worker_stack_spec
@@ -98,12 +100,15 @@ ADPSGD_FUSE_ROUNDS = 32
 
 @partial(jax.jit, static_argnames=("adapter", "tau_cap", "measure",
                                    "needs_cross", "interpret", "kind", "k",
-                                   "ef", "sparse", "lcodec"))
+                                   "ef", "sparse", "lcodec", "robust", "rb",
+                                   "attack"))
 def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
-                  esrc, edst, ewt, comms, ew, cw, keep, rw, hs, skey,
-                  gamma, tx, ty, *, adapter, tau_cap: int, measure: bool,
-                  needs_cross: bool, interpret: bool, kind: str, k: int,
-                  ef: bool, sparse: bool, lcodec=None):
+                  esrc, edst, ewt, comms, ew, cw, keep, rw, hs, nbrs, degs,
+                  byz, atk_scale, skey, gamma, tx, ty, *, adapter,
+                  tau_cap: int, measure: bool, needs_cross: bool,
+                  interpret: bool, kind: str, k: int, ef: bool, sparse: bool,
+                  lcodec=None, robust: str = "none", rb: float = 0.0,
+                  attack: str = ""):
     """Run K rounds on device. Batched over a leading seed axis S on
     (stacked, err, bx, by, ex, ey, px, py); control inputs (taus .. rw
     plus the round indices ``hs``, all [K]-leading), the rand-k mask key
@@ -127,6 +132,18 @@ def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
     [W, W] matrix is ever staged). Dense mode carries [K, 8] edge
     dummies instead.
 
+    The Byzantine scenario axis rides the scan too: ``attack`` (the
+    attack kind, "" for an honest fleet) makes byzantine rows (``byz``,
+    [W] bool shared across seeds) transmit a corrupted wire copy
+    (``core/robust.apply_attack`` scaled by ``atk_scale``), and
+    ``robust`` ("trimmed"/"median" with trim knob ``rb``) replaces the
+    weighted mix with the coordinate-wise robust aggregation over the
+    per-round padded neighbor tables (``nbrs``/``degs``, [K, W, Dp] /
+    [K, W]) through the Pallas ``kernels/robust_gossip.py``
+    gather-sort-trim kernel — robust rounds gather their own dense
+    window, so dense and sparse gossip share one lowering. Honest
+    uncompressed rounds never touch any of this (dead static branches).
+
     Returns ((stacked', err'), outs) where outs is a dict of [S, K, ...]
     metric trajectories.
     """
@@ -145,7 +162,7 @@ def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
         def body(carry, xs):
             carry, err_c = carry
             (bxh, byh, tau_h, lr_h, mix_h, src_h, dst_h, wgt_h, comm_h,
-             ew_h, cw_h, keep_h, rw_h, h_h) = xs
+             ew_h, cw_h, keep_h, rw_h, h_h, nbr_h, deg_h) = xs
 
             def mix_delta(v):
                 # (W @ v - v): through the edge kernel when sparse (zero-
@@ -181,7 +198,34 @@ def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
                 carry, bxh, byh, tau_h)
 
             flat = _flatten_workers(carry)
-            if leafmap:
+            if robust != "none":
+                # --- robust aggregation (core/robust.py lowered): the
+                # wire carries the (possibly corrupted) transmitted copy;
+                # each worker sort-trims its gathered closed neighborhood
+                # through the Pallas gather-sort-trim kernel. No-comm
+                # rounds carry all-zero degrees (keep-own-row) and are
+                # additionally comm_h-gated to the reference's skipped
+                # gossip — an exact no-op either way ---
+                transmitted = (robust_agg.apply_attack(
+                    flat, byz, atk_scale, kind=attack) if attack else flat)
+                mixed = robust_gossip(flat, transmitted, nbr_h, deg_h,
+                                      b=rb, mode=robust,
+                                      interpret=interpret)
+                y_flat = jnp.where(comm_h > 0, mixed, flat)
+            elif attack:
+                # --- plain (non-robust) mixing of a lying wire — the
+                # attacked baseline the robust modes are measured
+                # against: Eq. 5 consumes the transmitted copies ---
+                transmitted = robust_agg.apply_attack(flat, byz, atk_scale,
+                                                      kind=attack)
+                if sparse:
+                    mixed = robust_agg.gossip_byz_edges(
+                        flat, transmitted, src_h, dst_h, wgt_h)
+                else:
+                    mixed = robust_agg.gossip_byz_dense(flat, transmitted,
+                                                        mix_h)
+                y_flat = jnp.where(comm_h > 0, mixed, flat)
+            elif leafmap:
                 # --- per-leaf codec map: the SAME shared payload round
                 # trip as the reference (compression.leafmap_payload),
                 # one mixing delta on the combined payload, per-segment
@@ -282,7 +326,7 @@ def _scan_segment(stacked, err, bx, by, ex, ey, px, py, taus, lrs, mixes,
 
         return jax.lax.scan(body, (stacked, err),
                             (bx, by, taus, lrs, mixes, esrc, edst, ewt,
-                             comms, ew, cw, keep, rw, hs))
+                             comms, ew, cw, keep, rw, hs, nbrs, degs))
 
     return jax.vmap(one_seed,
                     in_axes=(0, 0, 0, 0, 0, 0, 0, 0))(stacked, err, bx, by,
@@ -476,9 +520,12 @@ class _Segment:
     keep: np.ndarray          # [K, W] bool join re-init mask
     rw: np.ndarray            # [K, W] f32  donor weights
     hs: np.ndarray            # [K] i32 absolute round indices (rand-k step)
+    nbrs: np.ndarray          # [K, W, Dp] i32 padded neighbor tables
+    degs: np.ndarray          # [K, W] i32 neighbor counts (robust rounds)
     tau_cap: int
     codec: object             # the segment's wire codec (compression.Codec)
     wire_ratio: list[float]   # per-round Eq. 10 comm divisor (observe fb)
+    meas: list[np.ndarray]    # honest-alive measurement masks
     alive: list[np.ndarray]
     adjs: list[np.ndarray]
     mus: list[np.ndarray]
@@ -498,7 +545,8 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
                         shards, mixfn, clock: float,
                         time_budget: float | None, adaptive: bool,
                         codec0, p_model: int, sparse: bool = False,
-                        mixing: str = "uniform"):
+                        mixing: str = "uniform", byz: np.ndarray | None = None,
+                        robust: bool = False):
     """Advance cluster/strategy/batch RNG streams for rounds h0..h0+K-1 in
     the exact order ``run_dfl`` would, and pack the device inputs.
 
@@ -511,6 +559,13 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
     ``wire_ratio(p_model)`` — the adapter's true parameter count —
     divides the Eq. 10 comm term exactly like the reference engine's
     clock.
+
+    ``byz`` (a [W] bool mask, None when the fleet is honest) shifts the
+    measurement weights onto the honest alive workers (``meas``) exactly
+    like the reference engine; ``robust`` additionally packs per-round
+    padded neighbor tables (``core/robust.neighbor_table`` of the
+    repaired adjacency, segment max degree bucketed to the next power of
+    two) for the fused trimmed/median sort window.
     """
     n = cfg.num_workers
     compress = codec0.kind != "none"
@@ -580,15 +635,30 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
         do_reinit = joined.any() and donors.any()
         keep = joined if do_reinit else np.zeros(n, bool)
         rw = donors / max(donors.sum(), 1.0) if do_reinit else np.zeros(n)
-        if alive.any() and not alive.all():
-            ew = alive / alive.sum()
+        # fleet metrics cover the honest alive workers only (identical to
+        # the reference engine's meas mask — equal to alive when the
+        # fleet is honest, so honest runs are untouched bit for bit)
+        meas = alive
+        if byz is not None and byz.any() and (alive & ~byz).any():
+            meas = alive & ~byz
+        if meas.any() and not meas.all():
+            ew = meas / meas.sum()
         else:
             ew = np.full(n, 1.0 / n)
-        cw = alive / alive.sum() if alive.any() else np.full(n, 1.0 / n)
+        cw = meas / meas.sum() if meas.any() else np.full(n, 1.0 / n)
+        # padded closed-neighborhood index table of the repaired round
+        # topology — the fused trimmed/median sort window (dummy [W, 1]
+        # zeros otherwise; deg 0 == keep-own-row, an exact no-op)
+        if robust:
+            nbr_t, deg_t = robust_agg.neighbor_table(adj)
+        else:
+            nbr_t = np.zeros((n, 1), np.int32)
+            deg_t = np.zeros(n, np.int32)
 
         per.append(dict(alive=alive, adj=adj, mu=mu, beta=beta, taus=taus,
                         tau_cap=tau_cap, batches=batches, mix=mix,
-                        src=src, dst=dst, wts=wts,
+                        src=src, dst=dst, wts=wts, meas=meas,
+                        nbr=nbr_t, deg=deg_t,
                         comm=1.0 if adj.sum() > 0 else 0.0,
                         keep=keep, rw=rw, ew=ew, cw=cw, h=h,
                         codec=rcodec, wire_ratio=comm_ratio,
@@ -630,6 +700,17 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
         esrc[t, :ne] = p["src"]
         edst[t, :ne] = p["dst"]
         ewt_a[t, :ne] = p["wts"]
+    # pad per-round neighbor tables to one segment-wide D, bucketed to the
+    # next power of two like tau_cap/e_max so adaptive topologies trigger
+    # ~log2(W) sort-window jit specializations (padding slots sit above
+    # deg and are masked to +inf on device — exact no-ops)
+    d_max = max(p["nbr"].shape[1] for p in per)
+    d_max = 1 << (d_max - 1).bit_length() if d_max > 1 else 1
+    nbrs = np.zeros((len(per), n, d_max), np.int32)
+    degs = np.zeros((len(per), n), np.int32)
+    for t, p in enumerate(per):
+        nbrs[t, :, :p["nbr"].shape[1]] = p["nbr"]
+        degs[t] = p["deg"]
     seg = _Segment(
         bx=bx, by=by.astype(np.int32),
         taus=np.stack([p["taus"] for p in per]).astype(np.int32),
@@ -642,9 +723,11 @@ def _precompute_segment(h0: int, seg_len: int, cluster: SimCluster,
         keep=np.stack([p["keep"] for p in per]),
         rw=np.stack([p["rw"] for p in per]).astype(np.float32),
         hs=np.array([p["h"] for p in per], np.int32),
+        nbrs=nbrs, degs=degs,
         tau_cap=cap,
         codec=per[0]["codec"],
         wire_ratio=[p["wire_ratio"] for p in per],
+        meas=[p["meas"] for p in per],
         alive=[p["alive"] for p in per], adjs=[p["adj"] for p in per],
         mus=[p["mu"] for p in per], betas=[p["beta"] for p in per],
         round_time=[p["t_round"] for p in per],
@@ -729,22 +812,24 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
     rounds = rounds or cfg.rounds
     n = cfg.num_workers
     sharded = mesh is not None or getattr(cfg, "sharded", False)
-    if cfg.byzantine or cfg.robust != "none":
-        # robust modes are reference-path only: the trimmed /
-        # median aggregations are data-dependent sorts that do not yet
-        # have a fused scan lowering, so the driver delegates — same
-        # History, one engine of truth (run_dfl itself rejects
-        # robust + sharded)
-        if seeds is not None:
-            raise ValueError(
-                "byzantine/robust runs delegate to the reference engine "
-                "and do not support batched seeds")
-        from repro.core.engine import run_dfl
-        return run_dfl(data, test_x, test_y, shards, cluster, cfg,
-                       strategy, rounds=rounds, hidden=hidden,
-                       eval_subset=eval_subset, mixing=mixing,
-                       time_budget=time_budget, adapter=adapter,
-                       init_params=init_params, mesh=mesh)
+    # Byzantine scenario axis (core/robust.py): attackers corrupt the
+    # wire copy inside the scan, trimmed/median rounds sort-trim the
+    # gathered closed neighborhood through the Pallas robust kernel —
+    # no delegation to the reference engine
+    byz = robust_agg.byzantine_mask(cfg.byzantine, n)
+    has_byz = bool(byz.any())
+    robust_mode, robust_b = robust_agg.parse_robust(cfg.robust)
+    if robust_mode == "screen":
+        raise ValueError(
+            "cfg.robust='screen:<z>' is the AD-PSGD accept/reject rule; "
+            "synchronous engines use 'trimmed:<b>' / 'median'")
+    robust_active = has_byz or robust_mode != "none"
+    if robust_active and sharded:
+        raise ValueError(
+            "the sharded path does not compose with cfg.byzantine / "
+            "cfg.robust (data-dependent sorts are single-device-only)")
+    atk_kind, atk_scale = (robust_agg.parse_attack(cfg.byzantine_attack)
+                           if has_byz else ("signflip", 1.0))
     adaptive = getattr(strategy, "adaptive", False)
     batched = seeds is not None
     if sharded:
@@ -810,6 +895,9 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
             "payload spans leaf segments, which would need per-segment "
             "routing tables on the sharded path")
     compress = codec0.kind != "none"
+    if robust_active and compress:
+        raise ValueError(
+            "cfg.byzantine / cfg.robust do not compose with cfg.compress")
     p_model = adapter.param_count
     # rand-k mask stream: derived from cfg.seed (not the lane seeds) so
     # vmapped lanes share the masks like they share the rest of the
@@ -862,7 +950,8 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
         seg, clock, stop = _precompute_segment(
             h, seg_len, cluster, strategy, cfg, rngs, data, shards, mixfn,
             clock, time_budget, adaptive, codec0, p_model, sparse=sparse,
-            mixing=mixing)
+            mixing=mixing, byz=byz if has_byz else None,
+            robust=robust_mode in ("trimmed", "median"))
         if plan is not None:
             offsets, esl, edl, ewl = _sharded_edge_tables(seg, plan)
             pd = plan.pad
@@ -904,14 +993,19 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
                 jnp.asarray(seg.comms),
                 jnp.asarray(seg.ew), jnp.asarray(seg.cw),
                 jnp.asarray(seg.keep), jnp.asarray(seg.rw),
-                jnp.asarray(seg.hs), skey, jnp.float32(cfg.sparse_gamma),
+                jnp.asarray(seg.hs), jnp.asarray(seg.nbrs),
+                jnp.asarray(seg.degs), jnp.asarray(byz),
+                jnp.float32(atk_scale), skey,
+                jnp.float32(cfg.sparse_gamma),
                 tx, ty, adapter=adapter, tau_cap=seg.tau_cap,
                 measure=adaptive,
                 needs_cross=needs_cross, interpret=interp,
                 kind=seg.codec.kind,
                 k=seg.codec.resolve_k(p_model),
                 ef=cfg.error_feedback, sparse=sparse,
-                lcodec=seg.codec if leafmap else None)
+                lcodec=seg.codec if leafmap else None,
+                robust=robust_mode, rb=robust_b,
+                attack=atk_kind if has_byz else "")
             outs = {k: np.asarray(v) for k, v in outs.items()}
 
         for t in range(len(seg)):
@@ -927,13 +1021,14 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
                     cumulative_time=seg.cum_time[t]))
             if adaptive:
                 a = seg.alive[t]
+                m = seg.meas[t]     # honest alive workers (== a sans byz)
                 strategy.observe(
                     hh, adj=seg.adjs[t], mu=seg.mus[t], beta=seg.betas[t],
                     edge_dist=np.asarray(outs["edge"][0, t], np.float64),
-                    update_norms=outs["upds"][0, t][a] if a.any() else [0.0],
-                    smooth_l=float(np.median(outs["ls"][0, t][a])),
-                    sigma=float(np.median(outs["sigs"][0, t][a])),
-                    loss=float(np.mean(outs["losses"][0, t][a])),
+                    update_norms=outs["upds"][0, t][m] if m.any() else [0.0],
+                    smooth_l=float(np.median(outs["ls"][0, t][m])),
+                    sigma=float(np.median(outs["sigs"][0, t][m])),
+                    loss=float(np.mean(outs["losses"][0, t][m])),
                     cross_loss=np.asarray(outs["cross"][0, t], np.float64)
                     if needs_cross else None,
                     alive=a, wire_ratio=seg.wire_ratio[t])
@@ -951,10 +1046,12 @@ def run_dfl_fused(data: Dataset, test_x, test_y, shards,
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("adapter", "tau", "interpret", "kind",
-                                   "k", "ef"))
-def _adpsgd_scan(stacked, snap, err, stale, bx, by, iidx, jidx, eidx, lrs,
-                 keep, rw, ew, cw, skey, gamma, tx, ty, *, adapter,
-                 tau: int, interpret: bool, kind: str, k: int, ef: bool):
+                                   "k", "ef", "screen", "attack"))
+def _adpsgd_scan(stacked, snap, err, stale, histn, bx, by, iidx, jidx,
+                 eidx, lrs, keep, rw, ew, cw, byz, atk_scale, z, skey,
+                 gamma, tx, ty, *, adapter, tau: int, interpret: bool,
+                 kind: str, k: int, ef: bool, screen: bool = False,
+                 attack: str = ""):
     """Run K AD-PSGD rounds (K*N events) on device in one nested scan.
 
     The outer scan walks rounds, the inner scan the round's N events;
@@ -975,15 +1072,30 @@ def _adpsgd_scan(stacked, snap, err, stale, bx, by, iidx, jidx, eidx, lrs,
     the sparsify mask-and-pack, per the static ``kind``/``k``) and apply
     the compensated half-mix (``compression.compressed_pair_ref``).
 
-    Returns ((stacked', snap', err', stale'), outs) where outs carries
-    [S, K] metric trajectories plus the [S, K, N] per-event staleness
-    actually observed by the scan (host schedule replay must agree)."""
+    The lie-on-wire scenario axis rides the event scan when ``attack``
+    names an attack kind: byzantine endpoints (``byz``, [W] bool shared
+    across seeds) transmit a corrupted copy of their row
+    (``core/robust.attack_row`` scaled by ``atk_scale``), and with
+    ``screen`` on each endpoint z-tests the incoming payload against its
+    own-delta-norm EMA (``histn``, [S, W] carried in the scan state,
+    threshold ``z``) and keeps its self-model on rejection — the same
+    accept/reject primitives the reference loop calls, so decisions
+    match. Screening is data-plane only: event order, staleness and the
+    clock are untouched. Self-events (i == j) have no wire. Attack-free
+    screened exchanges reduce to the plain kernel average bit for bit
+    (the payload-as-base half-mix below).
+
+    Returns ((stacked', snap', err', stale', histn'), outs) where outs
+    carries [S, K] metric trajectories (plus per-round screen-reject
+    counts) and the [S, K, N] per-event staleness actually observed by
+    the scan (host schedule replay must agree)."""
     compress = kind != "none"
+    lying = screen or bool(attack)
     leaves = jax.tree.leaves(stacked)
     p_total = sum(int(np.prod(l.shape[2:])) for l in leaves)
     rows, cols = compression.flat_tile_shape(p_total)
 
-    def one_seed(stacked, snap, err, stale, bx, by):
+    def one_seed(stacked, snap, err, stale, histn, bx, by):
         # the scan carries FLAT [W, P] matrices (params + snapshots): one
         # row scatter per event instead of one per pytree leaf; the
         # single-worker ``template`` pytree only supplies shapes for the
@@ -992,13 +1104,26 @@ def _adpsgd_scan(stacked, snap, err, stale, bx, by, iidx, jidx, eidx, lrs,
         flat0 = _flatten_workers(stacked)
         snap0 = _flatten_workers(snap)
 
+        def half_mix(base, other):
+            # 2-row slice through the gossip kernel: one neighbor
+            # buffer, weight 1/2, so y = base + ½ (other - base) —
+            # the atomic pairwise average
+            pad = rows * cols - p_total
+            b2d = jnp.pad(base, (0, pad)).reshape(rows, cols)
+            u = jnp.pad(other, (0, pad)).reshape(1, rows, cols)
+            y2d = gossip_mix_2d(b2d, u, jnp.full((1,), 0.5, jnp.float32),
+                                interpret=interpret)
+            return y2d.reshape(-1)[:p_total]
+
         def event_body(carry, xs):
-            flat, snapf, err, stale = carry
+            flat, snapf, err, stale, histn = carry
             i, j, bxe, bye, e_h, lr_h = xs
             p_snap = _unflatten_row(snapf[i], template)
             delta = _adpsgd_delta(adapter, p_snap, bxe, bye, lr_h, tau)
-            xi = flat[i] + _flatten_row(delta)
+            dflat = _flatten_row(delta)
+            xi = flat[i] + dflat
             xj = flat[j]
+            nrej = jnp.int32(0)
             if compress:
                 xi2, xj2, ei2, ej2 = compression.compressed_pair_ref(
                     xi, xj, err[i], err[j], error_feedback=ef,
@@ -1006,31 +1131,48 @@ def _adpsgd_scan(stacked, snap, err, stale, bx, by, iidx, jidx, eidx, lrs,
                     use_kernel=True, interpret=interpret)
                 err = err.at[i].set(ei2).at[j].set(ej2)
                 flat = flat.at[i].set(xi2).at[j].set(xj2)
+            elif lying:
+                # lying wire: each endpoint receives the partner's
+                # TRANSMITTED copy; screening keeps the self-model on
+                # rejection. Both accepted rows are half-mixes with the
+                # incoming payload as one operand — attack-free this is
+                # literally the plain kernel average on both sides
+                wire = i != j
+                ti = robust_agg.attack_row(xi, byz[i] & wire, atk_scale,
+                                           kind=attack or "signflip")
+                tj = robust_agg.attack_row(xj, byz[j] & wire, atk_scale,
+                                           kind=attack or "signflip")
+                if screen:
+                    h_i = robust_agg.screen_fold(histn[i],
+                                                 jnp.linalg.norm(dflat))
+                    histn = histn.at[i].set(h_i)
+                    acc_i = ~wire | robust_agg.screen_accept(xi, tj, h_i, z)
+                    acc_j = ~wire | robust_agg.screen_accept(xj, ti,
+                                                             histn[j], z)
+                    nrej = ((~acc_i).astype(jnp.int32)
+                            + (~acc_j).astype(jnp.int32))
+                else:
+                    acc_i = acc_j = jnp.bool_(True)
+                row_i = jnp.where(acc_i, half_mix(xi, tj), xi)
+                row_j = jnp.where(acc_j, half_mix(ti, xj), xj)
+                flat = flat.at[i].set(row_i).at[j].set(row_j)
             else:
-                # 2-row slice through the gossip kernel: the partner row
-                # is the single neighbor buffer, weight 1/2, so
-                # y = x_i + ½ (x_j - x_i) — the atomic pairwise average
-                pad = rows * cols - p_total
-                xi2d = jnp.pad(xi, (0, pad)).reshape(rows, cols)
-                u = jnp.pad(xj, (0, pad)).reshape(1, rows, cols)
-                avg2d = gossip_mix_2d(xi2d, u, jnp.full((1,), 0.5,
-                                                        jnp.float32),
-                                      interpret=interpret)
-                avg = avg2d.reshape(-1)[:p_total]
+                avg = half_mix(xi, xj)
                 flat = flat.at[i].set(avg).at[j].set(avg)
             # fresh snapshot for i = its live row after the exchange
             snapf = snapf.at[i].set(flat[i])
             st_i = stale[i]
             stale = stale.at[i].set(0)
             stale = stale.at[j].add(jnp.where(j != i, 1, 0))
-            return (flat, snapf, err, stale), st_i
+            return (flat, snapf, err, stale, histn), (st_i, nrej)
 
         def round_body(carry, xs):
-            flat, snapf, err, stale = carry
+            flat, snapf, err, stale, histn = carry
             bxh, byh, i_h, j_h, e_h, lr_h, keep_h, rw_h, ew_h, cw_h = xs
             # --- join re-init before the round's events: joined rows
             # adopt the donor average, get a fresh snapshot, and drop
-            # residual + staleness (exact no-op when keep_h is all-False)
+            # residual + staleness + screening history (exact no-op when
+            # keep_h is all-False)
             mean = jnp.tensordot(rw_h, flat, axes=1)
             flat = jnp.where(keep_h[:, None], mean[None], flat)
             snapf = jnp.where(keep_h[:, None], flat, snapf)
@@ -1040,10 +1182,11 @@ def _adpsgd_scan(stacked, snap, err, stale, bx, by, iidx, jidx, eidx, lrs,
                 err = compression.state_after_join(err, keep_h[:, None],
                                                    flat, kind, ef)
             stale = jnp.where(keep_h, 0, stale)
+            histn = jnp.where(keep_h, 0.0, histn)
 
             lrs_ev = jnp.broadcast_to(lr_h, i_h.shape)
-            (flat, snapf, err, stale), st = jax.lax.scan(
-                event_body, (flat, snapf, err, stale),
+            (flat, snapf, err, stale, histn), (st, rej) = jax.lax.scan(
+                event_body, (flat, snapf, err, stale, histn),
                 (i_h, j_h, bxh, byh, e_h, lrs_ev))
 
             carry_tree = _unflatten(flat, stacked)
@@ -1056,17 +1199,18 @@ def _adpsgd_scan(stacked, snap, err, stale, bx, by, iidx, jidx, eidx, lrs,
             outs = {"acc": jnp.dot(ew_h, accs),
                     "loss": jnp.dot(ew_h, tloss),
                     "consensus": jnp.dot(cw_h, dists),
-                    "event_staleness": st}
-            return (flat, snapf, err, stale), outs
+                    "event_staleness": st,
+                    "rejects": rej.sum()}
+            return (flat, snapf, err, stale, histn), outs
 
-        (flat, snapf, err, stale), outs = jax.lax.scan(
-            round_body, (flat0, snap0, err, stale),
+        (flat, snapf, err, stale, histn), outs = jax.lax.scan(
+            round_body, (flat0, snap0, err, stale, histn),
             (bx, by, iidx, jidx, eidx, lrs, keep, rw, ew, cw))
         return (_unflatten(flat, stacked), _unflatten(snapf, snap),
-                err, stale), outs
+                err, stale, histn), outs
 
-    return jax.vmap(one_seed, in_axes=(0, 0, 0, 0, 0, 0))(
-        stacked, snap, err, stale, bx, by)
+    return jax.vmap(one_seed, in_axes=(0, 0, 0, 0, 0, 0, 0))(
+        stacked, snap, err, stale, histn, bx, by)
 
 
 def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
@@ -1098,13 +1242,26 @@ def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
     model init / batch streams come from each lane's seed (the lane whose
     seed equals ``cfg.seed`` reproduces the unbatched run exactly). Pass
     an explicit ``schedule`` to replay a custom event sequence verbatim
-    (``rounds``/``time_budget`` are generation-time knobs)."""
+    (``rounds``/``time_budget`` are generation-time knobs).
+
+    ``cfg.byzantine`` / ``cfg.robust="screen:<z>"`` replay the reference
+    lying-wire exchange inside the event scan (same accept/reject
+    primitives, ``core/robust.py``), with per-round reject counts in
+    ``History.screen_rejects``; measurements mask attackers out exactly
+    like ``run_adpsgd`` does."""
     rounds = rounds or cfg.rounds
     n = cfg.num_workers
-    if cfg.byzantine or cfg.robust != "none":
+    byz = robust_agg.byzantine_mask(cfg.byzantine, n)
+    has_byz = bool(byz.any())
+    robust_mode, screen_z = robust_agg.parse_robust(cfg.robust)
+    if robust_mode in ("trimmed", "median"):
         raise ValueError(
-            "byzantine/robust gossip is synchronous-engine only in this "
-            "PR; the AD-PSGD pairwise exchange has no robust form yet")
+            "trimmed/median robust gossip is synchronous-engine only "
+            "(a 2-sample pairwise exchange has no trim window); AD-PSGD "
+            "takes cfg.robust='screen:<z>'")
+    screen = robust_mode == "screen"
+    atk_kind, atk_scale = (robust_agg.parse_attack(cfg.byzantine_attack)
+                           if has_byz else ("signflip", 1.0))
     batched = seeds is not None
     seed_list = ([int(s) for s in np.asarray(seeds).reshape(-1)]
                  if batched else [int(cfg.seed)])
@@ -1117,6 +1274,9 @@ def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
             "synchronous-engine only; AD-PSGD's pairwise exchange has no "
             "leafmap form yet")
     compress = codec.kind != "none"
+    if (has_byz or screen) and compress:
+        raise ValueError(
+            "cfg.byzantine / cfg.robust do not compose with cfg.compress")
     if adapter is None:
         adapter = modelspec.adapter_for(cfg, data, hidden=hidden)
     skey = compression.sparsify_base_key(cfg.seed)  # rand-k mask stream
@@ -1151,6 +1311,7 @@ def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
                                                   cfg.error_feedback)
         else jnp.zeros((len(seed_list), n, 1), jnp.float32))
     stale = jnp.zeros((len(seed_list), n), jnp.int32)
+    histn = jnp.zeros((len(seed_list), n), jnp.float32)  # screening EMA
     tx = jnp.asarray(test_x[:eval_subset])
     ty = jnp.asarray(test_y[:eval_subset])
 
@@ -1163,6 +1324,9 @@ def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
     n_ev = counts.pop() if counts else 0
 
     hists = [History() for _ in seed_list]
+    if screen:
+        for hist in hists:
+            hist.screen_rejects = []
     done = 0
     while done < len(schedule.rounds):
         seg = schedule.rounds[done:done + ADPSGD_FUSE_ROUNDS]
@@ -1180,9 +1344,11 @@ def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
         ew, cw = [], []
         for r in seg:
             a = r.alive
-            ew.append(a / a.sum() if a.any() and not a.all()
+            # metrics describe the HONEST fleet (same mask as run_adpsgd)
+            m = (a & ~byz) if has_byz and (a & ~byz).any() else a
+            ew.append(m / m.sum() if m.any() and not m.all()
                       else np.full(n, 1.0 / n))
-            cw.append(a / a.sum() if a.any() else np.full(n, 1.0 / n))
+            cw.append(m / m.sum() if m.any() else np.full(n, 1.0 / n))
         # per-seed batch tensors in event order, replaying the reference
         # loop's batch-stream consumption draw for draw
         bx = np.zeros((len(seed_list), len(seg), n_ev, tau,
@@ -1199,15 +1365,18 @@ def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
                     bx[si, t, k] = data.x[shard[ix]]
                     by[si, t, k] = data.y[shard[ix]]
 
-        (stacked, snap, err, stale), outs = _adpsgd_scan(
-            stacked, snap, err, stale, jnp.asarray(bx), jnp.asarray(by),
+        (stacked, snap, err, stale, histn), outs = _adpsgd_scan(
+            stacked, snap, err, stale, histn,
+            jnp.asarray(bx), jnp.asarray(by),
             jnp.asarray(iidx), jnp.asarray(jidx), jnp.asarray(eidx),
             jnp.asarray(lrs), jnp.asarray(keep), jnp.asarray(rw),
             jnp.asarray(np.stack(ew), dtype=jnp.float32),
             jnp.asarray(np.stack(cw), dtype=jnp.float32),
-            skey, jnp.float32(cfg.sparse_gamma), tx, ty, adapter=adapter,
-            tau=tau, interpret=interp, kind=codec.kind, k=k_abs,
-            ef=cfg.error_feedback)
+            jnp.asarray(byz), jnp.float32(atk_scale),
+            jnp.float32(screen_z), skey, jnp.float32(cfg.sparse_gamma),
+            tx, ty, adapter=adapter, tau=tau, interpret=interp,
+            kind=codec.kind, k=k_abs, ef=cfg.error_feedback,
+            screen=screen, attack=atk_kind if has_byz else "")
         outs = {k: np.asarray(v) for k, v in outs.items()}
         # the scan carries its own staleness counters; they must agree
         # with the host schedule replay event for event (the documented
@@ -1229,6 +1398,8 @@ def run_adpsgd_fused(data: Dataset, test_x, test_y, shards,
                     consensus=float(outs["consensus"][si, t]),
                     cumulative_time=r.clock,
                     staleness=r.mean_staleness))
+                if screen:
+                    hist.screen_rejects.append(int(outs["rejects"][si, t]))
         done += len(seg)
     for si, hist in enumerate(hists):
         hist.final_params = jax.tree.map(lambda l, si=si: l[si], stacked)

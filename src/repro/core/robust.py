@@ -36,7 +36,24 @@ Both forms compute the same real-valued statistic; float summation
 order differs, so cross-form trajectories agree to ~1e-5 like the
 dense-vs-sparse plain gossip pair. Robust modes ignore mixing weights
 (a weighted trimmed mean would let one high-degree attacker outvote the
-window) and do not compose with compressed gossip.
+window) and do not compose with compressed gossip — every engine
+rejects ``robust != "none"`` + ``cfg.compress != "none"`` loudly,
+because Eq. 10 would charge the compressed wire while robust
+aggregation ships raw rows.
+
+AD-PSGD's pairwise exchange has no neighborhood to trim over (a
+2-sample window has no interior), so the async engines get
+``"screen:<z>"`` instead: per-event accept/reject screening of the
+incoming peer payload against the receiving worker's own recent update
+history (DySTop-style). Each worker keeps an EMA of the norms of its
+OWN local-SGD deltas (never wire data, so attackers cannot poison it);
+an incoming payload ``t`` is accepted iff ``||t - x_self|| <= z * h``
+once the history is seeded, with a cosine sanity check
+(``cos(t, x_self) >= 0``) covering the one-event warmup window before
+the first own-delta lands. On rejection the endpoint keeps its
+self-model and the exchange is skipped; event order, staleness
+accounting, and the Eq. 10 clock are untouched (screening is
+data-plane only), so the fused/reference schedules stay identical.
 """
 from __future__ import annotations
 
@@ -61,10 +78,13 @@ def parse_attack(spec: str) -> tuple[str, float]:
 
 
 def parse_robust(spec: str) -> tuple[str, float]:
-    """``"none"`` | ``"trimmed:<b>"`` | ``"median"`` -> (mode, b).
+    """``"none"`` | ``"trimmed:<b>"`` | ``"median"`` | ``"screen:<z>"``
+    -> (mode, b).
 
-    ``b`` is the trim count — a fraction of each closed neighborhood
-    when < 1, an absolute count otherwise (0 for none/median)."""
+    ``b`` is the trim count for ``trimmed`` — a fraction of each closed
+    neighborhood when < 1, an absolute count otherwise (0 for
+    none/median) — and the z-threshold for ``screen`` (AD-PSGD
+    accept/reject screening; must be > 0)."""
     if spec == "none":
         return "none", 0.0
     if spec == "median":
@@ -74,6 +94,11 @@ def parse_robust(spec: str) -> tuple[str, float]:
         if b < 0:
             raise ValueError(f"trim count must be >= 0, got {b}")
         return "trimmed", b
+    if spec.startswith("screen:"):
+        z = float(spec.split(":", 1)[1])
+        if z <= 0:
+            raise ValueError(f"screen threshold must be > 0, got {z}")
+        return "screen", z
     raise ValueError(f"unknown robust mode {spec!r}")
 
 
@@ -235,3 +260,53 @@ def trimmed_mean_edges(flat, transmitted, src, dst, *, b: float,
                                   num_segments=w)
     y = trimmed / (cnt - 2 * bi).astype(jnp.float32)[:, None]
     return jnp.where((deg > 0)[:, None], y, flat)
+
+
+# ---------------------------------------------------------------------------
+# AD-PSGD accept/reject screening ("screen:<z>")
+# ---------------------------------------------------------------------------
+
+# EMA smoothing for each worker's own-delta-norm history. A quarter-step
+# EMA tracks the decaying SGD update norms fast enough that z stays a
+# small constant, without a single large early step dominating forever.
+SCREEN_EMA_ALPHA = 0.25
+
+
+def attack_row(row, is_byz, scale, *, kind: str):
+    """Single-row twin of :func:`apply_attack` for the pairwise AD-PSGD
+    exchange: the transmitted copy of one worker's flat row, corrupted
+    iff ``is_byz`` (traced bool scalar)."""
+    if kind == "signflip":
+        bad = -scale * row
+    elif kind == "largenorm":
+        bad = scale * row
+    else:
+        raise ValueError(f"unknown byzantine attack kind {kind!r}")
+    return jnp.where(is_byz, bad, row)
+
+
+def screen_fold(h, nd_own):
+    """Fold one own-delta norm ``nd_own`` into the scalar EMA history
+    ``h``. An unseeded history (``h == 0``) is seeded directly with the
+    first observed norm so the z-test activates after one local step."""
+    a = jnp.float32(SCREEN_EMA_ALPHA)
+    return jnp.where(h > 0, (1 - a) * h + a * nd_own, nd_own)
+
+
+def screen_accept(x_self, t_peer, h, z: float):
+    """Accept/reject verdict for one incoming AD-PSGD payload.
+
+    ``x_self`` is the endpoint's current flat row, ``t_peer`` the flat
+    row that arrived on the wire, ``h`` the endpoint's own-delta-norm
+    EMA. Seeded history (``h > 0``) applies the z-test
+    ``||t_peer - x_self|| <= z * h`` — honest peers sit within a few
+    update norms of any worker they gossip with, while sign-flipped or
+    norm-blown payloads land ~||x|| away, orders of magnitude above the
+    update scale. Before the first own delta seeds ``h`` the cosine
+    fallback ``<t_peer, x_self> >= 0`` still catches direction-inverting
+    attacks (signflip) at the very first event; a largenorm payload can
+    leak through this one-event warmup window, which the z-test then
+    closes. Returns a traced bool scalar."""
+    nd = jnp.linalg.norm(t_peer - x_self)
+    cos_ok = jnp.vdot(t_peer, x_self) >= 0
+    return jnp.where(h > 0, nd <= jnp.float32(z) * h, cos_ok)

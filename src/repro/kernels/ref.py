@@ -45,6 +45,47 @@ def gossip_edges_ref(x, src, dst, w):
     return y.astype(x.dtype)
 
 
+def robust_gossip_ref(x, t, nbr, deg, *, b: float, mode: str):
+    """x, t: [W, C]; nbr: [W, D] int32 padded neighbor table; deg: [W].
+
+    Coordinate-wise robust aggregation over each worker's closed
+    neighborhood — own honest row ``x[i]`` plus the TRANSMITTED rows
+    ``t[j]`` of its neighbors — the jnp oracle for
+    ``kernels/robust_gossip.py``. Padding slots (index >= deg) are
+    masked to +inf so they sink past the sorted window. ``mode`` is
+    ``"trimmed"`` (drop the ``b_i`` extremes per side, average the
+    rest; fractional ``b`` scales with the neighborhood, clamped so the
+    window never empties) or ``"median"`` (average of the two middle
+    order statistics). Workers with no neighbors keep their row."""
+    d_pad = nbr.shape[1]
+    gathered = t.astype(jnp.float32)[nbr]              # [W, D, C]
+    mask = jnp.arange(d_pad)[None, :] < deg[:, None]
+    vals = jnp.concatenate(
+        [x.astype(jnp.float32)[:, None, :],
+         jnp.where(mask[:, :, None], gathered, jnp.inf)], axis=1)
+    cnt = deg + 1
+    sv = jnp.sort(vals, axis=1)
+    pos = jnp.arange(d_pad + 1)[None, :, None]
+    if mode == "trimmed":
+        if b < 1.0:
+            bi = jnp.floor(b * cnt.astype(jnp.float32)).astype(jnp.int32)
+        else:
+            bi = jnp.full_like(cnt, jnp.int32(int(b)))
+        bi = jnp.minimum(bi, (cnt - 1) // 2)[:, None, None]
+        win = (pos >= bi) & (pos < (cnt[:, None, None] - bi))
+        y = jnp.where(win & jnp.isfinite(sv), sv, 0.0)
+        y = y.sum(axis=1) / (cnt[:, None] - 2 * bi[:, :, 0])
+    elif mode == "median":
+        lo = ((cnt - 1) // 2)[:, None, None]
+        hi = (cnt // 2)[:, None, None]
+        vlo = jnp.take_along_axis(sv, lo, axis=1)[:, 0, :]
+        vhi = jnp.take_along_axis(sv, hi, axis=1)[:, 0, :]
+        y = 0.5 * (vlo + vhi)
+    else:
+        raise ValueError(f"unknown robust mode {mode!r}")
+    return jnp.where((deg > 0)[:, None], y, x.astype(jnp.float32))
+
+
 def consensus_dist_ref(x, u):
     """x: [R, C]; u: [K, R, C] -> [K] squared L2 distances."""
     d = u.astype(jnp.float32) - x.astype(jnp.float32)[None]

@@ -1,8 +1,13 @@
 """Byzantine-robust gossip: attack/robust spec parsing, the robust
-aggregation primitives against a numpy oracle, dense-vs-edge-list parity,
-the engine guards, and the end-to-end recovery story (trimmed-mean gossip
-under sign-flip attackers recovers clean-run accuracy while plain uniform
-mixing collapses).
+aggregation primitives against a numpy oracle, the Pallas gather-sort-trim
+kernel against its jnp oracle (ragged and padded neighborhoods included),
+the engine guards and the robust x compress contract, the adversarial
+differential matrix (fused lowering vs the reference engine across
+strategies x churn x gossip representation x topology family), AD-PSGD
+accept/reject screening (``robust="screen:<z>"``) in both the reference
+event loop and the fused scan, and the end-to-end recovery story
+(trimmed-mean gossip under sign-flip attackers recovers clean-run
+accuracy while plain uniform mixing collapses).
 
 Threat model (core/robust.py): attackers run honest local SGD but lie on
 the wire — every transmitted copy of their row is corrupted — so the
@@ -15,13 +20,43 @@ from dataclasses import replace
 import jax.numpy as jnp
 import numpy as np
 import pytest
+# hypothesis is optional (dev dependency): the guard skips only the
+# property tests when it is absent, plain tests still run
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import FedHPConfig
 from repro.core import robust, topology as topo
 from repro.core.experiment import run_algorithm
+from repro.kernels.ref import robust_gossip_ref
+from repro.kernels.robust_gossip import robust_gossip
+from repro.simulation.cluster import ChurnEvent, ChurnSchedule
 
 CFG = FedHPConfig(num_workers=8, rounds=10, tau_init=4, tau_max=20,
                   lr=0.1, batch_size=32, seed=3)
+
+# joins, a crash and a straggler spike inside the differential horizon
+SCHED = ChurnSchedule((
+    ChurnEvent(2, "crash", 6),
+    ChurnEvent(3, "straggle", 2, factor=5.0, duration=3),
+    ChurnEvent(5, "join", 1),
+))
+
+# host-replayed fields must be bit-identical between the reference and
+# fused engines; device metrics go through one fused XLA program so
+# reductions re-associate (same contract as test_fused_equivalence.py)
+EXACT = ("round", "round_time", "waiting_time", "mean_tau", "num_links",
+         "cumulative_time", "staleness")
+DEVICE_TOL = {"accuracy": 1e-5, "loss": 1e-4, "consensus": 1e-4}
+
+
+def _assert_equivalent(h_ref, h_fus, device_tol=DEVICE_TOL):
+    assert len(h_ref.records) == len(h_fus.records)
+    a, b = h_ref.as_arrays(), h_fus.as_arrays()
+    for k in EXACT:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    for k, tol in device_tol.items():
+        np.testing.assert_allclose(a[k], b[k], rtol=tol, atol=tol,
+                                   err_msg=k)
 
 
 # ---------------------------------------------------------------------------
@@ -42,10 +77,16 @@ def test_parse_robust():
     assert robust.parse_robust("median") == ("median", 0.0)
     assert robust.parse_robust("trimmed:2") == ("trimmed", 2.0)
     assert robust.parse_robust("trimmed:0.25") == ("trimmed", 0.25)
+    assert robust.parse_robust("screen:4") == ("screen", 4.0)
+    assert robust.parse_robust("screen:2.5") == ("screen", 2.5)
     with pytest.raises(ValueError):
         robust.parse_robust("krum")
     with pytest.raises(ValueError):
         robust.parse_robust("trimmed:-1")
+    with pytest.raises(ValueError):
+        robust.parse_robust("screen:0")
+    with pytest.raises(ValueError):
+        robust.parse_robust("screen:-3")
 
 
 def test_byzantine_mask_validates():
@@ -191,7 +232,6 @@ def test_robust_no_neighbors_keeps_own_row():
 def test_trimmed_mean_breaks_ties_once_per_side():
     """Duplicated extremes: each peel step removes exactly ONE attaining
     value per side (multiset semantics), not every tied copy."""
-    flat = np.array([[1.0]], np.float32)          # worker 0, 4 neighbors
     n = 5
     adj = np.zeros((n, n), np.int8)
     adj[0, 1:] = adj[1:, 0] = 1
@@ -215,46 +255,161 @@ def test_trimmed_mean_breaks_ties_once_per_side():
 
 
 # ---------------------------------------------------------------------------
-# engine integration: guards, delegation, recovery
+# the Pallas gather-sort-trim kernel vs its jnp oracle
 # ---------------------------------------------------------------------------
 
-def test_engine_guards_raise():
-    byz_cfg = replace(CFG, byzantine=(1,))
-    with pytest.raises(ValueError, match="synchronous-engine only"):
-        run_algorithm("adpsgd", byz_cfg, rounds=3)
+@pytest.mark.parametrize("mode,b", [("trimmed", 1.0), ("trimmed", 0.25),
+                                    ("median", 0.0)],
+                         ids=["trim1", "trim25pct", "median"])
+@pytest.mark.parametrize("spec,n,c", [("erdos:0.5", 6, 37),
+                                      ("ba:2", 13, 64),
+                                      ("ws:4:0.3", 8, 300),
+                                      ("geo:2", 9, 5)],
+                         ids=["erdos", "ba", "ws", "geo"])
+def test_robust_kernel_matches_oracle(spec, n, c, mode, b):
+    """kernels/robust_gossip vs kernels/ref.robust_gossip_ref on ragged
+    graphs whose W / C are NOT tile multiples — the padding rows and the
+    +inf column sinks must be invisible."""
+    rng = np.random.default_rng(n * 1000 + c + len(mode))
+    adj = topo.make_base_topology(n, spec, int(rng.integers(1e6)))
+    flat = rng.normal(size=(n, c)).astype(np.float32)
+    byz = robust.byzantine_mask(tuple(rng.choice(n, 2, replace=False)), n)
+    transmitted = np.where(byz[:, None], -3.0 * flat, flat)
+    nbr, deg = robust.neighbor_table(adj)
+    got = robust_gossip(jnp.asarray(flat), jnp.asarray(transmitted),
+                        jnp.asarray(nbr), jnp.asarray(deg), b=b,
+                        mode=mode, interpret=True)
+    want = robust_gossip_ref(jnp.asarray(flat), jnp.asarray(transmitted),
+                             jnp.asarray(nbr), jnp.asarray(deg), b=b,
+                             mode=mode)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6)
+    # and the oracle itself agrees with the plain-python neighborhood walk
+    np.testing.assert_allclose(np.asarray(want),
+                               _oracle(flat, transmitted, adj, b, mode),
+                               atol=2e-5)
+
+
+def test_robust_kernel_isolated_rows_exact():
+    """Degree-0 workers (and the implicit row padding up to the tile
+    multiple) keep their own row BIT-exactly through the kernel."""
+    rng = np.random.default_rng(11)
+    n, c = 6, 10                     # pads to 8 rows x 256-wide tile
+    adj = np.zeros((n, n), np.int8)
+    adj[0, 1] = adj[1, 0] = 1        # workers 2..5 are isolated
+    flat = rng.normal(size=(n, c)).astype(np.float32)
+    transmitted = -flat
+    nbr, deg = robust.neighbor_table(adj)
+    for mode, b in (("trimmed", 1.0), ("median", 0.0)):
+        got = np.asarray(robust_gossip(
+            jnp.asarray(flat), jnp.asarray(transmitted), jnp.asarray(nbr),
+            jnp.asarray(deg), b=b, mode=mode, interpret=True))
+        np.testing.assert_array_equal(got[2:], flat[2:], err_msg=mode)
+
+
+# ---------------------------------------------------------------------------
+# engine guards + the robust x compress contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fused", [False, True], ids=["ref", "fused"])
+def test_engine_guards_raise(fused):
+    # trimmed/median have no 2-sample pairwise form: AD-PSGD rejects them
+    with pytest.raises(ValueError, match="screen:<z>"):
+        run_algorithm("adpsgd", replace(CFG, robust="trimmed:1"),
+                      rounds=3, fused=fused)
+    with pytest.raises(ValueError, match="screen:<z>"):
+        run_algorithm("adpsgd", replace(CFG, robust="median"),
+                      rounds=3, fused=fused)
+    # screen is the AD-PSGD rule: the synchronous engines reject it
+    with pytest.raises(ValueError, match="accept/reject"):
+        run_algorithm("dpsgd", replace(CFG, robust="screen:4"),
+                      rounds=3, fused=fused)
+
+
+@pytest.mark.parametrize("algo,fused,robust_spec",
+                         [("dpsgd", False, "trimmed:1"),
+                          ("dpsgd", True, "trimmed:1"),
+                          ("adpsgd", False, "screen:4"),
+                          ("adpsgd", True, "screen:4")],
+                         ids=["sync-ref", "sync-fused",
+                              "adpsgd-ref", "adpsgd-fused"])
+def test_robust_compress_rejected_everywhere(algo, fused, robust_spec):
+    """The contract: the Byzantine axis does not compose with compressed
+    gossip (screening/trimming needs the raw payload) — every engine
+    rejects loudly instead of silently screening decoded rows."""
+    cfg = replace(CFG, byzantine=(1,), robust=robust_spec, compress="int8")
     with pytest.raises(ValueError, match="compress"):
-        run_algorithm("dpsgd", replace(byz_cfg, compress="int8"), rounds=3)
-    with pytest.raises(ValueError):
-        run_algorithm("dpsgd", byz_cfg, rounds=3, fused=True,
-                      seeds=jnp.asarray((1, 2)))
+        run_algorithm(algo, cfg, rounds=3, fused=fused)
+    # byzantine alone (no defense) is still a lying wire: same contract
+    cfg = replace(CFG, byzantine=(1,), compress="int8")
+    with pytest.raises(ValueError, match="compress"):
+        run_algorithm(algo, cfg, rounds=3, fused=fused)
 
 
-def test_fused_delegates_to_reference():
-    """cfg.byzantine / cfg.robust route run_dfl_fused through the
-    reference engine — trajectories must be identical, not just close."""
+def test_robust_sharded_rejected():
+    cfg = replace(CFG, sharded=True, byzantine=(1,), robust="trimmed:1")
+    with pytest.raises(ValueError, match="sharded"):
+        run_algorithm("dpsgd", cfg, rounds=3, fused=True)
+
+
+# ---------------------------------------------------------------------------
+# the adversarial differential matrix: fused lowering vs the reference
+# ---------------------------------------------------------------------------
+
+def _pair(algo, cfg, churn=None, rounds=10):
+    h_ref = run_algorithm(algo, cfg, non_iid_p=0.4, rounds=rounds,
+                          churn=churn)
+    h_fus = run_algorithm(algo, cfg, non_iid_p=0.4, rounds=rounds,
+                          churn=churn, fused=True)
+    return h_ref, h_fus
+
+
+def test_fused_robust_matches_reference_smoke():
+    """Fast gate (CI default lane): the lowered trimmed-mean mix — not a
+    delegation — reproduces the reference engine on the small shape."""
     cfg = replace(CFG, byzantine=(2,), robust="trimmed:1")
-    h_ref = run_algorithm("dpsgd", cfg, non_iid_p=0.4, rounds=5)
-    h_fus = run_algorithm("dpsgd", cfg, non_iid_p=0.4, rounds=5,
-                          fused=True)
-    a, b = h_ref.as_arrays(), h_fus.as_arrays()
-    for k in a:
-        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    _assert_equivalent(*_pair("dpsgd", cfg, rounds=5))
 
 
-def test_robust_sparse_engine_matches_dense():
-    """trimmed-mean gossip through the edge-list engine vs the dense
-    engine: host fields exact, device metrics within tolerance."""
-    cfg = replace(CFG, byzantine=(1, 5), robust="trimmed:2")
-    h_d = run_algorithm("dpsgd", cfg, non_iid_p=0.4, rounds=6)
-    h_s = run_algorithm("dpsgd", replace(cfg, gossip="sparse"),
-                        non_iid_p=0.4, rounds=6)
-    a, b = h_d.as_arrays(), h_s.as_arrays()
-    for k in ("round", "round_time", "waiting_time", "mean_tau",
-              "num_links", "cumulative_time"):
-        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
-    for k, tol in (("accuracy", 1e-5), ("loss", 1e-4), ("consensus", 1e-4)):
-        np.testing.assert_allclose(a[k], b[k], rtol=tol, atol=tol,
-                                   err_msg=k)
+def test_fused_byz_plain_matches_reference_smoke():
+    """Lying wire with NO defense, fused vs reference (fast lane)."""
+    cfg = replace(CFG, byzantine=(2,), byzantine_attack="signflip:1.0")
+    _assert_equivalent(*_pair("dpsgd", cfg, rounds=5))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("robust_spec", ["trimmed:1", "median", "none"],
+                         ids=["trimmed", "median", "plain"])
+@pytest.mark.parametrize("algo", ["dpsgd", "ldsgd", "fedhp"])
+def test_fused_robust_matrix_strategies_churn(algo, robust_spec):
+    """strategies x robust mode, all under churn: crashes shrink the
+    trim windows round to round, joins re-enter the neighbor tables."""
+    cfg = replace(CFG, byzantine=(1, 4), robust=robust_spec)
+    _assert_equivalent(*_pair(algo, cfg, churn=SCHED))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("robust_spec", ["trimmed:1", "median"],
+                         ids=["trimmed", "median"])
+def test_fused_robust_matrix_sparse(robust_spec):
+    """Edge-list gossip representation: the reference routes trimming
+    through the segment-op form, the fused scan through the gathered
+    kernel window — same answer."""
+    cfg = replace(CFG, byzantine=(1, 5), robust=robust_spec,
+                  gossip="sparse")
+    _assert_equivalent(*_pair("dpsgd", cfg))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("spec", ["ba:2", "ws:4:0.3", "geo:2"],
+                         ids=["ba", "ws", "geo"])
+def test_fused_robust_matrix_topologies(spec):
+    """Complex-network families: heterogeneous degrees mean per-worker
+    trim counts and ragged padded neighbor tables inside the scan."""
+    cfg = replace(CFG, base_topology=spec, byzantine=(1, 5),
+                  robust="trimmed:1")
+    _assert_equivalent(*_pair("dpsgd", cfg))
+    _assert_equivalent(*_pair("dpsgd", replace(cfg, gossip="sparse")))
 
 
 def test_no_byzantine_config_is_noop():
@@ -268,6 +423,168 @@ def test_no_byzantine_config_is_noop():
     for k in a:
         np.testing.assert_array_equal(a[k], b[k], err_msg=k)
 
+
+# ---------------------------------------------------------------------------
+# AD-PSGD screening (robust="screen:<z>")
+# ---------------------------------------------------------------------------
+
+def test_adpsgd_screen_honest_is_plain():
+    """With every worker honest, screening is invisible: record streams
+    bit-identical to the unscreened run and zero rejections — in BOTH
+    the reference event loop and the fused scan (fast lane)."""
+    scfg = replace(CFG, robust="screen:8.0")
+    for fused in (False, True):
+        h_plain = run_algorithm("adpsgd", CFG, non_iid_p=0.4, rounds=6,
+                                fused=fused)
+        h_scr = run_algorithm("adpsgd", scfg, non_iid_p=0.4, rounds=6,
+                              fused=fused)
+        a, b = h_plain.as_arrays(), h_scr.as_arrays()
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k],
+                                          err_msg=f"{k} fused={fused}")
+        assert h_scr.screen_rejects == [0] * 6
+        assert h_plain.screen_rejects is None
+
+
+def test_adpsgd_screen_fused_matches_reference():
+    """Under attack the fused scan makes the SAME accept/reject decisions
+    as the reference loop: identical per-round reject counts, identical
+    host fields, device metrics within tolerance (fast lane)."""
+    cfg = replace(CFG, robust="screen:8.0", byzantine=(0, 5),
+                  byzantine_attack="signflip:1.0")
+    h_ref, h_fus = _pair("adpsgd", cfg, rounds=8)
+    _assert_equivalent(h_ref, h_fus)
+    assert h_ref.screen_rejects == h_fus.screen_rejects
+    assert sum(h_ref.screen_rejects) > 0
+
+
+@pytest.mark.slow
+def test_adpsgd_byz_no_screen_fused_matches_reference():
+    """The undefended lying wire is its own differential cell."""
+    cfg = replace(CFG, byzantine=(2,), byzantine_attack="signflip:1.0")
+    _assert_equivalent(*_pair("adpsgd", cfg))
+
+
+@pytest.mark.slow
+def test_adpsgd_screen_rejections_grow_with_attack_scale():
+    """End-to-end monotonicity: scaling the sign-flip attack up pushes
+    payloads further from the victim's model, so the screen fires at
+    least as often (widely separated scales keep the coupled-trajectory
+    comparison stable)."""
+    totals = []
+    for s in (0.5, 2.0, 8.0):
+        cfg = replace(CFG, robust="screen:8.0", byzantine=(0, 5),
+                      byzantine_attack=f"signflip:{s}")
+        h = run_algorithm("adpsgd", cfg, non_iid_p=0.4, rounds=8)
+        totals.append(sum(h.screen_rejects))
+    assert totals[0] <= totals[1] <= totals[2], totals
+
+
+@pytest.mark.slow
+def test_adpsgd_screen_recovers_under_signflip():
+    """The AD-PSGD headline: 2/10 sign-flip attackers collapse the plain
+    pairwise exchange, screening recovers >= 85% of clean accuracy (the
+    scenarios benchmark gates the same separation)."""
+    cfg = replace(CFG, num_workers=10)
+    rounds = 20
+    clean = run_algorithm("adpsgd", cfg, non_iid_p=0.4,
+                          rounds=rounds).final_accuracy
+    byz = replace(cfg, byzantine=(3, 7), byzantine_attack="signflip:1.0")
+    plain = run_algorithm("adpsgd", byz, non_iid_p=0.4,
+                          rounds=rounds).final_accuracy
+    scr = run_algorithm("adpsgd", replace(byz, robust="screen:8.0"),
+                        non_iid_p=0.4, rounds=rounds).final_accuracy
+    assert scr >= 0.85 * clean, (scr, clean)
+    assert clean - plain >= 0.05, (clean, plain)
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis; skipped when the dev dep is absent)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(vals=st.lists(st.floats(-100.0, 100.0, allow_nan=False, width=32),
+                     min_size=1, max_size=12),
+       b=st.integers(0, 6))
+def test_trimmed_mean_property_vs_numpy(vals, b):
+    """Arbitrary 1-d multisets through a star graph: the oracle's trimmed
+    mean is numpy sort-and-slice with the trim clamped below half the
+    closed neighborhood."""
+    n = len(vals)
+    adj = np.zeros((n, n), np.int8)
+    adj[0, 1:] = adj[1:, 0] = 1            # worker 0 sees the whole multiset
+    x = np.asarray(vals, np.float32)[:, None]
+    nbr, deg = robust.neighbor_table(adj) if n > 1 else \
+        (np.zeros((1, 1), np.int32), np.zeros(1, np.int32))
+    got = robust_gossip_ref(jnp.asarray(x), jnp.asarray(x),
+                            jnp.asarray(nbr), jnp.asarray(deg),
+                            b=float(b), mode="trimmed")
+    kern = robust_gossip(jnp.asarray(x), jnp.asarray(x),
+                         jnp.asarray(nbr), jnp.asarray(deg),
+                         b=float(b), mode="trimmed", interpret=True)
+    bi = min(b, (n - 1) // 2)
+    want = np.sort(np.asarray(vals))[bi:n - bi].mean() if n > 1 else vals[0]
+    np.testing.assert_allclose(float(got[0, 0]), want, rtol=1e-4,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(got),
+                               atol=1e-5)
+
+
+@settings(max_examples=100, deadline=None)
+@given(data=st.lists(st.floats(-10.0, 10.0, allow_nan=False, width=32),
+                     min_size=8, max_size=8),
+       s1=st.floats(0.1, 4.0), factor=st.floats(1.0, 8.0),
+       h=st.floats(0.01, 10.0), z=st.floats(0.5, 16.0))
+def test_screen_reject_monotone_in_scale_property(data, s1, factor, h, z):
+    """Per-decision monotonicity of the screen under sign-flip: once the
+    EMA is seeded, if the screen accepts the LARGER-scale payload it must
+    accept the smaller one (payloads aligned against the victim drift
+    monotonically away as the scale grows)."""
+    x_self = jnp.asarray(data[:4], jnp.float32)
+    x_peer = jnp.asarray(data[4:], jnp.float32)
+    if float(jnp.vdot(x_peer, x_self)) < 0:
+        x_peer = -x_peer               # relabel: keep the aligned branch
+    s2 = s1 * factor
+    hh = jnp.float32(h)
+    acc_big = bool(robust.screen_accept(x_self, -s2 * x_peer, hh, z))
+    acc_small = bool(robust.screen_accept(x_self, -s1 * x_peer, hh, z))
+    if acc_big:
+        assert acc_small
+
+
+@settings(max_examples=50, deadline=None)
+@given(norms=st.lists(st.floats(0.0, 100.0, allow_nan=False, width=32),
+                      min_size=1, max_size=20))
+def test_screen_fold_stays_in_hull(norms):
+    """The own-delta-norm EMA never leaves the hull of what it saw: an
+    attacker cannot inflate a victim's threshold (it only folds the
+    victim's OWN deltas)."""
+    h = jnp.float32(0.0)
+    for nd in norms:
+        h = robust.screen_fold(h, jnp.float32(nd))
+        assert float(h) <= max(norms) + 1e-4
+        assert float(h) >= 0.0
+
+
+@pytest.mark.slow
+@settings(max_examples=3, deadline=None)
+@given(z=st.floats(8.0, 32.0), seed=st.integers(0, 10))
+def test_screen_accepts_all_honest_property(z, seed):
+    """Any reasonable threshold, any seed: an all-honest fleet is never
+    screened — the run is bit-identical to plain AD-PSGD."""
+    cfg = replace(CFG, num_workers=6, seed=seed)
+    h_plain = run_algorithm("adpsgd", cfg, non_iid_p=0.4, rounds=4)
+    h_scr = run_algorithm("adpsgd", replace(cfg, robust=f"screen:{z}"),
+                          non_iid_p=0.4, rounds=4)
+    a, b = h_plain.as_arrays(), h_scr.as_arrays()
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    assert sum(h_scr.screen_rejects) == 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end recovery (synchronous engines)
+# ---------------------------------------------------------------------------
 
 @pytest.mark.slow
 def test_trimmed_mean_recovers_under_signflip():
@@ -286,6 +603,21 @@ def test_trimmed_mean_recovers_under_signflip():
         non_iid_p=0.4, rounds=rounds).final_accuracy
     assert trimmed >= 0.9 * clean, (trimmed, clean)
     assert clean - plain >= 0.05, (clean, plain)
+
+
+@pytest.mark.slow
+def test_trimmed_mean_fused_recovers_under_signflip():
+    """Same separation through the LOWERED path: the fused scan's kernel
+    mix defends as well as the reference it mirrors."""
+    cfg = replace(CFG, num_workers=10, byzantine_attack="signflip")
+    rounds = 25
+    clean = run_algorithm("dpsgd", replace(cfg, byzantine=()),
+                          non_iid_p=0.4, rounds=rounds,
+                          fused=True).final_accuracy
+    trimmed = run_algorithm(
+        "dpsgd", replace(cfg, byzantine=(3, 7), robust="trimmed:2"),
+        non_iid_p=0.4, rounds=rounds, fused=True).final_accuracy
+    assert trimmed >= 0.9 * clean, (trimmed, clean)
 
 
 @pytest.mark.slow

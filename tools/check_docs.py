@@ -43,6 +43,7 @@ AUDITED_MODULES = [
     "src/repro/kernels/sparsify_block.py",
     "src/repro/kernels/quantize_block.py",
     "src/repro/kernels/gossip_edges.py",
+    "src/repro/kernels/robust_gossip.py",
 ]
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
